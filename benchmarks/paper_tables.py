@@ -1,0 +1,347 @@
+"""Benchmarks reproducing the paper's tables/figures (smoke scale where
+training is involved; exact config arithmetic where the paper reports
+parameter counts).
+
+T4/T5/T6  — parameter-reduction ratios for LLaMA-2-13B/70B, LLaMA-3.1-70B
+            at the paper's pruning ratios (validates P(·) bookkeeping
+            against the paper's own numbers).
+Fig3/4    — convergence ordering: small-LoRA vs LoRAM vs big-LoRA (smoke).
+Fig6      — recovery & alignment ablations (smoke).
+Fig7      — reduction-ratio scaling: LoRAM vs naive pruning ppl (smoke).
+T8        — online-phase memory/step-time: LoRAM-Stru vs LoRA (smoke scale,
+            relative numbers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (LoRAConfig, LoRAMConfig, TrainConfig, get_arch,
+                           get_smoke)
+from repro.core import loram, pruning
+from repro.core.objectives import cross_entropy, sft_loss
+from repro.data import AlignmentCorpus, SFTDataset, batch_iterator
+from repro.models import forward, init_lora, init_params, make_plan
+from repro.optim import adamw_init, adamw_update
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Tables 4–6: parameter-reduction arithmetic on the REAL configs (eval_shape)
+# ---------------------------------------------------------------------------
+
+# (arch, ratio, quantize) → paper's reported reduction
+PAPER_ROWS = [
+    ("llama2-13b", 0.65, False, 2.17),
+    ("llama2-70b", 0.65, False, 2.45),
+    ("llama2-70b", 0.75, False, 3.21),
+    ("llama2-70b", 0.85, False, 4.24),
+    ("llama2-70b", 0.95, False, 7.14),
+    ("llama31-70b", 0.85, False, 3.95),
+    ("llama2-70b", 0.65, True, 9.82),
+    ("llama2-70b", 0.75, True, 12.84),
+    ("llama2-70b", 0.85, True, 16.95),
+    ("llama2-70b", 0.95, True, 28.56),
+    ("llama31-70b", 0.85, True, 15.81),
+]
+
+
+def _tree_param_count(shapes_tree) -> int:
+    from repro.quant.nf4 import QTensor
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            shapes_tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += int(np.prod(leaf.shape))
+        else:
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def _tree_bytes(shapes_tree) -> int:
+    from repro.quant.nf4 import QTensor
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            shapes_tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += int(np.prod(leaf.codes.shape))
+            total += int(np.prod(leaf.scales.shape)) * 2
+        else:
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def bench_reduction_ratios() -> List[Dict]:
+    """Paper's memory headline, on the exact full configs via eval_shape
+    (no allocation).  The paper counts the *transformer-block* parameters
+    that pruning acts on (embeddings/lm_head excluded from the ratio)."""
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    rows = []
+    for arch, ratio, quant, paper in PAPER_ROWS:
+        cfg = get_arch(arch)
+        plan = make_plan(cfg)
+        loram_cfg = LoRAMConfig(method="rand", ratio=ratio, quantize=quant)
+        scores = pruning.random_scores(plan, 0)
+        small_plan, _ = pruning.build_structured_spec(plan, loram_cfg, scores)
+
+        t0 = time.perf_counter()
+        full_shapes = jax.eval_shape(
+            lambda k: init_params(plan, k, jnp.bfloat16), key_struct)
+        small_shapes = jax.eval_shape(
+            lambda k: (loram.quantize_base(init_params(small_plan, k, jnp.bfloat16))
+                       if quant else init_params(small_plan, k, jnp.bfloat16)),
+            key_struct)
+        dt = time.perf_counter() - t0
+
+        # paper Tables 4–6 count TOTAL params (embeddings included; they are
+        # never pruned) — reduction = full bf16 bytes / pruned(+NF4) bytes
+        n_full = _tree_param_count(full_shapes)
+        n_small = _tree_param_count(small_shapes)
+        bytes_full = n_full * 2  # bf16 baseline storage
+        bytes_small = _tree_bytes(small_shapes)
+        ours = bytes_full / bytes_small
+        # the paper's accounting: param-count ratio, NF4 counted as flat ÷4
+        # (no scale overhead, embeddings quantized too)
+        paper_acct = (n_full / n_small) * (4.0 if quant else 1.0)
+        rows.append({
+            "name": f"T4-6/{arch}/r{ratio}{'/nf4' if quant else ''}",
+            "us_per_call": dt * 1e6,
+            "derived": f"storage_reduction={ours:.2f}x paper={paper}x "
+                       f"paper_accounting={paper_acct:.2f}x n_full={n_full} "
+                       f"rel_err={abs(ours - paper) / paper:.2%}",
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 3/4: convergence ordering (smoke scale)
+# ---------------------------------------------------------------------------
+
+def _train_lora(plan, base_params, lora_cfg, steps, ds, eval_batch, lr=5e-3):
+    lora = init_lora(plan, lora_cfg, RNG)
+    opt = adamw_init(lora)
+
+    @jax.jit
+    def step_fn(lora, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda l: sft_loss(plan, base_params, l, batch,
+                               lora_scale=lora_cfg.scale), has_aux=True)(lora)
+        lora, opt = adamw_update(lora, g, opt, lr=lr)
+        return lora, opt, loss
+
+    it = batch_iterator(ds, batch_size=8)
+    for i in range(steps):
+        lora, opt, loss = step_fn(lora, opt, {k: jnp.asarray(v) for k, v in next(it).items()})
+    lg, _ = forward(plan, base_params, eval_batch["tokens"], lora,
+                    lora_scale=lora_cfg.scale)
+    return lora, float(jnp.exp(cross_entropy(lg, eval_batch["labels"])))
+
+
+def _pretrain(plan, params, steps=120, lr=2e-3, seed=100):
+    """Give a base model 'knowledge' (the paper's setting: pre-trained LLMs)
+    — otherwise pruning costs nothing and all variants are within noise."""
+    from repro.core.objectives import alignment_loss
+
+    corpus = AlignmentCorpus(plan.cfg.vocab_size, 32, seed=seed)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(p, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: alignment_loss(plan, pp, batch), has_aux=True)(p)
+        p, opt = adamw_update(p, g, opt, lr=lr)
+        return p, opt, loss
+
+    it = batch_iterator(corpus, batch_size=8)
+    for _ in range(steps):
+        params, opt, loss = step_fn(params, opt,
+                                    {k: jnp.asarray(v) for k, v in next(it).items()})
+    return params
+
+
+def bench_convergence_ordering() -> List[Dict]:
+    """Fig 3/4 claim: LoRAM(13B) perplexity lands between LoRA(7B) and
+    LoRA(13B).  Smoke proxy: PRE-TRAINED big (4-layer) vs small (2-layer)
+    bases, then LoRA/LoRAM SFT; eval on held-out corpus+SFT mix."""
+    big_cfg = dataclasses.replace(get_smoke("llama2-13b"), n_layers=4, d_ff=256)
+    small_cfg = dataclasses.replace(big_cfg, n_layers=2, d_ff=128,
+                                    name="small-sib")
+    big_plan, small_plan = make_plan(big_cfg), make_plan(small_cfg)
+    t0 = time.perf_counter()
+    big_params = _pretrain(big_plan, init_params(big_plan, RNG, jnp.float32))
+    small_params = _pretrain(small_plan,
+                             init_params(small_plan, jax.random.PRNGKey(1),
+                                         jnp.float32))
+    lora_cfg = LoRAConfig(rank=4)
+    ds = SFTDataset(big_cfg.vocab_size, 32)
+    eval_b = {k: jnp.asarray(v) for k, v in
+              SFTDataset(big_cfg.vocab_size, 32, seed=77).batch(0, batch_size=16).items()}
+    steps = 60
+
+    _, ppl_big = _train_lora(big_plan, big_params, lora_cfg, steps, ds, eval_b)
+    _, ppl_small = _train_lora(small_plan, small_params, lora_cfg, steps, ds, eval_b)
+
+    setup = loram.setup(big_plan, big_params,
+                        LoRAMConfig(method="stru", ratio=0.5, keep_first=1,
+                                    keep_last=1),
+                        lora_cfg, RNG)
+    lora_p, ppl_pruned = _train_lora(setup.small_plan, setup.small_params,
+                                     lora_cfg, steps, ds, eval_b)
+    _, merged = loram.finalize(setup, lora_p, big_params)
+    lg, _ = forward(big_plan, merged, eval_b["tokens"])
+    ppl_loram = float(jnp.exp(cross_entropy(lg, eval_b["labels"])))
+    dt = time.perf_counter() - t0
+
+    # paper's qualitative claim: big-LoRA ≤ LoRAM ≤ small-LoRA (with a noise
+    # margin); LoRAM beating big-LoRA is a pass, not a violation
+    ordered = ppl_loram <= ppl_small * 1.02 and ppl_loram <= ppl_big * 1.10
+    return [{
+        "name": "Fig3-4/convergence-ordering",
+        "us_per_call": dt * 1e6,
+        "derived": f"ppl_bigLoRA={ppl_big:.3f} ppl_LoRAM={ppl_loram:.3f} "
+                   f"ppl_smallLoRA={ppl_small:.3f} ppl_prunedOnly={ppl_pruned:.3f} "
+                   f"ordering={'OK' if ordered else 'VIOLATED'}",
+    }]
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: recovery & alignment ablations
+# ---------------------------------------------------------------------------
+
+def bench_ablations() -> List[Dict]:
+    cfg = dataclasses.replace(get_smoke("llama2-13b"), n_layers=4, d_ff=256)
+    plan = make_plan(cfg)
+    params = _pretrain(plan, init_params(plan, RNG, jnp.float32))
+    lora_cfg = LoRAConfig(rank=4)
+    ds = SFTDataset(cfg.vocab_size, 32)
+    eval_b = {k: jnp.asarray(v) for k, v in
+              SFTDataset(cfg.vocab_size, 32, seed=77).batch(0, batch_size=16).items()}
+    corpus = AlignmentCorpus(cfg.vocab_size, 32)
+    t0 = time.perf_counter()
+
+    results = {}
+    for align in (False, True):
+        setup = loram.setup(
+            plan, params,
+            LoRAMConfig(method="stru", ratio=0.5, keep_first=1, keep_last=1,
+                        align=align),
+            lora_cfg, RNG,
+            align_batches=batch_iterator(corpus, batch_size=8) if align else None,
+            align_steps=20 if align else 0, align_lr=5e-5)
+        lora_p, ppl_small = _train_lora(setup.small_plan, setup.small_params,
+                                        lora_cfg, 60, ds, eval_b)
+        # w/ recovery: merged full model
+        _, merged = loram.finalize(setup, lora_p, params)
+        lg, _ = forward(plan, merged, eval_b["tokens"])
+        ppl_rec = float(jnp.exp(cross_entropy(lg, eval_b["labels"])))
+        results[("rec", align)] = ppl_rec
+        results[("norec", align)] = ppl_small   # w/o recovery = pruned model
+    dt = time.perf_counter() - t0
+
+    return [{
+        "name": "Fig6/recovery-alignment-ablation",
+        "us_per_call": dt * 1e6,
+        "derived": (
+            f"ppl(rec,align)={results[('rec', True)]:.3f} "
+            f"ppl(rec,noalign)={results[('rec', False)]:.3f} "
+            f"ppl(norec,align)={results[('norec', True)]:.3f} "
+            f"ppl(norec,noalign)={results[('norec', False)]:.3f}"),
+    }]
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: LoRAM vs naive pruning at increasing reduction ratios
+# ---------------------------------------------------------------------------
+
+def bench_ratio_scaling() -> List[Dict]:
+    cfg = dataclasses.replace(get_smoke("llama2-13b"), n_layers=4, d_ff=512)
+    plan = make_plan(cfg)
+    params = _pretrain(plan, init_params(plan, RNG, jnp.float32))
+    lora_cfg = LoRAConfig(rank=4)
+    ds = SFTDataset(cfg.vocab_size, 32)
+    eval_b = {k: jnp.asarray(v) for k, v in
+              SFTDataset(cfg.vocab_size, 32, seed=77).batch(0, batch_size=16).items()}
+    rows = []
+    for ratio in (0.25, 0.5, 0.75):
+        t0 = time.perf_counter()
+        setup = loram.setup(plan, params,
+                            LoRAMConfig(method="stru", ratio=ratio,
+                                        keep_first=1, keep_last=1),
+                            lora_cfg, RNG)
+        lora_p, ppl_naive = _train_lora(setup.small_plan, setup.small_params,
+                                        lora_cfg, 50, ds, eval_b)
+        _, merged = loram.finalize(setup, lora_p, params)
+        lg, _ = forward(plan, merged, eval_b["tokens"])
+        ppl_loram = float(jnp.exp(cross_entropy(lg, eval_b["labels"])))
+        red = loram.storage_report(params, setup.small_params)["reduction_ratio"]
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"Fig7/ratio-{ratio}",
+            "us_per_call": dt * 1e6,
+            "derived": f"reduction={red:.2f}x ppl_LoRAM={ppl_loram:.3f} "
+                       f"ppl_pruned-only={ppl_naive:.3f}",
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 8: online-phase memory / latency / throughput
+# ---------------------------------------------------------------------------
+
+def bench_online_cost() -> List[Dict]:
+    """Relative cost of one train step: LoRA(full) vs LoRAM-Stru(0.65) vs
+    QLoRAM.  Smoke scale; memory = live param bytes, latency measured."""
+    cfg = dataclasses.replace(get_smoke("llama2-13b"), n_layers=4, d_model=128,
+                              d_ff=512)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    lora_cfg = LoRAConfig(rank=4)
+    ds = SFTDataset(cfg.vocab_size, 64)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0, batch_size=8).items()}
+    rows = []
+    for name, method, ratio, quant in [
+        ("LoRA", "none", 0.0, False),
+        ("LoRAM-Stru", "stru", 0.65, False),
+        ("QLoRAM-Stru", "stru", 0.65, True),
+    ]:
+        setup = loram.setup(plan, params,
+                            LoRAMConfig(method=method, ratio=ratio,
+                                        quantize=quant, keep_first=1,
+                                        keep_last=1),
+                            lora_cfg, RNG)
+        lora = setup.lora0
+        opt = adamw_init(lora)
+
+        @jax.jit
+        def step_fn(lora, opt, batch, _setup_params=setup.small_params,
+                    _plan=setup.small_plan):
+            (loss, _), g = jax.value_and_grad(
+                lambda l: sft_loss(_plan, _setup_params, l, batch,
+                                   lora_scale=lora_cfg.scale),
+                has_aux=True)(lora)
+            lora, opt = adamw_update(lora, g, opt, lr=1e-3)
+            return lora, opt, loss
+
+        lora, opt, _ = step_fn(lora, opt, batch)  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            lora, opt, loss = step_fn(lora, opt, batch)
+        jax.block_until_ready(loss)
+        dt = (time.perf_counter() - t0) / 5
+        from repro.quant.nf4 import param_bytes
+
+        mem = param_bytes(setup.small_params)
+        rows.append({
+            "name": f"T8/{name}",
+            "us_per_call": dt * 1e6,
+            "derived": f"param_bytes={mem} throughput={8 / dt:.2f}samp/s",
+        })
+    return rows

@@ -1,0 +1,33 @@
+"""Regenerate the EXPERIMENTS.md §Roofline markdown table from dryrun.json."""
+import json
+import sys
+
+from repro.configs.registry import ARCHS, SHAPES
+
+
+def main(path="results/dryrun.json", mesh="single"):
+    r = json.load(open(path))
+    print("| arch | shape | compute_s | memory_s | collective_s | bound | "
+          "frac | frac(kernel) | mem GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            v = r.get(f"{arch}|{shape}|{mesh}")
+            if v is None:
+                continue
+            if v.get("status") == "skip":
+                print(f"| {arch} | {shape} | — | — | — | SKIP | — | — | — |")
+                continue
+            if v.get("status") != "ok":
+                print(f"| {arch} | {shape} | — | — | — | ERR | — | — | — |")
+                continue
+            t = v["roofline"]
+            fk = t.get("roofline_fraction_flash", t["roofline_fraction"])
+            print(f"| {arch} | {shape} | {t['compute_s']:.4f} | "
+                  f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                  f"{t['bound']} | {t['roofline_fraction']:.4f} | {fk:.4f} | "
+                  f"{v['memory']['total_per_device_gib']:.2f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

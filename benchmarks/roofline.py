@@ -1,0 +1,120 @@
+"""§Roofline report generator: reads results/dryrun.json and renders the
+per-(arch × shape × mesh) three-term table + MODEL_FLOPS usefulness ratio."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.registry import ARCHS, SHAPES
+
+# 6·N·D with N = active params (MoE: routed top-k + shared + dense residual
+# + attention; dense: all block params + embeddings at the lm_head).
+
+
+def active_params(arch: str, pruned_ratio: float = 0.0) -> float:
+    cfg = ARCHS[arch]
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.family in ("dense", "vlm"):
+        mlp = 3 * d * cfg.d_ff
+    elif cfg.family == "moe":
+        mlp = 3 * d * cfg.moe_d_ff * cfg.top_k
+        mlp += 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+        if cfg.dense_residual:
+            mlp += 3 * d * cfg.d_ff
+        mlp += d * cfg.n_experts  # router
+    elif cfg.family == "ssm":
+        di, N, H = cfg.resolved_d_inner, cfg.ssm_state, cfg.ssm_heads
+        attn = 0
+        mlp = d * (2 * di + 2 * N + H) + di * d
+    elif cfg.family == "hybrid":
+        di, N, H = cfg.resolved_d_inner, cfg.ssm_state, cfg.ssm_heads
+        mamba = d * (2 * di + 2 * N + H) + di * d
+        shared = attn + 3 * d * cfg.d_ff
+        n_sb = L // cfg.shared_attn_period
+        return (L * mamba + n_sb * shared) * (1 - pruned_ratio * 0.8)
+    elif cfg.family == "encdec":
+        mlp = 3 * d * cfg.d_ff
+        enc = cfg.enc_layers * (attn + mlp)
+        dec = L * (2 * attn + mlp)
+        return (enc + dec) * (1 - pruned_ratio * 0.8)
+    else:
+        mlp = 3 * d * cfg.d_ff
+    total = L * (attn + mlp)
+    # structured pruning removes ~ratio of block params (keep-first/last
+    # retain a bit more: ~0.8 effective)
+    return total * (1 - pruned_ratio * 0.8)
+
+
+def model_flops(arch: str, shape: str, kind: str, pruned: bool) -> float:
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    n = active_params(arch, 0.65 if pruned else 0.0)
+    if kind == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * sh["global_batch"]
+
+
+def load(path: str = "results/dryrun.json") -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(results: Dict, *, mesh: str = "single", n_chips: int = 256) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "MODEL_FLOPs/HLO_FLOPs | mem/dev GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            key = f"{arch}|{shape}|{mesh}"
+            r = results.get(key)
+            if r is None:
+                continue
+            if r.get("status") == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — |")
+                continue
+            if r.get("status") != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — |")
+                continue
+            t = r["roofline"]
+            mf = model_flops(arch, shape, r["kind"], r["kind"] == "train")
+            hlo_total = r["hlo"]["flops"] * r["n_devices"]
+            useful = mf / hlo_total if hlo_total else 0.0
+            lines.append(
+                f"| {arch} | {shape} | {t['compute_s']:.4f} | "
+                f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                f"{t['bound']} | {useful:.2f} | "
+                f"{r['memory']['total_per_device_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def bench_roofline_rows() -> List[Dict]:
+    """benchmarks/run.py rows: one per available dry-run cell."""
+    if not os.path.exists("results/dryrun.json"):
+        return [{"name": "roofline/missing", "us_per_call": 0,
+                 "derived": "run launch/dryrun.py first"}]
+    results = load()
+    rows = []
+    for key, r in sorted(results.items()):
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        rows.append({
+            "name": f"roofline/{key}",
+            "us_per_call": dom * 1e6,
+            "derived": f"bound={t['bound']} compute={t['compute_s']:.4f}s "
+                       f"memory={t['memory_s']:.4f}s "
+                       f"collective={t['collective_s']:.4f}s "
+                       f"frac={t['roofline_fraction']:.3f}",
+        })
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark harness — one section per paper table/figure + roofline rows.
+
+Prints ``name,us_per_call,derived`` CSV.  Slow (training) benches run at
+smoke scale; config-arithmetic benches use the real full configs through
+``jax.eval_shape``.
+
+  PYTHONPATH=src python -m benchmarks.run [--only PREFIX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name starts with this")
+    args = ap.parse_args()
+
+    from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.paper_tables import (bench_ablations,
+                                         bench_convergence_ordering,
+                                         bench_online_cost,
+                                         bench_ratio_scaling,
+                                         bench_reduction_ratios)
+    from benchmarks.roofline import bench_roofline_rows
+
+    sections = [
+        ("T4-6", bench_reduction_ratios),
+        ("T8", bench_online_cost),
+        ("Fig3-4", bench_convergence_ordering),
+        ("Fig6", bench_ablations),
+        ("Fig7", bench_ratio_scaling),
+        ("kernel", bench_kernels),
+        ("roofline", bench_roofline_rows),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for prefix, fn in sections:
+        if args.only and not prefix.startswith(args.only):
+            continue
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{prefix}/FAILED,0,\"{e!r}\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

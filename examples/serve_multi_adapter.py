@@ -1,0 +1,52 @@
+"""Multi-adapter serving: one FULL base model, several LoRAM-trained adapters
+hot-swapped per request batch (unmerged mode) — the deployment pattern when a
+publisher ships one base + many task adapters trained cheaply via LoRAM.
+
+  PYTHONPATH=src python examples/serve_multi_adapter.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, TrainConfig, get_smoke
+from repro.core import loram
+from repro.data import SFTDataset, batch_iterator
+from repro.models import init_params, make_plan
+from repro.runtime.trainer import Trainer
+from repro.serving import ServeEngine
+
+rng = jax.random.PRNGKey(0)
+cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+plan = make_plan(cfg)
+params = init_params(plan, rng, jnp.float32)
+lora_cfg = LoRAConfig(rank=4)
+
+# train two task adapters on the pruned model (different data seeds = "tasks")
+adapters = {}
+for task, seed in [("math", 11), ("code", 22)]:
+    setup = loram.setup(plan, params,
+                        LoRAMConfig(method="stru", ratio=0.5, keep_first=0,
+                                    keep_last=0),
+                        lora_cfg, rng)
+    tc = TrainConfig(global_batch=8, seq_len=32, learning_rate=5e-3,
+                     total_steps=25, warmup_steps=2, remat=False)
+    ds = SFTDataset(cfg.vocab_size, tc.seq_len, seed=seed)
+    trainer = Trainer(setup.small_plan, setup.small_params, setup.lora0, tc,
+                      lora_cfg, n_micro=1)
+    state = trainer.train(batch_iterator(ds, batch_size=8), log_every=0)
+    lora_full, _ = loram.finalize(setup, state.lora, params)
+    adapters[task] = lora_full
+    print(f"[multi-adapter] trained '{task}' adapter "
+          f"({sum(x.size for x in jax.tree.leaves(lora_full)):,} params)")
+
+# serve the SAME full base with each adapter, unmerged
+prompts = np.random.default_rng(0).integers(2, cfg.vocab_size, (2, 8)).astype(np.int32)
+for task, lora in adapters.items():
+    eng = ServeEngine(plan, params, ServeConfig(max_seq_len=64,
+                                                merge_adapters=False),
+                      lora=lora, lora_scale=lora_cfg.scale)
+    res = eng.generate(prompts, max_new_tokens=8)
+    print(f"[multi-adapter] task={task:5s} tokens={res.tokens[0][:8]}")
+print("[multi-adapter] OK")

@@ -1,0 +1,190 @@
+"""Fault-tolerant checkpointing.
+
+Design points (per DESIGN.md §5):
+
+* **Atomicity** — writes land in ``step_XXXXXXXX.tmp-<nonce>`` and are
+  ``os.replace``d into place only after the manifest (with content hashes)
+  is fsync'd; a crash mid-write can never produce a directory that
+  ``restore_latest`` would accept.
+* **Validation** — every tensor file carries a crc32 in the manifest;
+  corrupt/partial checkpoints are skipped (warn) and the next-newest valid
+  one is used.
+* **Async** — ``save_async`` snapshots to host memory synchronously (cheap:
+  LoRA + opt state are MBs) and does file I/O on a daemon thread so the
+  train loop never blocks on disk.
+* **Retention** — keep the newest ``keep`` checkpoints plus every
+  ``keep_period``-th step forever.
+* **Multi-host** — each process writes only its addressable shard under
+  ``proc_<k>``; restore reassembles per-process. On this single-process CPU
+  container that collapses to proc_0, but the layout is the production one.
+
+Tensors are stored with ``numpy.savez`` (no pickle), pytree structure in a
+JSON manifest with dtype/shape — restartable across JAX versions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing tensor {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, keep_period: int = 0,
+                 process_index: Optional[int] = None):
+        self.dir = directory
+        self.keep = keep
+        self.keep_period = keep_period
+        self.proc = process_index if process_index is not None else jax.process_index()
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # device→host now
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self.wait()  # at most one outstanding write
+            self._thread = threading.Thread(
+                target=self._write_guard, args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.save(step, tree, blocking=False)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write_guard(self, step, host_tree):
+        try:
+            self._write(step, host_tree)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, host_tree) -> None:
+        final = self._step_dir(step)
+        tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=self.dir)
+        try:
+            flat = _flatten(host_tree)
+            proc_dir = os.path.join(tmp, f"proc_{self.proc}")
+            os.makedirs(proc_dir, exist_ok=True)
+            tensor_path = os.path.join(proc_dir, "tensors.npz")
+            np.savez(tensor_path, **{k: v for k, v in flat.items()})
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "process": self.proc,
+                "tensors": {
+                    k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                        "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes())}
+                    for k, v in flat.items()
+                },
+            }
+            mpath = os.path.join(proc_dir, "manifest.json")
+            with open(mpath, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d{8})", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _valid(self, step: int) -> bool:
+        proc_dir = os.path.join(self._step_dir(step), f"proc_{self.proc}")
+        mpath = os.path.join(proc_dir, "manifest.json")
+        tpath = os.path.join(proc_dir, "tensors.npz")
+        if not (os.path.exists(mpath) and os.path.exists(tpath)):
+            return False
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+            with np.load(tpath) as z:
+                for k, meta in manifest["tensors"].items():
+                    v = z[k]
+                    if zlib.crc32(np.ascontiguousarray(v).tobytes()) != meta["crc32"]:
+                        return False
+            return True
+        except Exception:
+            return False
+
+    def restore(self, step: int, template: Any) -> Any:
+        proc_dir = os.path.join(self._step_dir(step), f"proc_{self.proc}")
+        with np.load(os.path.join(proc_dir, "tensors.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_like(template, flat)
+
+    def restore_latest(self, template: Any) -> Tuple[Optional[int], Any]:
+        """Newest *valid* checkpoint, skipping corrupt ones.  Returns
+        (step, tree) or (None, template)."""
+        for step in reversed(self.steps()):
+            if self._valid(step):
+                return step, self.restore(step, template)
+            print(f"[ckpt] step {step} failed validation; skipping")
+        return None, template
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = self.steps()
+        protected = set(steps[-self.keep:]) if self.keep else set(steps)
+        if self.keep_period:
+            protected |= {s for s in steps if s % self.keep_period == 0}
+        for s in steps:
+            if s not in protected:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)

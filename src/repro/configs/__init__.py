@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    BlockSpec,
+    LoRAConfig,
+    LoRAMConfig,
+    ModelConfig,
+    ServeConfig,
+    Stage,
+    StageDims,
+    TrainConfig,
+    round_to,
+)
+from repro.configs.registry import ARCHS, SMOKE, get_arch, get_smoke  # noqa: F401

@@ -1,0 +1,299 @@
+"""Config system for the LoRAM framework.
+
+Every model in the zoo is described by a :class:`ModelConfig` which expands
+into a list of :class:`Stage`s.  A stage is ``n_rep`` repetitions of a
+*superblock* (an ordered tuple of :class:`BlockSpec`s) executed under a single
+``lax.scan`` — this keeps HLO size O(superblock) regardless of depth, which is
+what makes 60-layer × 512-device AOT compiles tractable and keeps compile
+times bounded on real clusters.
+
+Heterogeneous architectures map naturally:
+
+* gemma3   → one stage, superblock = 5×local-attn + 1×global-attn
+* zamba2   → one stage, superblock = k×mamba + 1×shared-attn (shared params)
+* whisper  → encoder stage + decoder stage
+* LoRAM-Stru with keep-first/last → three stages with different pruned dims
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block-level specs
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by repro.models.model:
+#   "attn"        causal self-attention (+ optional sliding window)
+#   "enc_attn"    bidirectional self-attention (encoder)
+#   "cross_attn"  causal self-attn is NOT included; attends to encoder output
+#   "mlp"         SwiGLU MLP
+#   "moe"         mixture-of-experts MLP (optional shared experts / dense residual)
+#   "mamba"       Mamba2 SSD mixer
+ALL_KINDS = ("attn", "enc_attn", "cross_attn", "mlp", "moe", "mamba")
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One residual sub-block inside a superblock."""
+
+    kind: str
+    window: int = 0          # >0 → sliding-window attention (gemma3 local)
+    shared: bool = False     # params shared across superblock repetitions (zamba2)
+    name: str = ""           # unique name within the superblock
+
+    def __post_init__(self):
+        assert self.kind in ALL_KINDS, self.kind
+
+
+@dataclass(frozen=True)
+class StageDims:
+    """Width parameters for one stage.  LoRAM structured pruning produces
+    stages whose dims are *smaller* than the parent config's."""
+
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    dense_residual_d_ff: int = 0
+    # SSM (Mamba2)
+    d_inner: int = 0
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+
+    def validate(self):
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0 or self.n_heads == 0
+        if self.d_inner:
+            assert self.d_inner % self.ssm_head_dim == 0
+
+
+@dataclass(frozen=True)
+class Stage:
+    """``n_rep`` scanned repetitions of ``superblock`` at width ``dims``."""
+
+    superblock: Tuple[BlockSpec, ...]
+    n_rep: int
+    dims: StageDims
+    name: str = "stage"
+
+    @property
+    def n_layers(self) -> int:
+        # "layer" = one attention-or-mixer + mlp pair, for bookkeeping only.
+        mixers = sum(1 for b in self.superblock if b.kind in ("attn", "enc_attn", "mamba"))
+        return self.n_rep * max(mixers, 1)
+
+
+# ---------------------------------------------------------------------------
+# Model-level config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // n_heads
+
+    # attention pattern
+    local_global_ratio: int = 0      # gemma3: 5 → 5 local per 1 global
+    window: int = 1024
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    dense_residual: bool = False     # arctic: dense FFN residual alongside MoE
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    d_inner: int = 0                 # 0 → 2*d_model when SSM present
+    ssm_head_dim: int = 64
+    shared_attn_period: int = 0      # zamba2: one shared attn block per k mamba layers
+
+    # encoder-decoder / multimodal frontend
+    enc_layers: int = 0
+    enc_len: int = 0                 # encoder sequence length (whisper frames)
+    n_patches: int = 0               # VLM: patch embeddings prepended to text
+
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    max_seq_len: int = 524_288
+
+    # which cells apply (spec: skip long_500k for pure full-attention archs,
+    # skip decode for encoder-only — none here are encoder-only)
+    supports_long_context: bool = False
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def resolved_d_inner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.resolved_d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def base_dims(self) -> StageDims:
+        return StageDims(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.resolved_head_dim,
+            d_ff=self.d_ff,
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            moe_d_ff=self.moe_d_ff or self.d_ff,
+            n_shared_experts=self.n_shared_experts,
+            shared_d_ff=(self.moe_d_ff or self.d_ff) * max(self.n_shared_experts, 0),
+            dense_residual_d_ff=self.d_ff if self.dense_residual else 0,
+            d_inner=self.resolved_d_inner if self.ssm_state else 0,
+            ssm_state=self.ssm_state,
+            ssm_heads=self.ssm_heads,
+            ssm_head_dim=self.ssm_head_dim,
+        )
+
+    # ---- stage expansion ----------------------------------------------------
+    def stages(self) -> Tuple[Stage, ...]:
+        """Expand the config into scanned stages (decoder side for encdec)."""
+        dims = self.base_dims()
+        if self.family in ("dense", "vlm"):
+            if self.local_global_ratio:
+                k = self.local_global_ratio
+                sb = tuple(
+                    b
+                    for i in range(k)
+                    for b in (BlockSpec("attn", window=self.window, name=f"local{i}"),
+                              BlockSpec("mlp", name=f"mlp_l{i}"))
+                ) + (BlockSpec("attn", name="global"), BlockSpec("mlp", name="mlp_g"))
+                assert self.n_layers % (k + 1) == 0, (self.name, self.n_layers, k)
+                return (Stage(sb, self.n_layers // (k + 1), dims, "lg"),)
+            sb = (BlockSpec("attn", name="attn"), BlockSpec("mlp", name="mlp"))
+            return (Stage(sb, self.n_layers, dims, "dense"),)
+        if self.family == "moe":
+            sb = (BlockSpec("attn", name="attn"), BlockSpec("moe", name="moe"))
+            return (Stage(sb, self.n_layers, dims, "moe"),)
+        if self.family == "ssm":
+            sb = (BlockSpec("mamba", name="mamba"),)
+            return (Stage(sb, self.n_layers, dims, "ssm"),)
+        if self.family == "hybrid":
+            p = self.shared_attn_period
+            assert p and self.n_layers % p == 0
+            sb = tuple(BlockSpec("mamba", name=f"mamba{i}") for i in range(p)) + (
+                BlockSpec("attn", shared=True, name="shared_attn"),
+                BlockSpec("mlp", shared=True, name="shared_mlp"),
+            )
+            return (Stage(sb, self.n_layers // p, dims, "hybrid"),)
+        if self.family == "encdec":
+            dec = (
+                BlockSpec("attn", name="self_attn"),
+                BlockSpec("cross_attn", name="cross_attn"),
+                BlockSpec("mlp", name="mlp"),
+            )
+            return (Stage(dec, self.n_layers, dims, "dec"),)
+        raise ValueError(self.family)
+
+    def encoder_stages(self) -> Tuple[Stage, ...]:
+        if not self.enc_layers:
+            return ()
+        dims = self.base_dims()
+        sb = (BlockSpec("enc_attn", name="enc_attn"), BlockSpec("mlp", name="enc_mlp"))
+        return (Stage(sb, self.enc_layers, dims, "enc"),)
+
+
+# ---------------------------------------------------------------------------
+# LoRA / LoRAM configs
+# ---------------------------------------------------------------------------
+
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "lm_head")
+
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+    dtype: str = "float32"           # adapters train in fp32 (paper: BF16 mixed)
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclass(frozen=True)
+class LoRAMConfig:
+    """The paper's technique knobs.
+
+    method:   none | rand | stru | semi | unst
+    ratio:    fraction of prunable units removed (paper: 0.65–0.95)
+    quantize: NF4-quantize the (pruned) frozen base → QLoRAM
+    align:    run continual-pretraining alignment before SFT
+    keep_first/keep_last: LLM-Pruner-style unpruned boundary layers
+    """
+
+    method: str = "none"
+    ratio: float = 0.0
+    quantize: bool = False
+    align: bool = True
+    keep_first: int = 4
+    keep_last: int = 2
+    semi_n: int = 4                  # 4:8 semi-structured pattern
+    semi_m: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.method in ("none", "rand", "stru", "semi", "unst")
+        assert 0.0 <= self.ratio < 1.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 128
+    seq_len: int = 512
+    microbatch: int = 0              # 0 → one microbatch per data shard step
+    learning_rate: float = 1e-3
+    warmup_steps: int = 20
+    total_steps: int = 400
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    remat: bool = True
+    seq_shard_activations: bool = True
+    param_dtype: str = "bfloat16"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 1
+    max_seq_len: int = 4096
+    merge_adapters: bool = True      # paper merges W0 + B^R A^R
+    kv_cache_dtype: str = "bfloat16"
+
+
+def round_to(x: int, mult: int) -> int:
+    """Round down to a multiple, never below one multiple (MXU lane alignment)."""
+    return max(mult, (x // mult) * mult)
+
+
+def replace_cfg(cfg, **kw):
+    return replace(cfg, **kw)

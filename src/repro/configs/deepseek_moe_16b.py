@@ -1,0 +1,6 @@
+"""--arch deepseek-moe-16b : exact assigned config (see registry.py for provenance)."""
+from repro.configs.registry import ARCHS, SMOKE
+
+ARCH_ID = "deepseek-moe-16b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE_CONFIG = SMOKE.get(ARCH_ID)

@@ -1,0 +1,6 @@
+"""--arch llama2-70b : exact assigned config (see registry.py for provenance)."""
+from repro.configs.registry import ARCHS, SMOKE
+
+ARCH_ID = "llama2-70b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE_CONFIG = SMOKE.get(ARCH_ID)

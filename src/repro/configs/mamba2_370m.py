@@ -1,0 +1,6 @@
+"""--arch mamba2-370m : exact assigned config (see registry.py for provenance)."""
+from repro.configs.registry import ARCHS, SMOKE
+
+ARCH_ID = "mamba2-370m"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE_CONFIG = SMOKE.get(ARCH_ID)

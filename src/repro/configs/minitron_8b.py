@@ -1,0 +1,6 @@
+"""--arch minitron-8b : exact assigned config (see registry.py for provenance)."""
+from repro.configs.registry import ARCHS, SMOKE
+
+ARCH_ID = "minitron-8b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE_CONFIG = SMOKE.get(ARCH_ID)

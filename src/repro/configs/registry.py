@@ -1,0 +1,180 @@
+"""Assigned architectures (exact configs from the task spec) + smoke variants.
+
+Every entry is selectable via ``--arch <id>`` in the launchers.  FULL configs
+are only ever touched through ``jax.eval_shape`` / AOT lowering (no
+allocation); SMOKE configs are runnable-on-CPU reductions of the same family
+used by tests.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Full assigned configs — [source; verified-tier] in the task spec
+# ---------------------------------------------------------------------------
+
+ARCHS = {
+    # enc-dec, conv frontend stubbed (precomputed frame embeddings)
+    "whisper-tiny": ModelConfig(
+        name="whisper-tiny", family="encdec", n_layers=4, d_model=384,
+        n_heads=6, n_kv_heads=6, d_ff=1536, vocab_size=51865,
+        enc_layers=4, enc_len=1500, tie_embeddings=True,
+    ),
+    "yi-34b": ModelConfig(
+        name="yi-34b", family="dense", n_layers=60, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_ff=20480, vocab_size=64000,
+        rope_theta=5_000_000.0,
+    ),
+    # 5:1 local:global, 128k context, giant vocab
+    "gemma3-12b": ModelConfig(
+        name="gemma3-12b", family="dense", n_layers=48, d_model=3840,
+        n_heads=16, n_kv_heads=8, head_dim=256, d_ff=15360, vocab_size=262144,
+        local_global_ratio=5, window=1024, rope_theta=1_000_000.0,
+        tie_embeddings=True, supports_long_context=True,
+    ),
+    "minitron-8b": ModelConfig(
+        name="minitron-8b", family="dense", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=16384, vocab_size=256000,
+    ),
+    # MQA (kv=1) code model
+    "granite-20b": ModelConfig(
+        name="granite-20b", family="dense", n_layers=52, d_model=6144,
+        n_heads=48, n_kv_heads=1, d_ff=24576, vocab_size=49152,
+    ),
+    # 128 experts top-2 + dense residual
+    "arctic-480b": ModelConfig(
+        name="arctic-480b", family="moe", n_layers=35, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_ff=4864, vocab_size=32000,
+        n_experts=128, top_k=2, moe_d_ff=4864, dense_residual=True,
+    ),
+    # 2 shared + 64 routed top-6, fine-grained
+    "deepseek-moe-16b": ModelConfig(
+        name="deepseek-moe-16b", family="moe", n_layers=28, d_model=2048,
+        n_heads=16, n_kv_heads=16, d_ff=1408, vocab_size=102400,
+        n_experts=64, top_k=6, moe_d_ff=1408, n_shared_experts=2,
+    ),
+    # Mamba2 + shared attention blocks
+    "zamba2-2.7b": ModelConfig(
+        name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+        n_heads=32, n_kv_heads=32, head_dim=80, d_ff=10240, vocab_size=32000,
+        ssm_state=64, d_inner=5120, ssm_head_dim=64, shared_attn_period=6,
+        supports_long_context=True,
+    ),
+    # InternViT frontend stubbed; InternLM2 backbone
+    "internvl2-26b": ModelConfig(
+        name="internvl2-26b", family="vlm", n_layers=48, d_model=6144,
+        n_heads=48, n_kv_heads=8, d_ff=16384, vocab_size=92553,
+        n_patches=256,
+    ),
+    # attn-free SSD
+    "mamba2-370m": ModelConfig(
+        name="mamba2-370m", family="ssm", n_layers=48, d_model=1024,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=50280,
+        ssm_state=128, d_inner=2048, ssm_head_dim=64, tie_embeddings=True,
+        supports_long_context=True,
+    ),
+    # ---- the paper's own models (LoRAM experiments) --------------------------
+    "llama2-13b": ModelConfig(
+        name="llama2-13b", family="dense", n_layers=40, d_model=5120,
+        n_heads=40, n_kv_heads=40, d_ff=13824, vocab_size=32000,
+    ),
+    "llama2-70b": ModelConfig(
+        name="llama2-70b", family="dense", n_layers=80, d_model=8192,
+        n_heads=64, n_kv_heads=8, d_ff=28672, vocab_size=32000,
+    ),
+    "llama31-70b": ModelConfig(
+        name="llama31-70b", family="dense", n_layers=80, d_model=8192,
+        n_heads=64, n_kv_heads=8, d_ff=28672, vocab_size=128256,
+        rope_theta=500_000.0,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Smoke (reduced) configs — same family, CPU-runnable
+# ---------------------------------------------------------------------------
+
+def _smoke(cfg: ModelConfig, **kw) -> ModelConfig:
+    return replace(cfg, **kw)
+
+
+SMOKE = {
+    "whisper-tiny": _smoke(
+        ARCHS["whisper-tiny"], name="whisper-tiny-smoke", n_layers=2,
+        enc_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, enc_len=16),
+    "yi-34b": _smoke(
+        ARCHS["yi-34b"], name="yi-34b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256),
+    "gemma3-12b": _smoke(
+        ARCHS["gemma3-12b"], name="gemma3-12b-smoke", n_layers=6, d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256,
+        local_global_ratio=2, window=8),
+    "minitron-8b": _smoke(
+        ARCHS["minitron-8b"], name="minitron-8b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256),
+    "granite-20b": _smoke(
+        ARCHS["granite-20b"], name="granite-20b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=1, head_dim=16, d_ff=128, vocab_size=256),
+    # capacity_factor=8 in smoke configs: capacity-based token dropping makes
+    # MoE outputs depend on the co-batched token count, which would break the
+    # prefill-vs-forward consistency tests at tiny batch sizes.
+    "arctic-480b": _smoke(
+        ARCHS["arctic-480b"], name="arctic-480b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=96, vocab_size=256,
+        n_experts=8, top_k=2, moe_d_ff=64, capacity_factor=8.0),
+    "deepseek-moe-16b": _smoke(
+        ARCHS["deepseek-moe-16b"], name="deepseek-moe-16b-smoke", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=96,
+        vocab_size=256, n_experts=8, top_k=3, moe_d_ff=48, n_shared_experts=2,
+        capacity_factor=8.0),
+    "zamba2-2.7b": _smoke(
+        ARCHS["zamba2-2.7b"], name="zamba2-2.7b-smoke", n_layers=6, d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256,
+        ssm_state=16, d_inner=128, ssm_head_dim=32, shared_attn_period=3),
+    "internvl2-26b": _smoke(
+        ARCHS["internvl2-26b"], name="internvl2-26b-smoke", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, n_patches=8),
+    "mamba2-370m": _smoke(
+        ARCHS["mamba2-370m"], name="mamba2-370m-smoke", n_layers=2,
+        d_model=64, d_ff=0, vocab_size=256, ssm_state=16, d_inner=128,
+        ssm_head_dim=32),
+    "llama2-13b": _smoke(
+        ARCHS["llama2-13b"], name="llama2-13b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256),
+    "llama2-70b": _smoke(
+        ARCHS["llama2-70b"], name="llama2-70b-smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256),
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return SMOKE[name]
+
+
+# ---------------------------------------------------------------------------
+# Shape cells (the assigned input-shape set; applies to every LM arch)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# Sub-quadratic archs eligible for long_500k (see DESIGN.md shape-cell skips)
+LONG_CONTEXT_OK = tuple(n for n, c in ARCHS.items() if c.supports_long_context)
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "full-attention arch: 500k decode requires sub-quadratic attention"
+    return True, ""

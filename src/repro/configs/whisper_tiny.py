@@ -1,0 +1,6 @@
+"""--arch whisper-tiny : exact assigned config (see registry.py for provenance)."""
+from repro.configs.registry import ARCHS, SMOKE
+
+ARCH_ID = "whisper-tiny"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE_CONFIG = SMOKE.get(ARCH_ID)

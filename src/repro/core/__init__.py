@@ -1,0 +1,1 @@
+from repro.core import alignment, loram, objectives, pruning, recovery  # noqa: F401

@@ -1,0 +1,48 @@
+"""Pruned full-rank weight alignment (paper §2.2, Eq. 8).
+
+One-shot offline continual pre-training of the pruned model on a small
+general corpus, closing the knowledge gap between W₀ᴾ (used for training)
+and W₀ (used for inference).  In the paper this is ~105M tokens / ≤1600
+steps executed by the model publisher; here it is a function over the same
+Trainer substrate with *all base params trainable* (unlike SFT, which trains
+only the adapters).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import alignment_loss
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def align(
+    plan, params, batches: Iterator, *, steps: int, learning_rate: float = 1e-5,
+    weight_decay: float = 0.0, grad_clip: float = 1.0, log_every: int = 10,
+    callback: Callable | None = None,
+):
+    """Returns (aligned_params, losses).  Pure-JAX AdamW over the full pruned
+    base.  Deliberately simple: alignment is an offline publisher-side step,
+    not part of the distributed training hot path."""
+    opt_state = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: alignment_loss(plan, p, batch), has_aux=True)(params)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr=learning_rate, wd=weight_decay,
+            clip=grad_clip)
+        return params, opt_state, loss
+
+    losses = []
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+        if callback and i % log_every == 0:
+            callback(i, float(loss))
+    return params, losses

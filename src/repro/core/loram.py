@@ -1,0 +1,131 @@
+"""LoRAM end-to-end pipeline (paper Algorithm 1).
+
+Offline (publisher):   W₀ →P(·)→ W₀ᴾ →L_A→ W₀ᴾ'ᴬ →Q(·)→ W₀ᴾ'ᴬ'Q
+Online  (user, train): W_Δ →P(·)→ W_Δᴾ →L_SFT→ W_Δᴾ*
+Online  (user, infer): W_Δᴾ* →R(·)→ W_Δᴿ*;  serve with W₀ + Bᴿ*Aᴿ*
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LoRAConfig, LoRAMConfig
+from repro.core import alignment as alignment_mod
+from repro.core import pruning, recovery
+from repro.models.model import Plan, init_lora, make_plan
+from repro.quant import nf4
+
+
+@dataclass
+class LoRAMSetup:
+    """Everything the online training stage needs."""
+
+    full_plan: Plan
+    small_plan: Plan
+    small_params: Any          # frozen base (pruned [, aligned] [, NF4])
+    lora0: Any                 # adapter init (trained on the small plan)
+    spec: pruning.PruneSpec
+    lora_cfg: LoRAConfig
+    loram_cfg: LoRAMConfig
+
+    @property
+    def masks(self):
+        return self.spec.masks   # None for structured variants
+
+    def train_masks(self):
+        """Masks tree for the forward pass (non-structured only).  We bake
+        masks into the frozen base at setup (apply_masks_to_params), so the
+        per-step forward needn't re-mask — return None."""
+        return None
+
+
+def setup(
+    full_plan: Plan,
+    full_params,
+    loram_cfg: LoRAMConfig,
+    lora_cfg: LoRAConfig,
+    rng,
+    *,
+    scores: Optional[Dict] = None,
+    align_batches: Optional[Iterator] = None,
+    align_steps: int = 0,
+    align_lr: float = 1e-5,
+) -> LoRAMSetup:
+    """Offline stages: prune → (align) → (quantize) → adapter init."""
+    small_plan, small_params, spec = pruning.prune(
+        full_plan, full_params, loram_cfg, scores=scores)
+
+    if loram_cfg.align and align_batches is not None and align_steps > 0:
+        small_params, _ = alignment_mod.align(
+            small_plan, small_params, align_batches, steps=align_steps,
+            learning_rate=align_lr)
+
+    if loram_cfg.quantize:
+        small_params = quantize_base(small_params)
+
+    lora0 = init_lora(small_plan, lora_cfg, rng)
+    return LoRAMSetup(full_plan, small_plan, small_params, lora0, spec,
+                      lora_cfg, loram_cfg)
+
+
+def quantize_base(params, block: int = nf4.DEFAULT_BLOCK):
+    """NF4-quantize the frozen base: all stacked/shared 2-D-per-layer mats.
+    Norms, embeddings and SSM scalars stay in bf16 (QLoRA keeps sensitive
+    tensors high-precision)."""
+
+    def visit_block(bp: dict) -> dict:
+        out = {}
+        for name, w in bp.items():
+            if name in ("ln", "out_norm", "dt_bias", "a_log", "d_skip", "conv_w",
+                        "router"):
+                out[name] = w
+            elif (isinstance(w, jax.Array) and w.ndim >= 3
+                  and w.shape[-2] % block == 0 and w.shape[-2] >= block):
+                out[name] = nf4.quantize_stacked(w, block=block)
+            elif isinstance(w, jax.Array) and w.ndim == 2 and w.shape[0] % block == 0 and w.size >= 4096:
+                out[name] = nf4.quantize(w, block=block)
+            else:
+                out[name] = w
+        return out
+
+    out = dict(params)
+    for key in ("stages", "enc_stages"):
+        if key not in params:
+            continue
+        sec = {}
+        for stn, st in params[key].items():
+            sec[stn] = {
+                "stacked": {bn: visit_block(bp) for bn, bp in st["stacked"].items()},
+                "shared": {bn: visit_block(bp) for bn, bp in st["shared"].items()},
+            }
+        out[key] = sec
+    # lm_head / embed stay bf16: they carry the logits scale (QLoRA practice)
+    return out
+
+
+def finalize(setup_: LoRAMSetup, trained_lora, full_params):
+    """Online inference prep: recover adapters, merge into the full model."""
+    lora_full = recovery.recover_lora(trained_lora, setup_.spec,
+                                      setup_.full_plan, setup_.small_plan)
+    merged = recovery.merge_lora(full_params, lora_full, setup_.lora_cfg.scale)
+    return lora_full, merged
+
+
+def storage_report(full_params, small_params) -> Dict[str, float]:
+    """The paper's headline metric: parameter reduction ratio + HBM bytes."""
+    n_full = pruning.param_count(full_params)
+    n_small = pruning.param_count(small_params)
+    bytes_full = nf4.param_bytes(full_params)
+    bytes_small = nf4.param_bytes(small_params)
+    return {
+        "full_params": n_full,
+        "small_params": n_small,
+        "reduction_ratio": n_full / max(n_small, 1),
+        "full_bytes": bytes_full,
+        "small_bytes": bytes_small,
+        "hbm_reduction": bytes_full / max(bytes_small, 1),
+    }

@@ -1,0 +1,58 @@
+"""Training objectives: SFT cross-entropy (L_SFT) and alignment LM loss (L_A)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None):
+    """Token-mean cross-entropy.  logits (B,S,V) fp32; labels (B,S) int32.
+    mask (B,S): 1 for positions contributing to the loss (paper: answer
+    tokens for SFT; all tokens for alignment).
+
+    The label pick is a masked reduction (not take_along_axis): with
+    vocab-sharded logits (gemma3's 262k vocab) a gather would all-gather the
+    full fp32 logits per device; the where+sum shards cleanly (GSPMD psums
+    the partial picks)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def sft_loss(plan, base_params, lora, batch, *, lora_scale=2.0, remat=False,
+             masks=None, aux_weight: float = 0.01, frontend=None):
+    """L_SFT: next-token CE on (tokens, labels[, loss_mask]) + MoE aux loss."""
+    from repro.models.model import forward
+
+    logits, aux = forward(plan, base_params, batch["tokens"], lora,
+                          lora_scale=lora_scale, remat=remat, masks=masks,
+                          frontend=frontend if frontend is not None else batch.get("frontend"))
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def alignment_loss(plan, params, batch, *, remat=False, aux_weight: float = 0.01):
+    """L_A (Eq. 8): plain causal LM loss of the *pruned base* on a general
+    corpus — full-parameter continual pre-training, run offline by the
+    model publisher."""
+    from repro.models.model import forward
+
+    logits, aux = forward(plan, params, batch["tokens"], None, remat=remat,
+                          frontend=batch.get("frontend"))
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def perplexity(loss: Array) -> Array:
+    return jnp.exp(loss)

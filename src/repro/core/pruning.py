@@ -1,0 +1,482 @@
+"""P(·): the pruning stage of LoRAM.
+
+Four variants, faithful to the paper's §3.1 baselines:
+
+* ``rand`` — randomly structured (LoRAM-Rand): random group removal.
+* ``stru`` — LLM-Pruner-style structured (LoRAM-Stru): first-order Taylor
+  importance ``|w · ∂L/∂w|`` summed per *coupled group* (GQA KV-group across
+  q/k/v/o, FFN channel across gate/up/down, whole MoE expert, whole SSD
+  head), local (per-layer) uniform ratio, first/last layers kept unpruned.
+* ``semi`` — SparseGPT-style 4:8 semi-structured masks (magnitude criterion).
+* ``unst`` — unstructured magnitude masks at a global per-matrix ratio.
+
+TPU adaptation (DESIGN.md §3): structured keep-counts are rounded so pruned
+FFN widths stay multiples of 128 (MXU lane) and SSD head counts stay even
+(64-wide heads → 128-aligned channel blocks).  Non-structured variants keep
+full-shape weights with masks — the paper's own ▲ "theoretical reduction"
+caveat; on TPU they reduce neither memory nor FLOPs and exist for fidelity.
+
+A :class:`PruneSpec` records, per (stage, block, param), the kept *flat
+channel indices* on each pruned axis.  The same indices drive both
+``prune_params`` (gather) and ``recovery.recover_lora`` (scatter) — which is
+what makes the prune→train→recover→merge cycle exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoRAMConfig, ModelConfig, Stage, StageDims, round_to
+from repro.models.model import Plan
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Spec types
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WeightPrune:
+    """One pruned axis of one stacked parameter.
+
+    axis: axis in the *stacked* array (leading dim = layer repetition)
+    idx:  (n_rep, n_keep) kept flat-channel indices, sorted ascending
+    role: "in" | "out" | "aux" — whether the axis is the matmul input dim,
+          output dim (relevant for LoRA recovery) or a non-matmul param.
+    """
+
+    axis: int
+    idx: Any  # np.ndarray (n_rep, n_keep)
+    role: str
+
+
+@dataclass
+class PruneSpec:
+    method: str
+    ratio: float
+    # stage_specs[new_stage_name] -> block -> param -> [WeightPrune, ...]
+    stage_specs: Dict[str, Dict[str, Dict[str, List[WeightPrune]]]]
+    # mapping new (split) stage -> (orig stage name, rep slice)
+    stage_slices: Dict[str, Tuple[str, int, int]]
+    # semi/unst: masks[stage][block][param] = bool array, full stacked shape
+    masks: Optional[Dict] = None
+
+    @property
+    def structured(self) -> bool:
+        return self.method in ("rand", "stru")
+
+
+# ---------------------------------------------------------------------------
+# Importance scores
+# ---------------------------------------------------------------------------
+
+def _group_scores_from_tree(plan: Plan, tree, agg) -> Dict:
+    """Reduce a params-shaped tree to per-group scores.
+
+    Returns scores[stage][block] = dict of score arrays:
+      mlp:   {"ff": (L, F)}
+      attn:  {"kv": (L, G)}
+      moe:   {"expert": (L, E), "ff": (L, F_resid)?}
+      mamba: {"head": (L, H)}
+    ``agg(stacked_param) -> |w∘g|``-style elementwise magnitude.
+    """
+    out: Dict[str, Dict[str, Dict[str, Array]]] = {}
+    for st in plan.stages:
+        d = st.dims
+        st_scores: Dict[str, Dict[str, Array]] = {}
+        for spec in st.superblock:
+            if spec.shared:
+                continue  # shared blocks are never pruned (DESIGN.md §4)
+            bp = tree["stages"][st.name]["stacked"].get(spec.name)
+            if bp is None:
+                continue
+            s: Dict[str, Array] = {}
+            if spec.kind == "mlp":
+                wg, wu, wd = (jnp.asarray(agg(bp[k]), jnp.float32) for k in ("wg", "wu", "wd"))
+                s["ff"] = wg.sum(1) + wu.sum(1) + wd.sum(2)          # (L, F)
+            elif spec.kind in ("attn", "cross_attn"):
+                G, gs, hd = d.n_kv_heads, d.n_heads // d.n_kv_heads, d.head_dim
+                L = bp["wq"].shape[0]
+                wq = jnp.asarray(agg(bp["wq"]), jnp.float32).reshape(L, d.d_model, G, gs * hd)
+                wk = jnp.asarray(agg(bp["wk"]), jnp.float32).reshape(L, d.d_model, G, hd)
+                wv = jnp.asarray(agg(bp["wv"]), jnp.float32).reshape(L, d.d_model, G, hd)
+                wo = jnp.asarray(agg(bp["wo"]), jnp.float32).reshape(L, G, gs * hd, d.d_model)
+                s["kv"] = wq.sum((1, 3)) + wk.sum((1, 3)) + wv.sum((1, 3)) + wo.sum((2, 3))
+            elif spec.kind == "moe":
+                we = sum(jnp.asarray(agg(bp[k]), jnp.float32).sum((2, 3))
+                         for k in ("we_g", "we_u", "we_d"))          # (L, E)
+                s["expert"] = we
+                if "wr_g" in bp:
+                    s["resid_ff"] = (jnp.asarray(agg(bp["wr_g"]), jnp.float32).sum(1)
+                                     + jnp.asarray(agg(bp["wr_u"]), jnp.float32).sum(1)
+                                     + jnp.asarray(agg(bp["wr_d"]), jnp.float32).sum(2))
+            elif spec.kind == "mamba":
+                H, P = d.ssm_heads, d.ssm_head_dim
+                L = bp["in_proj"].shape[0]
+                ip = jnp.asarray(agg(bp["in_proj"]), jnp.float32)
+                di = d.d_inner
+                z = ip[:, :, :di].reshape(L, d.d_model, H, P).sum((1, 3))
+                xx = ip[:, :, di:2 * di].reshape(L, d.d_model, H, P).sum((1, 3))
+                op = jnp.asarray(agg(bp["out_proj"]), jnp.float32).reshape(L, H, P, d.d_model).sum((2, 3))
+                s["head"] = z + xx + op
+            if s:
+                st_scores[spec.name] = s
+        out[st.name] = st_scores
+    return out
+
+
+def magnitude_scores(plan: Plan, params) -> Dict:
+    return _group_scores_from_tree(plan, params, lambda w: jnp.abs(jnp.asarray(w, jnp.float32)))
+
+
+def taylor_scores(plan: Plan, params, grads) -> Dict:
+    """LLM-Pruner first-order Taylor: |w ∘ ∂L/∂w| per group."""
+    prod = jax.tree.map(lambda w, g: jnp.abs(w.astype(jnp.float32) * g.astype(jnp.float32)),
+                        params, grads)
+    return _group_scores_from_tree(plan, prod, lambda x: x)
+
+
+def random_scores(plan: Plan, seed: int) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    out: Dict = {}
+    for st in plan.stages:
+        d = st.dims
+        st_s: Dict = {}
+        for spec in st.superblock:
+            if spec.shared:
+                continue
+            k = jax.random.fold_in(key, hash((st.name, spec.name)) % (2**31))
+            s: Dict[str, Array] = {}
+            if spec.kind == "mlp":
+                s["ff"] = jax.random.uniform(k, (st.n_rep, d.d_ff))
+            elif spec.kind in ("attn", "cross_attn"):
+                s["kv"] = jax.random.uniform(k, (st.n_rep, d.n_kv_heads))
+            elif spec.kind == "moe":
+                s["expert"] = jax.random.uniform(k, (st.n_rep, d.n_experts))
+                if d.dense_residual_d_ff:
+                    s["resid_ff"] = jax.random.uniform(jax.random.fold_in(k, 1),
+                                                       (st.n_rep, d.dense_residual_d_ff))
+            elif spec.kind == "mamba":
+                s["head"] = jax.random.uniform(k, (st.n_rep, d.ssm_heads))
+            if s:
+                st_s[spec.name] = s
+        out[st.name] = st_s
+    return out
+
+
+def calibration_taylor_scores(plan: Plan, params, batch, loss_fn) -> Dict:
+    """Compute grads of the SFT loss wrt *base* params on a calibration batch
+    (the offline step of LLM-Pruner) and reduce to group scores."""
+    grads = jax.grad(lambda p: loss_fn(p, batch))(params)
+    return taylor_scores(plan, params, grads)
+
+
+# ---------------------------------------------------------------------------
+# Keep-count policy (TPU-aligned)
+# ---------------------------------------------------------------------------
+
+def _keep_counts(d: StageDims, ratio: float,
+                 prunable_kinds: Optional[set] = None) -> Dict[str, int]:
+    """prunable_kinds: block kinds present NON-shared in the superblock —
+    shared blocks (zamba2's attn/mlp, deepseek's shared experts) keep full
+    params, so their dims must not shrink."""
+    ok = prunable_kinds if prunable_kinds is not None else {
+        "mlp", "attn", "moe", "mamba"}
+    keep = {}
+    if d.d_ff and "mlp" in ok:
+        keep["ff"] = min(d.d_ff, round_to(int(round(d.d_ff * (1 - ratio))), 128))
+    if "attn" in ok and d.n_kv_heads > 1:
+        keep["kv"] = max(1, int(round(d.n_kv_heads * (1 - ratio))))
+    elif "attn" in ok and d.n_kv_heads == 1:
+        keep["kv"] = 1  # MQA: head pruning would break the single KV head
+    if d.n_experts and "moe" in ok:
+        keep["expert"] = max(d.top_k + 1, int(round(d.n_experts * (1 - ratio))))
+    if d.dense_residual_d_ff and "moe" in ok:
+        keep["resid_ff"] = min(
+            d.dense_residual_d_ff,
+            round_to(int(round(d.dense_residual_d_ff * (1 - ratio))), 128))
+    if d.ssm_heads and "mamba" in ok:
+        k = max(2, int(round(d.ssm_heads * (1 - ratio))))
+        keep["head"] = k - (k % 2)  # even head count → 128-aligned channels
+    return keep
+
+
+def pruned_dims(d: StageDims, keep: Dict[str, int]) -> StageDims:
+    kw: Dict[str, Any] = {}
+    if "ff" in keep:
+        kw["d_ff"] = keep["ff"]
+    if "kv" in keep and d.n_kv_heads:
+        gs = d.n_heads // d.n_kv_heads
+        kw["n_kv_heads"] = keep["kv"]
+        kw["n_heads"] = keep["kv"] * gs
+    if "expert" in keep:
+        kw["n_experts"] = keep["expert"]
+    if "resid_ff" in keep:
+        kw["dense_residual_d_ff"] = keep["resid_ff"]
+    if "head" in keep:
+        kw["ssm_heads"] = keep["head"]
+        kw["d_inner"] = keep["head"] * d.ssm_head_dim
+    return replace(d, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Index building: group scores → flat channel indices per weight
+# ---------------------------------------------------------------------------
+
+def _topk_idx(scores: Array, k: int) -> np.ndarray:
+    """(L, N) scores → (L, k) kept indices, sorted ascending per layer."""
+    s = np.asarray(scores, np.float64)
+    part = np.argpartition(-s, kth=min(k, s.shape[1] - 1), axis=1)[:, :k]
+    return np.sort(part, axis=1).astype(np.int32)
+
+
+def _expand_groups(group_idx: np.ndarray, width: int) -> np.ndarray:
+    """(L, G_keep) group ids → (L, G_keep·width) flat channel indices."""
+    L, g = group_idx.shape
+    base = group_idx[:, :, None] * width + np.arange(width)[None, None, :]
+    return base.reshape(L, g * width).astype(np.int32)
+
+
+def _block_weight_prunes(kind: str, d: StageDims, keep: Dict[str, int],
+                         scores: Dict[str, Array]) -> Dict[str, List[WeightPrune]]:
+    out: Dict[str, List[WeightPrune]] = {}
+    if kind == "mlp" and "ff" in keep and keep["ff"] < d.d_ff:
+        idx = _topk_idx(scores["ff"], keep["ff"])
+        out["wg"] = [WeightPrune(2, idx, "out")]
+        out["wu"] = [WeightPrune(2, idx, "out")]
+        out["wd"] = [WeightPrune(1, idx, "in")]
+    elif kind in ("attn", "cross_attn") and "kv" in keep and keep["kv"] < d.n_kv_heads:
+        G, gs, hd = d.n_kv_heads, d.n_heads // d.n_kv_heads, d.head_dim
+        gi = _topk_idx(scores["kv"], keep["kv"])
+        q_idx = _expand_groups(gi, gs * hd)
+        kv_idx = _expand_groups(gi, hd)
+        out["wq"] = [WeightPrune(2, q_idx, "out")]
+        out["wk"] = [WeightPrune(2, kv_idx, "out")]
+        out["wv"] = [WeightPrune(2, kv_idx, "out")]
+        out["wo"] = [WeightPrune(1, q_idx, "in")]
+    elif kind == "moe":
+        if "expert" in keep and keep["expert"] < d.n_experts:
+            ei = _topk_idx(scores["expert"], keep["expert"])
+            out["we_g"] = [WeightPrune(1, ei, "aux")]
+            out["we_u"] = [WeightPrune(1, ei, "aux")]
+            out["we_d"] = [WeightPrune(1, ei, "aux")]
+            out["router"] = [WeightPrune(2, ei, "out")]
+        if "resid_ff" in keep and keep["resid_ff"] < d.dense_residual_d_ff:
+            ri = _topk_idx(scores["resid_ff"], keep["resid_ff"])
+            out["wr_g"] = [WeightPrune(2, ri, "out")]
+            out["wr_u"] = [WeightPrune(2, ri, "out")]
+            out["wr_d"] = [WeightPrune(1, ri, "in")]
+    elif kind == "mamba" and "head" in keep and keep["head"] < d.ssm_heads:
+        H, P, N, di = d.ssm_heads, d.ssm_head_dim, d.ssm_state, d.d_inner
+        hi = _topk_idx(scores["head"], keep["head"])
+        ch = _expand_groups(hi, P)                       # kept d_inner channels
+        L, nk = hi.shape
+        nch = ch.shape[1]
+        # in_proj column layout: [z(di), x(di), B(N), C(N), dt(H)]
+        bc = np.broadcast_to(np.arange(2 * N, dtype=np.int32)[None], (L, 2 * N))
+        cols = np.concatenate([ch, di + ch, 2 * di + bc, 2 * di + 2 * N + hi], axis=1)
+        out["in_proj"] = [WeightPrune(2, cols, "out")]
+        # conv channels: [x(di), B(N), C(N)]
+        conv_cols = np.concatenate([ch, di + bc], axis=1)
+        out["conv_w"] = [WeightPrune(2, conv_cols, "aux")]
+        out["dt_bias"] = [WeightPrune(1, hi, "aux")]
+        out["a_log"] = [WeightPrune(1, hi, "aux")]
+        out["d_skip"] = [WeightPrune(1, hi, "aux")]
+        out["out_norm"] = [WeightPrune(1, ch, "aux")]
+        out["out_proj"] = [WeightPrune(1, ch, "in")]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan-level structured pruning
+# ---------------------------------------------------------------------------
+
+def build_structured_spec(
+    plan: Plan, loram: LoRAMConfig, scores: Dict,
+) -> Tuple[Plan, PruneSpec]:
+    """Split each stage into [head|mid|tail], prune the mid stage."""
+    assert loram.method in ("rand", "stru")
+    new_stages: List[Stage] = []
+    stage_specs: Dict = {}
+    stage_slices: Dict = {}
+
+    for st in plan.stages:
+        kf, kl = loram.keep_first, loram.keep_last
+        # layers → superblock repetitions (round up to superblock boundary)
+        mixers = max(1, sum(1 for b in st.superblock if b.kind in ("attn", "enc_attn", "mamba")))
+        kf_rep = -(-kf // mixers) if kf else 0
+        kl_rep = -(-kl // mixers) if kl else 0
+        if st.n_rep - kf_rep - kl_rep < 1:
+            kf_rep = kl_rep = 0  # stage too shallow to split: prune everything
+        mid = st.n_rep - kf_rep - kl_rep
+
+        prunable = {b.kind for b in st.superblock if not b.shared}
+        if "cross_attn" in prunable:
+            prunable.add("attn")   # enc-dec: self+cross pruned together
+        keep = _keep_counts(st.dims, loram.ratio, prunable)
+        pd = pruned_dims(st.dims, keep)
+
+        def add(name, rep, dims, lo, hi):
+            new_stages.append(Stage(st.superblock, rep, dims, name))
+            stage_slices[name] = (st.name, lo, hi)
+
+        if kf_rep:
+            add(st.name + "_head", kf_rep, st.dims, 0, kf_rep)
+        mid_name = st.name + "_mid" if (kf_rep or kl_rep) else st.name
+        add(mid_name, mid, pd, kf_rep, kf_rep + mid)
+        if kl_rep:
+            add(st.name + "_tail", kl_rep, st.dims, kf_rep + mid, st.n_rep)
+
+        blocks: Dict = {}
+        for spec in st.superblock:
+            if spec.shared or spec.name not in scores.get(st.name, {}):
+                continue
+            sc = {k: np.asarray(v)[kf_rep:kf_rep + mid] for k, v in scores[st.name][spec.name].items()}
+            wp = _block_weight_prunes(spec.kind, st.dims, keep, sc)
+            if wp:
+                blocks[spec.name] = wp
+        stage_specs[mid_name] = blocks
+
+    small_plan = Plan(plan.cfg, tuple(new_stages), plan.enc_stages)
+    spec = PruneSpec(loram.method, loram.ratio, stage_specs, stage_slices)
+    return small_plan, spec
+
+
+def prune_params(params, plan: Plan, small_plan: Plan, spec: PruneSpec):
+    """Gather the full param tree into the pruned (small) tree."""
+    new_stages = {}
+    for st in small_plan.stages:
+        orig, lo, hi = spec.stage_slices[st.name]
+        src = params["stages"][orig]
+        sliced = jax.tree.map(lambda x: x[lo:hi], src["stacked"])
+        blocks = spec.stage_specs.get(st.name, {})
+        for bname, wps in blocks.items():
+            bp = dict(sliced[bname])
+            for pname, plist in wps.items():
+                w = bp[pname]
+                for wp in plist:
+                    idx = jnp.asarray(wp.idx)
+                    shape = [1] * w.ndim
+                    shape[0] = idx.shape[0]
+                    shape[wp.axis] = idx.shape[1]
+                    w = jnp.take_along_axis(w, idx.reshape(shape), axis=wp.axis)
+                bp[pname] = w
+            sliced[bname] = bp
+        new_stages[st.name] = {"stacked": sliced, "shared": src["shared"]}
+    out = dict(params)
+    out["stages"] = new_stages
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Non-structured masks (semi 4:8 / unstructured)
+# ---------------------------------------------------------------------------
+
+_MASKABLE = {"wq", "wk", "wv", "wo", "wg", "wu", "wd", "in_proj", "out_proj",
+             "ws_g", "ws_u", "ws_d", "wr_g", "wr_u", "wr_d"}
+
+
+def _semi_mask(w: Array, n: int, m: int) -> Array:
+    """Keep the n largest-magnitude of every m consecutive weights along the
+    input axis (axis -2 of the stacked (L, d_in, d_out) weight)."""
+    l, d_in, d_out = w.shape
+    assert d_in % m == 0
+    wa = jnp.abs(w.astype(jnp.float32)).reshape(l, d_in // m, m, d_out)
+    thresh = -jnp.sort(-wa, axis=2)[:, :, n - 1 : n, :]
+    mask = wa >= thresh
+    return mask.reshape(l, d_in, d_out)
+
+
+def _unst_mask(w: Array, ratio: float) -> Array:
+    l = w.shape[0]
+    wa = jnp.abs(w.astype(jnp.float32)).reshape(l, -1)
+    k = int(wa.shape[1] * (1 - ratio))
+    thresh = -jnp.sort(-wa, axis=1)[:, k - 1 : k]
+    return (wa >= thresh).reshape(w.shape)
+
+
+def build_mask_spec(plan: Plan, params, loram: LoRAMConfig) -> Tuple[Plan, PruneSpec]:
+    assert loram.method in ("semi", "unst")
+    masks: Dict = {}
+    for st in plan.stages:
+        st_m: Dict = {}
+        for spec_b in st.superblock:
+            if spec_b.shared:
+                continue
+            bp = params["stages"][st.name]["stacked"].get(spec_b.name, {})
+            bm = {}
+            for pname, w in bp.items():
+                if pname not in _MASKABLE or w.ndim != 3:
+                    continue
+                if loram.method == "semi":
+                    if w.shape[1] % loram.semi_m:
+                        continue
+                    bm[pname] = _semi_mask(w, loram.semi_n, loram.semi_m)
+                else:
+                    bm[pname] = _unst_mask(w, loram.ratio)
+            if bm:
+                st_m[spec_b.name] = bm
+        masks[st.name] = {"stacked": st_m}
+    slices = {st.name: (st.name, 0, st.n_rep) for st in plan.stages}
+    spec = PruneSpec(loram.method, loram.ratio, {}, slices, masks={"stages": masks})
+    return plan, spec  # plan unchanged: masked-dense
+
+
+def apply_masks_to_params(params, spec: PruneSpec):
+    """Bake masks into the frozen base (W0∘M) so training needn't re-mask."""
+    if not spec.masks:
+        return params
+    out = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    for stn, stm in spec.masks["stages"].items():
+        for bn, bm in stm["stacked"].items():
+            for pn, m in bm.items():
+                w = out["stages"][stn]["stacked"][bn][pn]
+                out["stages"][stn]["stacked"][bn][pn] = (w * m.astype(w.dtype)).astype(w.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def prune(plan: Plan, params, loram: LoRAMConfig, *, scores: Optional[Dict] = None):
+    """Full P(·): returns (small_plan, small_params, spec).
+
+    For ``rand``/``stru``, ``scores`` defaults to random / magnitude resp.
+    (callers wanting true Taylor importance pass ``calibration_taylor_scores``
+    output — used by the e2e example and tests).
+    """
+    if loram.method == "none" or loram.ratio == 0.0:
+        slices = {st.name: (st.name, 0, st.n_rep) for st in plan.stages}
+        return plan, params, PruneSpec("none", 0.0, {}, slices)
+    if loram.method in ("rand", "stru"):
+        if scores is None:
+            scores = (random_scores(plan, loram.seed) if loram.method == "rand"
+                      else magnitude_scores(plan, params))
+        small_plan, spec = build_structured_spec(plan, loram, scores)
+        small_params = prune_params(params, plan, small_plan, spec)
+        return small_plan, small_params, spec
+    small_plan, spec = build_mask_spec(plan, params, loram)
+    small_params = apply_masks_to_params(params, spec)
+    return small_plan, small_params, spec
+
+
+def param_count(params) -> int:
+    from repro.quant.nf4 import QTensor
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += int(np.prod(leaf.shape))
+        else:
+            total += leaf.size
+    return total
+
+
+def reduction_ratio(full_params, small_params) -> float:
+    return param_count(full_params) / max(1, param_count(small_params))

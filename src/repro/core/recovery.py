@@ -1,0 +1,179 @@
+"""R(·): recovery of trained low-rank matrices + Eq.(6) merge.
+
+Structured LoRAM: the adapters were trained at pruned widths; recovery
+scatters their rows/cols back to the original coordinates (zeros at pruned
+positions), so the full-rank delta ``Bᴿ Aᴿ`` is non-zero **only on the
+retained coordinates** — merging never perturbs weights that were pruned
+away during training (they are "essential for inference" and stay at their
+pre-trained values).
+
+Note on the paper's Eq.(5)/(6): as printed they mask with ``(1−Mᴾ)``, which
+would place the delta on *pruned* coordinates — contradicting the paper's own
+Fig. 1, §1 intuition ("updating the weights retained through pruning …
+employing the pruned weights during inference") and Appendix C's dimension
+walk-through.  We implement the semantics of the figure/appendix (delta on
+retained coordinates); see DESIGN.md §7.
+
+Non-structured LoRAM (paper C₃): recovery is the identity on (B, A).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import PruneSpec, WeightPrune
+from repro.models.model import Plan
+
+Array = jax.Array
+
+
+def _scatter_rows(full_n: int, idx: Array, x: Array) -> Array:
+    """x: (L, k, ...) → (L, full_n, ...) with rows placed at idx (L, k)."""
+    L = x.shape[0]
+    out = jnp.zeros((L, full_n) + x.shape[2:], x.dtype)
+    return jax.vmap(lambda o, i, v: o.at[i].set(v))(out, jnp.asarray(idx), x)
+
+
+def _recover_block_lora(blora: dict, wps: Dict[str, list], shapes: Dict[str, tuple]) -> dict:
+    """Scatter one block's LoRA adapters back to full dims.
+
+    blora[param] = {"a": (L, r, d_in_small), "b": (L, d_out_small, r)}
+    shapes[param] = full (d_in, d_out).
+    """
+    out = {}
+    for pname, ab in blora.items():
+        a, b = ab["a"], ab["b"]
+        full_in, full_out = shapes[pname]
+        for wp in wps.get(pname, []):
+            if wp.role == "in":      # pruned input dim → scatter A columns
+                a_t = jnp.swapaxes(a, 1, 2)                     # (L, d_in_s, r)
+                a = jnp.swapaxes(_scatter_rows(full_in, wp.idx, a_t), 1, 2)
+            elif wp.role == "out":   # pruned output dim → scatter B rows
+                b = _scatter_rows(full_out, wp.idx, b)
+        out[pname] = {"a": a, "b": b}
+    return out
+
+
+def recover_lora(small_lora, spec: PruneSpec, full_plan: Plan, small_plan: Plan):
+    """Map LoRA adapters trained on the small plan back onto the full plan.
+
+    Handles the [head|mid|tail] stage split: head/tail adapters pass through,
+    mid adapters are scattered, then the three are re-stacked in layer order.
+    """
+    if not spec.structured or spec.method == "none":
+        return small_lora
+
+    from repro.models.model import _block_param_shapes  # full-dim shapes
+
+    # group small stages by their original stage, in slice order
+    by_orig: Dict[str, list] = {}
+    for st in small_plan.stages:
+        orig, lo, hi = spec.stage_slices[st.name]
+        by_orig.setdefault(orig, []).append((lo, st))
+    for v in by_orig.values():
+        v.sort(key=lambda t: t[0])
+
+    full_stage_by_name = {st.name: st for st in full_plan.stages}
+    out_stages = {}
+    for orig, parts in by_orig.items():
+        full_st = full_stage_by_name[orig]
+        shapes = {spec_b.name: {p: s for p, s in _block_param_shapes(spec_b, full_st.dims).items()
+                                if len(s) == 2}
+                  for spec_b in full_st.superblock}
+
+        pieces = []  # list of per-part stacked lora dicts (full dims)
+        shared = None
+        for _, st in parts:
+            sl = small_lora["stages"][st.name]
+            stacked = sl["stacked"]
+            wps_blocks = spec.stage_specs.get(st.name, {})
+            fixed = {}
+            for bname, blora in stacked.items():
+                fixed[bname] = _recover_block_lora(blora, wps_blocks.get(bname, {}),
+                                                   shapes[bname])
+            pieces.append(fixed)
+            if sl.get("shared"):
+                shared = sl["shared"]
+
+        merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *pieces)
+        out_stages[orig] = {"stacked": merged, "shared": shared or {}}
+
+    out = {"stages": out_stages}
+    for k in ("enc_stages", "lm_head"):
+        if k in small_lora:
+            out[k] = small_lora[k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Eq.(6): merge recovered adapters into the full model for inference
+# ---------------------------------------------------------------------------
+
+def _merge_one(w: Array, ab: dict, scale: float) -> Array:
+    a = ab["a"].astype(jnp.float32)          # (..., r, d_in)
+    b = ab["b"].astype(jnp.float32)          # (..., d_out, r)
+    if w.ndim == 2:
+        delta = (b @ a).T                     # (d_in, d_out)
+    else:
+        delta = jnp.einsum("lor,lri->lio", b, a)
+    return (w.astype(jnp.float32) + scale * delta).astype(w.dtype)
+
+
+def merge_lora(params, lora, scale: float):
+    """W ← W + scale·(BA)ᵀ everywhere an adapter exists.  Returns new params."""
+    out = jax.tree.map(lambda x: x, params)
+
+    def merge_section(psec, lsec):
+        for bname, blora in (lsec or {}).items():
+            for pname, ab in blora.items():
+                psec[bname] = dict(psec[bname])
+                psec[bname][pname] = _merge_one(psec[bname][pname], ab, scale)
+
+    for key in ("stages", "enc_stages"):
+        if key not in lora or key not in out:
+            continue
+        for stn, sl in lora[key].items():
+            sec = out[key][stn]
+            sec["stacked"] = dict(sec["stacked"])
+            merge_section(sec["stacked"], sl.get("stacked"))
+            sec["shared"] = dict(sec["shared"])
+            merge_section(sec["shared"], sl.get("shared"))
+    if "lm_head" in lora and "lm_head" in out:
+        out["lm_head"] = _merge_one(out["lm_head"], lora["lm_head"], scale)
+    return out
+
+
+def delta_support_check(spec: PruneSpec, full_plan: Plan, lora_full) -> bool:
+    """Invariant (tested): the recovered delta is zero on pruned coordinates."""
+    for st_name, blocks in spec.stage_specs.items():
+        orig = spec.stage_slices[st_name][0]
+        for bname, wps in blocks.items():
+            blora = lora_full["stages"][orig]["stacked"].get(bname)
+            if blora is None:
+                continue
+            for pname, plist in wps.items():
+                if pname not in blora:
+                    continue
+                for wp in plist:
+                    if wp.role == "aux":
+                        continue
+                    lo, hi = spec.stage_slices[st_name][1:]
+                    if wp.role == "out":
+                        b = np.asarray(blora[pname]["b"][lo:hi], np.float32)
+                        full = np.ones(b.shape[1], bool)
+                        for li in range(b.shape[0]):
+                            mask = full.copy()
+                            mask[np.asarray(wp.idx)[li]] = False
+                            if np.abs(b[li][mask]).max(initial=0) != 0:
+                                return False
+                    else:
+                        a = np.asarray(blora[pname]["a"][lo:hi], np.float32)
+                        for li in range(a.shape[0]):
+                            mask = np.ones(a.shape[2], bool)
+                            mask[np.asarray(wp.idx)[li]] = False
+                            if np.abs(a[li][:, mask]).max(initial=0) != 0:
+                                return False
+    return True

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    AlignmentCorpus,
+    SFTDataset,
+    batch_iterator,
+    index_for,
+)

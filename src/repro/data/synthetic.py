@@ -1,0 +1,99 @@
+"""Deterministic synthetic data pipeline.
+
+The container is offline, so FineWeb/OpenWebMath (alignment) and
+OpenHermes/OpenOrca (SFT) are replaced by deterministic synthetic corpora
+with matched token statistics (Zipf-distributed unigrams + local n-gram
+structure so models have something learnable).  The pipeline interface is
+the real one — host-sharded, stateless addressing, elastic — and a real
+tokenized corpus drops in by replacing the two dataset classes.
+
+Statelessness is the fault-tolerance property: batch content is a pure
+function of (seed, step, host_index, n_hosts), so restarts and elastic
+re-sharding never replay or skip data (see runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+def index_for(step: int, host: int, n_hosts: int, seed: int) -> np.random.Generator:
+    """The stateless addressing function: one Philox stream per (step, host)."""
+    return np.random.Generator(
+        np.random.Philox(np.random.SeedSequence([seed, step, host, n_hosts])))
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int, a: float = 1.3):
+    """Zipf-ish token draw bounded to [2, vocab)."""
+    z = rng.zipf(a, size=shape).astype(np.int64)
+    return (z % max(vocab - 2, 1) + 2).astype(np.int32)
+
+
+def _add_ngram_structure(rng, tokens, vocab):
+    """Make ~30% of positions copy t[i-2] (+1 mod V): a learnable 2-gram."""
+    mask = rng.random(tokens.shape) < 0.3
+    mask[:, :2] = False
+    shifted = np.roll(tokens, 2, axis=1)
+    tokens = np.where(mask, (shifted + 1) % vocab, tokens)
+    return tokens.astype(np.int32)
+
+
+@dataclasses.dataclass
+class SFTDataset:
+    """Instruction-tuning stand-in: (prompt, answer) pairs packed to seq_len;
+    loss mask covers answer tokens only (paper: L_SFT on ground-truth
+    answers)."""
+
+    vocab: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, step: int, host: int = 0, n_hosts: int = 1,
+              batch_size: int = 8) -> Dict[str, np.ndarray]:
+        rng = index_for(step, host, n_hosts, self.seed)
+        toks = _zipf_tokens(rng, (batch_size, self.seq_len + 1), self.vocab)
+        toks = _add_ngram_structure(rng, toks, self.vocab)
+        toks[:, 0] = 1  # BOS
+        prompt_len = rng.integers(self.seq_len // 8, self.seq_len // 2,
+                                  size=(batch_size,))
+        pos = np.arange(self.seq_len)[None, :]
+        loss_mask = (pos >= prompt_len[:, None]).astype(np.float32)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "loss_mask": loss_mask,
+        }
+
+
+@dataclasses.dataclass
+class AlignmentCorpus:
+    """General-corpus stand-in for the one-shot alignment stage (L_A):
+    plain causal LM over every position."""
+
+    vocab: int
+    seq_len: int
+    seed: int = 100
+
+    def batch(self, step: int, host: int = 0, n_hosts: int = 1,
+              batch_size: int = 8) -> Dict[str, np.ndarray]:
+        rng = index_for(step, host, n_hosts, self.seed)
+        toks = _zipf_tokens(rng, (batch_size, self.seq_len + 1), self.vocab)
+        toks = _add_ngram_structure(rng, toks, self.vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def batch_iterator(ds, *, batch_size: int, start_step: int = 0,
+                   host: int = 0, n_hosts: int = 1,
+                   frontend_shape: Optional[tuple] = None) -> Iterator:
+    """Infinite deterministic iterator from ``start_step`` (resume-safe)."""
+    step = start_step
+    while True:
+        b = ds.batch(step, host, n_hosts, batch_size)
+        if frontend_shape is not None:
+            rng = index_for(step, host + 10_000, n_hosts, ds.seed)
+            b["frontend"] = rng.standard_normal(
+                (batch_size,) + frontend_shape).astype(np.float32) * 0.02
+        yield b
+        step += 1

@@ -1,0 +1,279 @@
+"""Sharding rules: logical param/activation/cache axes → mesh axes.
+
+Mesh axes (see launch/mesh.py):
+  * ``pod``   — cross-pod data parallelism (lowest bandwidth; carries only the
+                rank-r adapter gradient all-reduce under LoRAM)
+  * ``data``  — in-pod data parallelism / FSDP weight sharding
+  * ``model`` — tensor/expert parallelism
+
+Rules are shape-driven (divisibility-checked) rather than name-driven so the
+same code shards every architecture in the zoo, including LoRAM-pruned
+shapes whose widths changed:
+
+  * stacked weights (L, a, b): largest-divisible non-layer axis → ``model``;
+    with ``fsdp=True`` a second divisible axis → ``data`` (frozen-base FSDP:
+    all-gather on use, no grad reduce-scatter since the base is frozen).
+  * expert weights (L, E, a, b): E → ``model`` (EP), then a/b → ``data``.
+  * embeddings / lm_head (V, D): V → ``model``, D → ``data`` (fsdp).
+  * LoRA adapters: pruned-axis → ``model`` when divisible, else replicated
+    (rank-r factors are tiny; replication is usually the right call).
+  * activations (B, S, D): B → (pod, data); optionally S → ``model`` between
+    blocks (sequence sharding of the residual stream, bounds live-activation
+    memory for 4k×256 training cells).
+  * KV caches (L, B, S, K, hd): B → (pod, data), then hd or K → ``model``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.quant.nf4 import QTensor
+
+# ---------------------------------------------------------------------------
+# Current-mesh context (lets model code apply constraints without plumbing)
+# ---------------------------------------------------------------------------
+
+_CURRENT: dict = {"mesh": None, "seq_shard": False}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], seq_shard: bool = False):
+    prev = dict(_CURRENT)
+    _CURRENT.update(mesh=mesh, seq_shard=seq_shard)
+    try:
+        yield
+    finally:
+        _CURRENT.update(prev)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT["mesh"]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def residual_constraint(x):
+    """Applied between scanned blocks (wired into repro.models.model)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    b, s, d = x.shape
+    spec = [None, None, None]
+    if b % dp_size(mesh) == 0:
+        spec[0] = dp_axes(mesh)
+    if _CURRENT["seq_shard"] and s % model_size(mesh) == 0 and s > 1:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def head_constraint(x):
+    """(B, S, H, D) attention activations: heads → model (GSPMD pads when the
+    head count doesn't divide, e.g. yi-34b's 56 heads on a 16-way axis)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None or x.ndim != 4 or model_size(mesh) == 1:
+        return x
+    spec = [None, None, "model", None]
+    if x.shape[0] % dp_size(mesh) == 0:
+        spec[0] = dp_axes(mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def logits_constraint(x):
+    """(B, S, V) fp32 logits: vocab → model (loss logsumexp psums per shard)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None or x.ndim < 2 or model_size(mesh) == 1:
+        return x
+    spec = [None] * x.ndim
+    if x.shape[-1] % model_size(mesh) == 0 and x.shape[-1] >= model_size(mesh):
+        spec[-1] = "model"
+    if x.shape[0] % dp_size(mesh) == 0 and x.shape[0] >= dp_size(mesh):
+        spec[0] = dp_axes(mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def install_residual_constraint(head_shard: bool = False):
+    from repro.models import model as model_mod
+
+    model_mod.set_residual_constraint(residual_constraint)
+    # head-sharding constraints measured slightly NEGATIVE on yi-34b train_4k
+    # (padding 56→64 heads + SP→TP reshard churn; see §Perf iter 3) — off by
+    # default, available for per-cell experiments.
+    model_mod.set_head_constraint(head_constraint if head_shard else None)
+    model_mod.set_logits_constraint(logits_constraint)
+
+
+# ---------------------------------------------------------------------------
+# Spec derivation
+# ---------------------------------------------------------------------------
+
+def _largest_divisible(shape: Sequence[int], axes: Sequence[int], size: int,
+                       taken: Sequence[int] = ()) -> Optional[int]:
+    best, best_dim = None, 0
+    for ax in axes:
+        if ax in taken:
+            continue
+        if shape[ax] % size == 0 and shape[ax] >= size and shape[ax] > best_dim:
+            best, best_dim = ax, shape[ax]
+    return best
+
+
+# Megatron-style tensor-parallel classification by (stable) param name.
+# column-parallel: y = x @ W with d_out sharded  → no collective on use
+# row-parallel:    y = x @ W with d_in  sharded  → psum(y) after
+_COLUMN = {"wq", "wk", "wv", "wg", "wu", "in_proj", "lm_head",
+           "ws_g", "ws_u", "wr_g", "wr_u"}
+_ROW = {"wo", "wd", "out_proj", "ws_d", "wr_d"}
+
+
+def _weight_spec(shape, mesh: Mesh, *, layer_axes: int, fsdp: bool, pname: str,
+                 expert_axis: Optional[int] = None) -> P:
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    m = model_size(mesh)
+    d = mesh.shape.get("data", 1)
+    taken: list = []
+
+    def try_assign(ax, axis_name, size):
+        if ax is not None and spec[ax] is None and shape[ax] % size == 0 and shape[ax] >= size:
+            spec[ax] = axis_name
+            taken.append(ax)
+            return True
+        return False
+
+    if expert_axis is not None and try_assign(expert_axis, "model", m):
+        pass
+    elif pname in _COLUMN and ndim - layer_axes == 2:
+        try_assign(ndim - 1, "model", m)           # d_out
+    elif pname in _ROW and ndim - layer_axes == 2:
+        try_assign(ndim - 2, "model", m)           # d_in
+    elif pname == "embed":
+        try_assign(0, "model", m)                  # vocab
+    elif pname == "router":
+        pass                                       # tiny: replicate
+    else:
+        ax = _largest_divisible(shape, list(range(layer_axes, ndim)), m, taken)
+        if ax is not None:
+            spec[ax] = "model"
+            taken.append(ax)
+    if fsdp and d > 1:
+        ax = _largest_divisible(shape, list(range(layer_axes, ndim)), d, taken)
+        if ax is not None:
+            spec[ax] = "data"
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = True):
+    """PartitionSpec tree matching a params/lora pytree."""
+
+    def visit(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        is_stacked = "stacked" in keys
+        if isinstance(leaf, QTensor):
+            # handled via its children (codes/scales are leaves of the node)
+            return leaf
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim <= 1:
+            return P()
+        layer_axes = 1 if is_stacked else 0
+        expert_axis = None
+        pname = keys[-1] if keys else ""
+        field = keys[-2] if len(keys) >= 2 else ""
+        if any(k.startswith("we_") for k in (pname, field)) and ndim - layer_axes >= 3:
+            expert_axis = layer_axes  # (L, E, a, b) → E
+        if pname in ("a", "b"):
+            # LoRA factor: B of a column-parallel target shares its d_out
+            # sharding; A of a row-parallel target shares its d_in sharding.
+            target = keys[-2] if len(keys) >= 2 else ""
+            sp = [None] * ndim
+            wide = ndim - 1 if pname == "a" else ndim - 2
+            eligible = ((pname == "b" and target in _COLUMN)
+                        or (pname == "a" and target in _ROW))
+            if (eligible and shape[wide] % model_size(mesh) == 0
+                    and shape[wide] >= 4 * model_size(mesh)):
+                sp[wide] = "model"
+            return P(*sp)
+        return _weight_spec(shape, mesh, layer_axes=layer_axes, fsdp=fsdp,
+                            pname=pname, expert_axis=expert_axis)
+
+    def qtensor_spec(q: QTensor, pname: str):
+        la = q.codes.ndim - 2
+        codes_spec = _weight_spec(q.codes.shape, mesh, layer_axes=la, fsdp=fsdp,
+                                  pname=pname,
+                                  expert_axis=la - 1 if pname.startswith("we_") and la >= 1 else None)
+        # scales share the d_out layout; the block axis mirrors d_in sharding
+        sc = list(codes_spec) + [None] * (q.scales.ndim - len(codes_spec))
+        sc = sc[: q.scales.ndim]
+        if q.scales.shape[-2] % model_size(mesh) != 0 and sc[-2] == "model":
+            sc[-2] = None  # few blocks: replicate the block axis
+        if sc[-2] == "data" and q.scales.shape[-2] % mesh.shape.get("data", 1) != 0:
+            sc[-2] = None
+        return QTensor(codes_spec, P(*sc), q.shape, q.block)
+
+    def visit_node(path, leaf):
+        if isinstance(leaf, QTensor):
+            keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+            return qtensor_spec(leaf, keys[-1] if keys else "")
+        return visit(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        visit_node, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def batch_specs(batch, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def visit(path, leaf):
+        shape = leaf.shape
+        sp: list = [None] * len(shape)
+        if shape and shape[0] % dp_size(mesh) == 0 and shape[0] >= dp_size(mesh):
+            sp[0] = dp
+        return P(*sp)
+
+    return jax.tree_util.tree_map_with_path(visit, batch)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """KV/SSM cache tree: (L, B, ...) — B → dp, best trailing axis → model."""
+    m = model_size(mesh)
+
+    def visit(path, leaf):
+        shape = leaf.shape
+        sp: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size(mesh) == 0 and shape[1] >= dp_size(mesh):
+            sp[1] = dp_axes(mesh)
+        # prefer sharding heads or head_dim (trailing axes) over seq
+        for ax in range(len(shape) - 1, 1, -1):
+            if shape[ax] % m == 0 and shape[ax] >= m:
+                sp[ax] = "model"
+                break
+        return P(*sp)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def opt_specs(lora_specs_tree, opt_state):
+    """AdamW moments mirror the lora tree; step is replicated."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(P(), lora_specs_tree, lora_specs_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

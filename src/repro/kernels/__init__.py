@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as a triple:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ref.py    — pure-jnp oracle (also the CPU/dry-run execution path)
+  ops.py    — jit'd public wrappers with interpret fallback
+
+Kernels:
+  nf4_matmul      — fused NF4 dequant → MXU matmul (QLoRAM base-weight path)
+  flash_attention — blocked online-softmax attention (train/prefill)
+  ssd_scan        — Mamba2 state-space-duality chunked scan
+"""

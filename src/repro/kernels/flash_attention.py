@@ -1,0 +1,109 @@
+"""Blocked online-softmax attention (FlashAttention) for TPU.
+
+The training/prefill hot spot: without it, S×S score tensors materialize in
+HBM (the dominant memory-roofline term for train_4k / prefill_32k cells —
+see EXPERIMENTS.md §Roofline).  TPU-native shape of the idea:
+
+  * grid (B·H, S/bq, S/bk), K innermost; the (bq, d) output accumulator,
+    running row-max m and denominator l live in VMEM scratch across the
+    K sweep (no HBM round-trip);
+  * q·kᵀ tile (bq, bk) on the MXU, rescale-and-accumulate on the VPU;
+  * causal masking by tile: fully-masked K tiles are skipped via
+    ``pl.when`` (upper-triangle tiles cost nothing — this is the 2×
+    FLOP saving over dense causal attention).
+
+Block defaults (bq=bk=512, d≤256): VMEM ≈ bq·d·4 + bk·d·2·2 + bq·bk·4
+≈ 2.6 MB at d=128 — comfortably double-bufferable on v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, n_k: int, causal: bool, sm_scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile-level causal skip: K tile strictly above the diagonal → no work
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]                                  # (bq, d)
+        k = k_ref[0]                                  # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "sm_scale",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q,k,v: (B, H, S, D) → (B, H, S, D)."""
+    B, H, S, D = q.shape
+    scale = float(sm_scale if sm_scale is not None else 1.0 / (D ** 0.5))
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    n_k = S // bk
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_k=n_k, causal=causal,
+                          sm_scale=scale),
+        grid=(B * H, S // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

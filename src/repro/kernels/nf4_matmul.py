@@ -1,0 +1,105 @@
+"""Fused NF4-dequant matmul — the QLoRAM base-weight hot path on TPU.
+
+``y = x @ dequant(codes, scales)`` with the weight stored packed (two 4-bit
+codes per byte along K, per-64-row absmax scales).  The GPU original
+(bitsandbytes) dequantizes into a CUDA shared-memory tile; the TPU-native
+shape of the idea:
+
+  * grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator scratch
+    lives in VMEM across the K sweep;
+  * the packed (bk/2, bn) uint8 tile is unpacked in VREGs (shift/mask), the
+    16-entry NF4 codebook lookup is computed as a degree-15 selection tree
+    (jnp.where chain) — no gather needed on the VPU;
+  * per-block scales broadcast-multiply, then the bf16 tile feeds the MXU.
+
+Arithmetic intensity doubles vs a bf16 weight load (0.5 + ~0.03 bytes/weight
+instead of 2), which is exactly why QLoRAM decode shifts from memory- toward
+compute-bound (see EXPERIMENTS.md §Roofline).
+
+Block shapes default to (128, 512, 128): K-tile 128 → 64 packed rows (uint8
+sublane-friendly), N-tile 512 lanes, M-tile 128 MXU rows; VMEM footprint
+≈ bm·bk·2 + bk/2·bn + bk/64·bn·2 + bm·bn·4 ≈ 0.4 MB — far under the ~16 MB
+v5e VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.nf4 import NF4_CODEBOOK
+
+DEFAULT_BM = 128
+DEFAULT_BN = 512
+DEFAULT_BK = 128
+QBLOCK = 64
+
+
+def _nf4_decode(idx_i32):
+    """Map 4-bit code (int32 in [0,16)) → NF4 value via a selection tree
+    (vector-friendly; avoids gather)."""
+    out = jnp.full(idx_i32.shape, NF4_CODEBOOK[0], jnp.float32)
+    for i in range(1, 16):
+        out = jnp.where(idx_i32 == i, NF4_CODEBOOK[i], out)
+    return out
+
+
+def _kernel(x_ref, codes_ref, scales_ref, o_ref, acc_ref, *, bk: int,
+            n_k: int, out_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, bk)
+    packed = codes_ref[...]                         # (bk//2, bn)
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    # interleave rows: row 2i ← lo[i], row 2i+1 ← hi[i]
+    idx = jnp.stack([lo, hi], axis=1).reshape(bk, -1)
+    w = _nf4_decode(idx)                            # (bk, bn) f32
+    scales = scales_ref[...].astype(jnp.float32)    # (bk//QBLOCK, bn)
+    w = w.reshape(bk // QBLOCK, QBLOCK, -1) * scales[:, None, :]
+    w = w.reshape(bk, -1).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
+def nf4_matmul(x, codes, scales, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+               bk: int = DEFAULT_BK, out_dtype=jnp.float32,
+               interpret: bool = False):
+    """x: (M, K); codes: (K//2, N) uint8; scales: (K//QBLOCK, N).  → (M, N)."""
+    M, K = x.shape
+    N = codes.shape[1]
+    assert codes.shape[0] * 2 == K and scales.shape[0] * QBLOCK == K
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % QBLOCK == 0
+    n_k = K // bk
+
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n_k=n_k, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // QBLOCK, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scales)

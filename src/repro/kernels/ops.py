@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernel runs natively; everywhere
+else (this CPU container, the dry-run) the pure-jnp oracle executes instead
+— same signature, same numerics (the oracles ARE the reference the kernels
+are tested against in tests/test_kernels.py).  ``force='pallas'`` runs the
+kernel in interpret mode for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.nf4_matmul import nf4_matmul as _nf4_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def nf4_matmul(x, codes, scales, *, out_dtype=jnp.float32,
+               force: Optional[str] = None):
+    """y = x @ dequant_nf4(codes, scales).  x: (M, K) → (M, N)."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _nf4_pallas(x, codes, scales, out_dtype=out_dtype,
+                           interpret=not _on_tpu())
+    return _ref.nf4_matmul_ref(x, codes, scales, out_dtype=out_dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
+                    force: Optional[str] = None):
+    """q,k,v: (B, H, S, D) → (B, H, S, D); blocked online-softmax on TPU."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _flash_pallas(q, k, v, causal=causal, sm_scale=sm_scale,
+                             interpret=not _on_tpu())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,
+             force: Optional[str] = None):
+    """Mamba2 SSD scan.  Returns (y, h_final: (B, H, P, N))."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _ssd_pallas(x, dt, a, b_mat, c_mat, chunk=chunk,
+                           interpret=not _on_tpu())
+    return _ref.ssd_scan_ref(x, dt, a, b_mat, c_mat, chunk=chunk)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.nf4 import NF4_CODEBOOK
+
+
+# ---------------------------------------------------------------------------
+# nf4_matmul
+# ---------------------------------------------------------------------------
+
+def nf4_matmul_ref(x, codes, scales, block: int = 64, out_dtype=jnp.float32):
+    """y = x @ dequant(codes, scales).
+
+    x: (M, K) float; codes: (K//2, N) uint8 (two 4-bit codes per byte along
+    K); scales: (K//block, N).
+    """
+    K = codes.shape[0] * 2
+    N = codes.shape[1]
+    lo = (codes & 0x0F).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(K, N)
+    cb = jnp.asarray(NF4_CODEBOOK, jnp.float32)
+    w = cb[idx].reshape(K // block, block, N) * scales.astype(jnp.float32)[:, None, :]
+    w = w.reshape(K, N)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q,k,v: (B, H, S, D) → (B, H, S, D).  Plain softmax attention."""
+    B, H, S, D = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan (Mamba2 chunked state-space duality)
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, chunk: int = 64):
+    """Sequential (exact) SSD recurrence — the oracle for both the chunked
+    jnp path (models/ssm.py) and the Pallas kernel.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,); b/c: (B, S, N).
+    Returns (y: (B, S, H, P), h_final: (B, H, P, N)).
+    """
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)[:, :, None, None]            # (B,H,1,1)
+        dx = (dtt[..., None] * xt).astype(jnp.float32)        # (B,H,P)
+        h = h * decay + jnp.einsum("bn,bhp->bhpn", bt.astype(jnp.float32), dx)
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final

@@ -1,0 +1,122 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+One (batch, head) pair per grid row; the chunk axis is the innermost
+(sequential) grid dim so the (P, N) recurrent state lives in VMEM scratch
+across chunks — the inter-chunk recurrence never round-trips HBM, which is
+the point: the jnp fallback (models/ssm.py) carries the state through a
+lax.scan whose per-chunk carry is written back to HBM each iteration.
+
+Per chunk (length Lc, state N, head dim P):
+  intra:  (C·Bᵀ ∘ causal-decay) · (dt·x)      — two MXU matmuls
+  inter:  C · h_in · segment-decay             — one MXU matmul
+  state:  h_out = e^{Σa} h_in + Σ_j decay_j (dt·x)_j ⊗ B_j
+
+VMEM at Lc=128, P=64, N=128: ~0.5 MB — double-bufferable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Lc, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Lc, 1)
+    a = a_ref[0]                                 # (1,) decay rate (negative)
+    b = b_ref[0, 0].astype(jnp.float32)          # (Lc, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (Lc, N)
+
+    la = dt * a                                  # (Lc, 1) log-decay ≤ 0
+    cum = jnp.cumsum(la, axis=0)                 # (Lc, 1)
+
+    # ---- intra-chunk quadratic ----
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Lc, Lc)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum - cum[:, 0][None, :])    # (Lc,1)-(1,Lc): cum_i - cum_j
+    decay = jnp.where(ii >= jj, decay, 0.0)
+    dx = dt * x                                  # (Lc, P)
+    y = jax.lax.dot_general(scores * decay, dx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)      # (Lc, P)
+
+    # ---- inter-chunk: carried state contribution ----
+    h = h_ref[...]                               # (N, P)
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        c, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # ---- state update ----
+    total = cum[chunk - 1]                       # (1,)
+    rem = jnp.exp(total[None, :] - cum)          # (Lc, 1) decay j → chunk end
+    h_new = jnp.exp(total)[:, None] * h + jax.lax.dot_general(
+        b * rem, dx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (N, P)
+    h_ref[...] = h_new
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); b/c: (B, S, N).
+    Returns (y: (B, S, H, P), h_final: (B, H, N, P))."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    # layout: (B, H, n_chunks, Lc, ·)
+    xr = x.transpose(0, 2, 1, 3).reshape(B * H, n_chunks, chunk, P)
+    dtr = dt.transpose(0, 2, 1).reshape(B * H, n_chunks, chunk, 1)
+    br = jnp.broadcast_to(b_mat.reshape(B, 1, n_chunks, chunk, N),
+                          (B, H, n_chunks, chunk, N)).reshape(
+        B * H, n_chunks, chunk, N)
+    cr = jnp.broadcast_to(c_mat.reshape(B, 1, n_chunks, chunk, N),
+                          (B, H, n_chunks, chunk, N)).reshape(
+        B * H, n_chunks, chunk, N)
+    ar = jnp.repeat(a.reshape(1, H), B, axis=0).reshape(B * H, 1)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=(B * H, 1, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda g, _, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda g, _, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g, _, c: (g, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda g, _, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda g, _, c: (g, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda g, _, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda g, _, c: (g, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, n_chunks, chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, 1, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    h_final = h_final.reshape(B, H, N, P).transpose(0, 1, 3, 2)  # (B,H,P,N)
+    return y, h_final

@@ -1,0 +1,365 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+No real allocation ever happens for the FULL configs: parameters, adapters,
+optimizer state and caches are ShapeDtypeStructs from ``jax.eval_shape``; the
+proof artifacts are ``compiled.memory_analysis()`` (fits-per-device) and the
+parsed HLO (FLOPs / traffic / collective bytes for §Roofline).
+
+Cells:
+  * train_4k      → LoRAM online train_step on the PRUNED (+NF4) base
+                    (the paper trains small …)
+  * prefill_32k / decode_32k / long_500k
+                  → serve steps on the FULL model with merged adapters
+                    (… and infers large).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+from __future__ import annotations
+
+import os
+
+# MUST precede any jax import — jax locks the device count at first init.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoRAConfig, LoRAMConfig, TrainConfig
+from repro.configs.registry import ARCHS, SHAPES, cell_applicable
+from repro.core import pruning
+from repro.core.loram import quantize_base
+from repro.distributed import sharding
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (
+    Plan, init_cache, init_lora, init_params, make_plan)
+from repro.optim.adamw import adamw_init
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step
+
+KEY_STRUCT = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def frontend_struct(cfg, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((batch, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(arch: str, shape: str, variant: str = "qloram",
+                lora_rank: int = 8) -> Dict[str, Any]:
+    """Build all ShapeDtypeStructs for one cell (no device allocation)."""
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    plan = make_plan(cfg)
+    out: Dict[str, Any] = {"cfg": cfg, "shape": dict(sh), "kind": sh["kind"]}
+    lora_cfg = LoRAConfig(rank=lora_rank)
+    out["lora_cfg"] = lora_cfg
+
+    if sh["kind"] == "train":
+        # LoRAM: derive the pruned (small) training plan
+        if variant == "lora":
+            small_plan = plan
+        else:
+            loram_cfg = LoRAMConfig(method="rand", ratio=0.65,
+                                    quantize=(variant == "qloram"))
+            scores = pruning.random_scores(plan, seed=0)
+            small_plan, _spec = pruning.build_structured_spec(plan, loram_cfg, scores)
+        quant = variant == "qloram"
+
+        def build_base(k):
+            p = init_params(small_plan, k, jnp.bfloat16)
+            return quantize_base(p) if quant else p
+
+        out["plan"] = small_plan
+        out["base"] = jax.eval_shape(build_base, KEY_STRUCT)
+        out["lora"] = jax.eval_shape(
+            lambda k: init_lora(small_plan, lora_cfg, k), KEY_STRUCT)
+        out["opt"] = jax.eval_shape(adamw_init, out["lora"])
+        B, S = sh["global_batch"], sh["seq_len"]
+        text_s = S - (cfg.n_patches if cfg.family == "vlm" else 0)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((B, text_s), jnp.float32),
+        }
+        fe = frontend_struct(cfg, B)
+        if fe is not None:
+            batch["frontend"] = fe
+        out["batch"] = batch
+        out["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return out
+
+    # serving cells: full model.  Default = merged adapters (the paper's
+    # inference mode, Eq. 7).  variant="qserve" = beyond-paper weight-only
+    # NF4 serving: quantized FULL base + recovered adapters unmerged (the
+    # nf4_matmul kernel path) — divides decode's dominant weight-read bytes
+    # by ~3.8 at the cost of the rank-r adapter matmuls.
+    out["plan"] = plan
+    if variant == "qserve":
+        out["base"] = jax.eval_shape(
+            lambda k: quantize_base(init_params(plan, k, jnp.bfloat16)),
+            KEY_STRUCT)
+        out["lora"] = jax.eval_shape(
+            lambda k: init_lora(plan, lora_cfg, k), KEY_STRUCT)
+    else:
+        out["base"] = jax.eval_shape(
+            lambda k: init_params(plan, k, jnp.bfloat16), KEY_STRUCT)
+    B, S = sh["global_batch"], sh["seq_len"]
+    out["cache"] = jax.eval_shape(
+        lambda: init_cache(plan, B, S, jnp.bfloat16))
+    if sh["kind"] == "prefill":
+        text_s = S - (cfg.n_patches if cfg.family == "vlm" else 0)
+        out["tokens"] = jax.ShapeDtypeStruct((B, text_s), jnp.int32)
+        fe = frontend_struct(cfg, B)
+        if fe is not None:
+            out["frontend"] = fe
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape: str, mesh, *, variant: str = "qloram",
+               seq_shard: bool = True, fsdp: bool = True,
+               n_micro: Optional[int] = None,
+               head_shard: Optional[bool] = None):
+    spec = input_specs(arch, shape, variant)
+    cfg, plan, kind = spec["cfg"], spec["plan"], spec["kind"]
+    dp = sharding.dp_size(mesh)
+
+    # head-sharded attention activations: measured 11× collective win for
+    # serving (no seq-sharding to fight) but a net loss for training
+    # (§Perf iterations 3/5) — default ON for serve, OFF for train.
+    if head_shard is None:
+        head_shard = kind != "train"
+    sharding.install_residual_constraint(head_shard=head_shard)
+    with sharding.use_mesh(mesh, seq_shard=seq_shard and kind == "train"):
+        base_sh = sharding.to_shardings(
+            sharding.param_specs(spec["base"], mesh, fsdp=fsdp), mesh)
+        if kind == "train":
+            B = spec["shape"]["global_batch"]
+            nm = n_micro if n_micro is not None else max(1, B // dp)
+            tc = TrainConfig(global_batch=B, seq_len=spec["shape"]["seq_len"],
+                             remat=True)
+            step_fn = make_train_step(plan, tc, spec["lora_cfg"], n_micro=nm)
+            lora_sh = sharding.to_shardings(
+                sharding.param_specs(spec["lora"], mesh, fsdp=False), mesh)
+            opt_sh = sharding.to_shardings(
+                sharding.opt_specs(
+                    sharding.param_specs(spec["lora"], mesh, fsdp=False),
+                    spec["opt"]), mesh)
+            batch_sh = sharding.to_shardings(
+                sharding.batch_specs(spec["batch"], mesh), mesh)
+            step_sh = sharding.to_shardings(
+                jax.tree.map(lambda _: jax.sharding.PartitionSpec(), spec["step"]), mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(base_sh, lora_sh, opt_sh, step_sh, batch_sh),
+                out_shardings=(lora_sh, opt_sh, None),
+                donate_argnums=(1, 2))
+            lowered = jitted.lower(spec["base"], spec["lora"], spec["opt"],
+                                   spec["step"], spec["batch"])
+        elif kind == "prefill":
+            with_lora = "lora" in spec
+            step_fn = make_prefill_step(plan, with_lora=with_lora,
+                                        lora_scale=spec["lora_cfg"].scale)
+            cache_sh = sharding.to_shardings(
+                sharding.cache_specs(spec["cache"], mesh), mesh)
+            tok_sh = sharding.to_shardings(
+                sharding.batch_specs({"t": spec["tokens"]}, mesh)["t"], mesh)
+            args = [spec["base"], spec["tokens"], spec["cache"]]
+            in_sh = [base_sh, tok_sh, cache_sh]
+            donate = 2
+            if with_lora:
+                lora_sh = sharding.to_shardings(
+                    sharding.param_specs(spec["lora"], mesh, fsdp=False), mesh)
+                args.insert(1, spec["lora"])
+                in_sh.insert(1, lora_sh)
+                donate = 3
+            if "frontend" in spec:
+                args.append(spec["frontend"])
+                in_sh.append(sharding.to_shardings(
+                    sharding.batch_specs({"f": spec["frontend"]}, mesh)["f"], mesh))
+            jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                             donate_argnums=(donate,))
+            lowered = jitted.lower(*args)
+        else:  # decode
+            with_lora = "lora" in spec
+            step_fn = make_decode_step(plan, with_lora=with_lora,
+                                       lora_scale=spec["lora_cfg"].scale)
+            cache_sh = sharding.to_shardings(
+                sharding.cache_specs(spec["cache"], mesh), mesh)
+            tok_sh = sharding.to_shardings(
+                sharding.batch_specs({"t": spec["token"]}, mesh)["t"], mesh)
+            pos_sh = sharding.to_shardings(jax.sharding.PartitionSpec(), mesh)
+            if with_lora:
+                lora_sh = sharding.to_shardings(
+                    sharding.param_specs(spec["lora"], mesh, fsdp=False), mesh)
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(base_sh, lora_sh, tok_sh, cache_sh, pos_sh),
+                    donate_argnums=(3,))
+                lowered = jitted.lower(spec["base"], spec["lora"],
+                                       spec["token"], spec["cache"], spec["pos"])
+            else:
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(base_sh, tok_sh, cache_sh, pos_sh),
+                    donate_argnums=(2,))
+                lowered = jitted.lower(spec["base"], spec["token"],
+                                       spec["cache"], spec["pos"])
+    return lowered, spec
+
+
+def analyze_cell(arch: str, shape: str, *, multi_pod: bool = False,
+                 variant: str = "qloram", seq_shard: bool = True,
+                 fsdp: bool = True, n_micro: Optional[int] = None,
+                 head_shard: Optional[bool] = None,
+                 keep_text: bool = False) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, spec = lower_cell(arch, shape, mesh, variant=variant,
+                               seq_shard=seq_shard, fsdp=fsdp, n_micro=n_micro,
+                               head_shard=head_shard)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    hlo = hlo_analysis.analyze(text)
+    terms = hlo_analysis.roofline_terms(hlo)
+
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    cfg = spec["cfg"]
+    result = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": dict(mesh.shape), "n_devices": n_devices,
+        "kind": spec["kind"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes": int(mem.peak_memory_in_bytes),
+            "total_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30, 3),
+        },
+        "hlo": {k: v for k, v in hlo.items() if k != "collective_bytes_by_op"},
+        "collective_bytes_by_op": hlo["collective_bytes_by_op"],
+        "roofline": terms,
+    }
+    if keep_text:
+        result["hlo_text"] = text
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run_all(out_path: str, *, archs=None, shapes=None, meshes=("single", "multi"),
+            variant: str = "qloram"):
+    results: Dict[str, Any] = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    archs = archs or list(ARCHS)
+    shapes = shapes or list(SHAPES)
+    for arch in archs:
+        if arch not in ARCHS:
+            continue
+        for shape in shapes:
+            ok, why = cell_applicable(arch, shape)
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape}|{mesh_kind}"
+                if key in results and results[key].get("status") in ("ok", "skip"):
+                    print(f"[dryrun] {key}: cached ({results[key]['status']})",
+                          flush=True)
+                    continue
+                if not ok:
+                    results[key] = {"status": "skip", "reason": why}
+                    _save(out_path, results)
+                    print(f"[dryrun] {key}: SKIP ({why})", flush=True)
+                    continue
+                print(f"[dryrun] {key}: lowering...", flush=True)
+                try:
+                    r = analyze_cell(arch, shape, multi_pod=(mesh_kind == "multi"),
+                                     variant=variant)
+                    r["status"] = "ok"
+                    results[key] = r
+                    rt = r["roofline"]
+                    print(f"[dryrun] {key}: OK compile={r['compile_s']}s "
+                          f"mem/dev={r['memory']['total_per_device_gib']}GiB "
+                          f"bound={rt['bound']} "
+                          f"c/m/x={rt['compute_s']:.4f}/{rt['memory_s']:.4f}/"
+                          f"{rt['collective_s']:.4f}s", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    results[key] = {"status": "error", "error": repr(e),
+                                    "traceback": traceback.format_exc()[-3000:]}
+                    print(f"[dryrun] {key}: ERROR {e!r}", flush=True)
+                _save(out_path, results)
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skip")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error", flush=True)
+    return results
+
+
+def _save(path, results):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="qloram",
+                    choices=["qloram", "loram", "lora"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--meshes", default="single,multi")
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.out,
+                archs=[args.arch] if args.arch else None,
+                shapes=[args.shape] if args.shape else None,
+                meshes=tuple(args.meshes.split(",")), variant=args.variant)
+        return
+
+    r = analyze_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                     variant=args.variant)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(json.dumps({k: v for k, v in r.items() if k != "hlo_text"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

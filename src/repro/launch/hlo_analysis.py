@@ -1,0 +1,451 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a scan of 8 matmuls reports the FLOPs of 1), which would make
+every scan-over-layers model look ~n_layers× cheaper than it is.  This module
+re-derives the three roofline inputs by parsing the HLO module:
+
+  * FLOPs         — every ``dot`` (2 · prod(result) · prod(contracting dims)),
+                    multiplied by the loop trip counts along its call chain.
+  * HBM traffic   — Σ (operand + output bytes) over top-level materializing
+                    instructions × trip count.  Fused subcomputations are
+                    skipped (their traffic is the fusion node's operands and
+                    outputs) — i.e. the standard "every non-fused op
+                    round-trips HBM" model.
+  * Collective bytes — Σ operand bytes of all-reduce / all-gather /
+                    reduce-scatter / all-to-all / collective-permute /
+                    ragged-all-to-all × trip count.
+
+Trip counts come from each while-loop's condition computation (scan emits
+``compare(ind, constant(N)), direction=LT``); the max integer constant in the
+condition is used, which is exact for lax.scan/fori loops.
+
+All shapes in post-SPMD HLO are per-device, so totals are per-chip; the
+roofline divides by per-chip peak rates (equivalent to the spec's
+global-total / (chips × rate) form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "c64": 8, "c128": 16, "token": 0, "f4e2m1fn": 0.5, "f8e8m0fnu": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# ops that do not really materialize / move HBM bytes
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+}
+
+# HBM-traffic model (TPU execution assumption): only ops that a TPU backend
+# actually materializes move HBM bytes; bare elementwise / layout ops are
+# assumed fused into their consumers (XLA:TPU fuses far more aggressively
+# than the XLA:CPU HLO we parse).  The unfiltered sum is still reported as
+# ``traffic_upper_bytes`` (pessimistic bound).
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "sort", "select-and-scatter", "triangular-solve", "cholesky", "fft",
+} | set(COLLECTIVE_OPS)
+
+_SHAPE_RE = re.compile(r"(\w[\w\d]*)\[([\d,]*)\]")
+# lazy scan to the first " op(" token — types may contain /*index=N*/ comments
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\(")
+# computation headers are the only lines ending in "{" that contain "->"
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str, cap: Optional[float] = None) -> float:
+    """bytes of one (possibly tuple) HLO type string.
+
+    ``cap`` bounds the per-element width of *float* tensors: XLA:CPU (the
+    dry-run backend) legalizes bf16 dots by upcasting operands to f32, so the
+    compiled HLO carries f32 copies of every weight/activation that a TPU
+    backend would keep in bf16.  cap=2 models the TPU dtype behaviour; raw
+    (uncapped) numbers are reported alongside.
+    """
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        width = _DTYPE_BYTES[dt]
+        if cap is not None and dt in ("f32", "f64"):
+            width = min(width, cap)
+        total += n * width
+    return total
+
+
+def _first_dims(type_str: str) -> Optional[Tuple[int, ...]]:
+    """dims of the first array shape in a type string (None for tuples with
+    nothing parseable)."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+
+
+def _shape_elems(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+def _split_operands(line: str, op: str) -> Tuple[str, str]:
+    """Return (operand_segment, attr_tail) of an instruction line."""
+    i = line.find(op + "(")
+    if i < 0:
+        return "", ""
+    j = i + len(op) + 1
+    depth = 1
+    k = j
+    while k < len(line) and depth:
+        if line[k] == "(":
+            depth += 1
+        elif line[k] == ")":
+            depth -= 1
+        k += 1
+    return line[j : k - 1], line[k:]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line and "=" not in line.split("(", 1)[0]:
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = Computation(hdr.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        seg, _tail = _split_operands(line, op)
+        operands = _OPERAND_NAME_RE.findall(seg)
+        ins = Instr(name, type_str, op, operands, line)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_INT_RE.findall(ins.line):
+            best = max(best, int(c))
+    return best
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 0
+    for _, dims in _shape_elems(ins.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs = comp.by_name.get(ins.operands[0])
+        if lhs is not None:
+            shapes = _shape_elems(lhs.type_str)
+            if shapes:
+                dims = shapes[0][1]
+                for ci in m.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def analyze(text: str) -> Dict[str, float]:
+    """Returns {"flops", "traffic_bytes", "collective_bytes",
+    "collective_bytes_by_op": {...}, "dot_flops_by_comp": ...}."""
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+
+    # --- call-multiplier propagation ------------------------------------
+    mult: Dict[str, float] = defaultdict(float)
+    fused: Dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS in call order; HLO call graphs are DAGs
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            callees: List[Tuple[str, float, bool]] = []
+            if ins.op == "while":
+                body = _attr(ins.line, "body")
+                cond = _attr(ins.line, "condition")
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    callees.append((body, float(trip), False))
+                if cond:
+                    callees.append((cond, float(trip), False))
+            elif ins.op == "fusion":
+                callee = _attr(ins.line, "calls")
+                if callee:
+                    callees.append((callee, 1.0, True))
+            elif ins.op in ("call", "map", "reduce", "reduce-window", "scatter",
+                            "select-and-scatter", "sort", "all-reduce",
+                            "reduce-scatter", "conditional"):
+                for key in ("to_apply", "calls", "true_computation",
+                            "false_computation", "branch_computations"):
+                    callee = _attr(ins.line, key)
+                    if callee:
+                        callees.append((callee, 1.0, ins.op != "call"))
+            for callee, k, is_fused in callees:
+                mult[callee] += mult[cname] * k
+                fused[callee] = fused[callee] or is_fused
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    CAP = 2.0  # model bf16 on TPU for float tensors (see _shape_bytes)
+    flops = 0.0
+    traffic = 0.0
+    traffic_raw = 0.0
+    traffic_upper = 0.0
+    coll_bytes = 0.0
+    coll_raw = 0.0
+    coll_by_op: Dict[str, float] = defaultdict(float)
+    coll_count: Dict[str, int] = defaultdict(int)
+    # attention-core attribution (flash-kernel projection, see layers.py)
+    attn_traffic = 0.0
+    attn_ideal = 0.0
+    # nf4-dequant attribution (fused nf4_matmul kernel projection): kernel
+    # reads packed codes (0.53 B/weight) and keeps the dequantized tile in
+    # VMEM — vs the jnp path's read-codes + write-bf16 + read-bf16 (≥4 B).
+    nf4_traffic = 0.0
+    NF4_KERNEL_RATIO = 0.53 / 4.0
+
+    _NF4_PASSTHROUGH = {"fusion", "convert", "copy", "bitcast", "transpose",
+                        "reshape", "all-gather", "all-reduce", "dynamic-slice"}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = fused.get(cname, False)
+        # dataflow pass: tensors derived from packed NF4 codes (u8 ≥ 1 MB).
+        # The fused nf4_matmul kernel eliminates every HBM round-trip of the
+        # dequantized weight; we track the unpack→convert→gather→dot chain.
+        nf4_derived: set = set()
+        for ins in comp.instrs:
+            has_u8 = any(
+                comp.by_name[o].type_str.startswith("u8[")
+                and _shape_bytes(comp.by_name[o].type_str) >= 1e6
+                for o in ins.operands if o in comp.by_name)
+            from_derived = (ins.op in _NF4_PASSTHROUGH and any(
+                o in nf4_derived for o in ins.operands))
+            if has_u8 or from_derived or "nf4_dequant" in ins.line:
+                nf4_derived.add(ins.name)
+        for ins in comp.instrs:
+            if ins.op == "dot" or (ins.op == "convolution"):
+                flops += m * _dot_flops(ins, comp)
+            if ins.op in COLLECTIVE_OPS:
+                ob = sum(_shape_bytes(comp.by_name[o].type_str, CAP)
+                         for o in ins.operands if o in comp.by_name)
+                raw = sum(_shape_bytes(comp.by_name[o].type_str)
+                          for o in ins.operands if o in comp.by_name)
+                if ob == 0.0:  # fall back to result size
+                    ob = _shape_bytes(ins.type_str, CAP)
+                    raw = _shape_bytes(ins.type_str)
+                coll_bytes += m * ob
+                coll_raw += m * raw
+                coll_by_op[ins.op] += m * ob
+                coll_count[ins.op] += int(m)
+            if not in_fusion and ins.op not in _NO_TRAFFIC:
+                out_dims = _first_dims(ins.type_str)
+                if ins.op == "dynamic-update-slice" or (
+                        ins.op == "fusion" and "dynamic-update-slice" in ins.line):
+                    # in-place aliased write: read update + write slice only
+                    upd = min((_shape_bytes(comp.by_name[o].type_str, CAP)
+                               for o in ins.operands[:2] if o in comp.by_name),
+                              default=_shape_bytes(ins.type_str, CAP))
+                    moved = m * 2 * upd
+                    raw_moved = moved * 2
+                elif ins.op == "dynamic-slice":
+                    moved = m * 2 * _shape_bytes(ins.type_str, CAP)
+                    raw_moved = moved * 2
+                else:
+                    # scan-buffer pattern: an operand shaped exactly like the
+                    # output (or vice versa) with one extra leading dim is a
+                    # stacked layer buffer sliced/updated in place — count the
+                    # slice, not the buffer (XLA aliases it).
+                    ob = 0.0
+                    raw_ob = 0.0
+                    update_bytes = None   # output aliases a stacked buffer
+                    for o in ins.operands:
+                        src = comp.by_name.get(o)
+                        if src is None:
+                            continue
+                        sdims = _first_dims(src.type_str)
+                        if (out_dims and sdims and len(sdims) == len(out_dims) + 1
+                                and sdims[1:] == out_dims):
+                            ob += _shape_bytes(ins.type_str, CAP)     # slice read
+                            raw_ob += _shape_bytes(ins.type_str)
+                            continue
+                        if (out_dims and sdims and len(out_dims) == len(sdims) + 1
+                                and out_dims[1:] == sdims):
+                            # update pattern: output IS the buffer (aliased);
+                            # written bytes = the update slice, not the buffer
+                            update_bytes = (_shape_bytes(src.type_str, CAP),
+                                            _shape_bytes(src.type_str))
+                            ob += update_bytes[0]
+                            raw_ob += update_bytes[1]
+                            continue
+                        ob += _shape_bytes(src.type_str, CAP)
+                        raw_ob += _shape_bytes(src.type_str)
+                    out_b = (_shape_bytes(ins.type_str, CAP), _shape_bytes(ins.type_str))
+                    if update_bytes is not None:
+                        out_b = update_bytes
+                    moved = m * (ob + out_b[0])
+                    raw_moved = m * (raw_ob + out_b[1])
+                if ins.op in _TRAFFIC_OPS:
+                    traffic += moved
+                    traffic_raw += raw_moved
+                    if ins.name in nf4_derived:
+                        nf4_traffic += moved
+                    elif ins.op == "dot":
+                        # kernel also eliminates the bf16 weight-side read
+                        nf4_traffic += m * sum(
+                            _shape_bytes(comp.by_name[o].type_str, CAP)
+                            for o in ins.operands
+                            if o in nf4_derived and o in comp.by_name)
+                    if "attention_core" in ins.line:
+                        attn_traffic += moved
+                        if ins.op == "dot" and "bqhd,bkhd" in ins.line:
+                            # flash-kernel HBM traffic ≈ read q,k,v + write o
+                            # ≈ 2 × (qk-dot operand bytes)
+                            ob = sum(_shape_bytes(comp.by_name[o].type_str, CAP)
+                                     for o in ins.operands if o in comp.by_name)
+                            attn_ideal += m * 2.0 * ob
+                traffic_upper += moved
+
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "attention_core_traffic_bytes": attn_traffic,
+        "attention_flash_ideal_bytes": attn_ideal,
+        "nf4_dequant_traffic_bytes": nf4_traffic,
+        "traffic_flash_projected_bytes": (
+            traffic - attn_traffic + attn_ideal
+            - nf4_traffic * (1.0 - NF4_KERNEL_RATIO)),
+        "traffic_raw_bytes": traffic_raw,
+        "traffic_upper_bytes": traffic_upper,
+        "collective_bytes": coll_bytes,
+        "collective_raw_bytes": coll_raw,
+        "collective_bytes_by_op": dict(coll_by_op),
+        "collective_counts": dict(coll_count),
+        "n_computations": len(comps),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def roofline_terms(analysis: Dict[str, float]) -> Dict[str, float]:
+    """Per-chip seconds for each roofline term (HLO is per-device post-SPMD,
+    so dividing local totals by per-chip rates equals the spec's
+    global/(chips×rate) form)."""
+    compute_s = analysis["flops"] / PEAK_FLOPS_BF16
+    memory_s = analysis["traffic_bytes"] / HBM_BW
+    collective_s = analysis["collective_bytes"] / ICI_BW
+    bound = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda t: t[1],
+    )[0]
+    total = max(compute_s, memory_s, collective_s)
+    out = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bound": bound,
+        "roofline_fraction": compute_s / total if total else 0.0,
+    }
+    proj = analysis.get("traffic_flash_projected_bytes")
+    if proj is not None and proj < analysis["traffic_bytes"]:
+        mem_p = proj / HBM_BW
+        total_p = max(compute_s, mem_p, collective_s)
+        out["memory_s_flash"] = mem_p
+        out["roofline_fraction_flash"] = compute_s / total_p if total_p else 0.0
+        out["bound_flash"] = max(
+            ("compute", compute_s), ("memory", mem_p),
+            ("collective", collective_s), key=lambda t: t[1])[0]
+    return out

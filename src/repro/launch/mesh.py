@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A v5e pod is 16×16 = 256 chips; ``multi_pod=True`` prepends a ``pod`` axis
+(2 pods = 512 chips for the dry-run; the same function generalizes to N pods
+for 1000+-node deployments — the pod axis is pure data parallelism whose
+per-step traffic under LoRAM is only the rank-r adapter gradients).
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/smoke."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,99 @@
+"""Production training launcher.
+
+On a real multi-host TPU deployment each host runs this same entrypoint
+(`jax.distributed.initialize()` picks up the cluster env); on this CPU
+container it runs the smoke-scale config end-to-end.
+
+  python -m repro.launch.train --arch yi-34b --variant qloram --steps 200 \
+      --ratio 0.65 --ckpt /tmp/ckpt [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (LoRAConfig, LoRAMConfig, TrainConfig, get_arch,
+                           get_smoke)
+from repro.core import loram
+from repro.data import AlignmentCorpus, SFTDataset, batch_iterator
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import init_params, make_plan
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="qloram",
+                    choices=["lora", "loram", "qloram"])
+    ap.add_argument("--method", default="stru",
+                    choices=["rand", "stru", "semi", "unst"])
+    ap.add_argument("--ratio", type=float, default=0.65)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--align-steps", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    if "JAX_COORDINATOR" in os.environ:  # multi-host cluster
+        jax.distributed.initialize()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    plan = make_plan(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(plan, rng)
+
+    loram_cfg = LoRAMConfig(
+        method=args.method if args.variant != "lora" else "none",
+        ratio=args.ratio if args.variant != "lora" else 0.0,
+        quantize=args.variant == "qloram")
+    lora_cfg = LoRAConfig(rank=args.rank)
+
+    align_iter = None
+    if args.align_steps:
+        corpus = AlignmentCorpus(cfg.vocab_size, args.seq_len)
+        align_iter = batch_iterator(corpus, batch_size=args.global_batch)
+
+    setup = loram.setup(plan, params, loram_cfg, lora_cfg, rng,
+                        align_batches=align_iter,
+                        align_steps=args.align_steps)
+    rep = loram.storage_report(params, setup.small_params)
+    print(f"[train] {cfg.name}: parameter reduction "
+          f"{rep['reduction_ratio']:.2f}x, HBM reduction "
+          f"{rep['hbm_reduction']:.2f}x")
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else None)
+    tc = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
+                     learning_rate=args.lr, total_steps=args.steps,
+                     remat=not args.smoke)
+    ds = SFTDataset(cfg.vocab_size, args.seq_len)
+    fe_shape = None
+    if cfg.family == "encdec":
+        fe_shape = (cfg.enc_len, cfg.d_model)
+    elif cfg.family == "vlm":
+        fe_shape = (cfg.n_patches, cfg.d_model)
+
+    trainer = Trainer(setup.small_plan, setup.small_params, setup.lora0, tc,
+                      lora_cfg, mesh=mesh, n_micro=args.n_micro,
+                      checkpoint_dir=args.ckpt)
+    state = trainer.train(
+        batch_iterator(ds, batch_size=args.global_batch,
+                       start_step=trainer.restore_or_init().step,
+                       frontend_shape=fe_shape),
+        steps=args.steps)
+    print(f"[train] done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

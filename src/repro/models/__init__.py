@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    Plan,
+    decode_step,
+    forward,
+    init_cache,
+    init_lora,
+    init_params,
+    lora_param_count,
+    make_plan,
+    prefill,
+)

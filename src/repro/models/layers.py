@@ -1,0 +1,270 @@
+"""Layer primitives shared by every architecture in the zoo.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Every
+weight-bearing projection routes through :func:`dense`, which is the single
+LoRA / NF4-quantization / sparsity-mask injection point for the whole
+framework — the LoRAM technique composes with any architecture that uses it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.quant import nf4
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# The universal projection: base weight (+NF4) (+mask) (+LoRA)
+# ---------------------------------------------------------------------------
+
+def dense(
+    x: Array,
+    w,                               # Array | nf4.QTensor
+    lora: Optional[dict] = None,     # {"a": (r, d_in), "b": (d_out, r)}
+    lora_scale: float = 2.0,
+    mask: Optional[Array] = None,    # element mask for semi/unst LoRAM
+    accum_fp32: bool = False,        # fp32 MXU accumulation (lm_head/loss path)
+) -> Array:
+    """``y = x @ W (∘M) + scale · (x @ Aᵀ) @ Bᵀ (∘M applied to BA via stop-grad
+    masking of the delta contribution — see DESIGN.md C2 note)``.
+
+    x: (..., d_in); returns (..., d_out).
+    """
+    if isinstance(w, nf4.QTensor):
+        wd = (nf4.dequantize_stacked(w, dtype=x.dtype) if w.codes.ndim == 3
+              else nf4.dequantize(w, dtype=x.dtype))
+    else:
+        wd = w.astype(x.dtype) if w.dtype != x.dtype else w
+    if mask is not None:
+        wd = wd * mask.astype(wd.dtype)
+    if accum_fp32:
+        y = jnp.matmul(x, wd, preferred_element_type=jnp.float32)
+    else:
+        y = x @ wd
+    if lora is not None:
+        a = lora["a"].astype(x.dtype)    # (r, d_in)
+        b = lora["b"].astype(x.dtype)    # (d_out, r)
+        if mask is not None:
+            # Non-structured LoRAM (paper C2): the delta must live on the same
+            # support as the pruned base.  Materialising (BA)∘M is O(d_in·d_out)
+            # per call; we instead mask the *base* above and keep the low-rank
+            # path dense — per paper C3 the recovery for non-structured LoRAM
+            # is the identity, so the trained factors are used as-is.
+            pass
+        y = y + ((x @ a.T) @ b.T) * jnp.asarray(lora_scale, x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Backward-dtype hygiene
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_cast(x, dtype):
+    """Identity forward; casts the cotangent to ``dtype`` on the way back.
+
+    Inserted at the lm-head boundary: the CE loss and logits stay fp32, but
+    without this the fp32 cotangent propagates through every backward matmul,
+    forcing f32 copies of all weights (observed: +14 TB HBM traffic / step on
+    yi-34b train_4k — see EXPERIMENTS.md §Perf iteration 1)."""
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, ()
+
+
+def _grad_cast_bwd(dtype, _res, g):
+    return (g.astype(dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: Array, n_rep: int) -> Array:
+    """(B, S, K, D) → (B, S, K·n_rep, D) by group broadcast."""
+    if n_rep == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, d)).reshape(b, s, kh * n_rep, d)
+
+
+def _softmax_attn(q, k, v, mask, scale):
+    # q: (B, Sq, H, D), k/v: (B, Sk, H, D), mask broadcastable to (B, H, Sq, Sk)
+    # Scope name is load-bearing: hlo_analysis attributes the S² score traffic
+    # to "attention_core" and substitutes the flash-kernel traffic for the
+    # kernel-projected roofline (the Pallas kernel can't lower on this CPU
+    # host; kernels/flash_attention.py is the TPU execution path).
+    with jax.named_scope("attention_core"):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk_q: int = 0,
+    segment_mask: Optional[Array] = None,
+) -> Array:
+    """Multi-head attention with GQA already expanded.
+
+    chunk_q > 0 enables a flash-style jnp implementation: scan over query
+    chunks with online softmax over key blocks — O(chunk·S) live memory, which
+    is what keeps the 32k-prefill dry-run from materialising S² score tensors.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    def mask_for(qpos, kpos):
+        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return m
+
+    qpos_all = jnp.arange(sq) + q_offset
+    kpos_all = jnp.arange(sk)
+
+    # banded path: sliding-window attention only ever needs the last
+    # ``window`` keys per query — compute (chunk_q, window+chunk_q) tiles
+    # instead of masked (S, S) scores (gemma3 local layers: 25 GiB → ~2 GiB
+    # live at train_4k; see EXPERIMENTS.md §Perf iteration 12)
+    # (gated to ≥8k: at 4k the per-chunk K/V re-reads beat the score savings
+    # — measured, §Perf iteration 12)
+    banded = (causal and window and sq == sk and sq >= 2 * window
+              and q_offset == 0 and sq >= 8192)
+
+    if not banded and (not chunk_q or sq <= chunk_q):
+        m = mask_for(qpos_all, kpos_all)[None, None]
+        if segment_mask is not None:
+            m = m & segment_mask
+        return _softmax_attn(q, k, v, m, scale)
+
+    if banded:
+        cq = max(128, min(chunk_q or window, window))
+        cq = min(cq, sq)
+        while sq % cq:
+            cq //= 2
+        span = min(window + cq, sk)
+        n_chunks = sq // cq
+        qc = q.reshape(b, n_chunks, cq, h, d).transpose(1, 0, 2, 3, 4)
+
+        def body_w(_, args):
+            i, qi = args
+            start = jnp.maximum(i * cq + cq - span, 0)
+            kw = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vw = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            qpos = i * cq + jnp.arange(cq)
+            kpos = start + jnp.arange(span)
+            m = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
+            out = _softmax_attn(qi, kw, vw, m[None, None], scale)
+            return None, out
+
+        _, outs = lax.scan(body_w, None, (jnp.arange(n_chunks), qc))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+    assert sq % chunk_q == 0, (sq, chunk_q)
+    n_chunks = sq // chunk_q
+    qc = q.reshape(b, n_chunks, chunk_q, h, d).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, qi = args
+        qpos = i * chunk_q + jnp.arange(chunk_q) + q_offset
+        m = (kpos_all[None, :] <= qpos[:, None]) if causal else jnp.ones((chunk_q, sk), bool)
+        if window:
+            m &= kpos_all[None, :] > qpos[:, None] - window
+        out = _softmax_attn(qi, k, v, m[None, None], scale)
+        return None, out
+
+    _, outs = lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, cache_len: Array,
+                     window: int = 0) -> Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, H, D); cache_len: () current length
+    (the new token's K/V must already be written at position cache_len-1).
+    """
+    b, smax, h, d = k_cache.shape
+    scale = 1.0 / (d ** 0.5)
+    kpos = jnp.arange(smax)
+    valid = kpos < cache_len
+    if window:
+        valid &= kpos >= cache_len - window
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: Array, p: dict, lora: Optional[dict], lora_scale: float,
+           masks: Optional[dict] = None) -> Array:
+    def l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    def m(name):
+        return None if masks is None else masks.get(name)
+
+    g = dense(x, p["wg"], l("wg"), lora_scale, m("wg"))
+    u = dense(x, p["wu"], l("wu"), lora_scale, m("wu"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(h, p["wd"], l("wd"), lora_scale, m("wd"))

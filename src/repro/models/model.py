@@ -1,0 +1,672 @@
+"""Unified model: every assigned architecture runs through this file.
+
+A model is a :class:`Plan` — the config plus an expanded list of stages
+(scan-over-superblock).  LoRAM structured pruning rewrites the Plan (smaller
+``StageDims``, possibly split stages for keep-first/last), which is the
+"train small" model; the original Plan is the "infer large" model.
+
+Three entry points:
+  * :func:`forward`      — full-sequence logits (training / eval / prefill)
+  * :func:`prefill`      — forward + populated KV/SSM caches
+  * :func:`decode_step`  — one-token generation against caches
+
+Params, LoRA adapters, masks and caches are plain nested dicts; stacked
+(leading ``n_rep`` axis) inside each stage so the whole depth runs under one
+``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import BlockSpec, LoRAConfig, ModelConfig, Stage, StageDims
+from repro.models import layers as L
+from repro.models.moe import moe_mlp
+from repro.models.ssm import mamba_block
+from repro.quant import nf4
+
+Array = jax.Array
+PyTree = Any
+
+LONG_SEQ_CHUNK = 512        # flash-style q-chunking threshold for jnp attention
+LONG_SEQ_THRESHOLD = 8192   # chunk for 32k+ prefill; at 4k full scores beat re-reading KV per chunk
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Plan:
+    cfg: ModelConfig
+    stages: Tuple[Stage, ...]
+    enc_stages: Tuple[Stage, ...] = ()
+
+    @property
+    def name(self):
+        return self.cfg.name
+
+
+def make_plan(cfg: ModelConfig) -> Plan:
+    return Plan(cfg, cfg.stages(), cfg.encoder_stages())
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def _block_param_shapes(spec: BlockSpec, d: StageDims) -> Dict[str, tuple]:
+    dm, hd = d.d_model, d.head_dim
+    if spec.kind in ("attn", "enc_attn", "cross_attn"):
+        return {
+            "ln": (dm,),
+            "wq": (dm, d.n_heads * hd),
+            "wk": (dm, d.n_kv_heads * hd),
+            "wv": (dm, d.n_kv_heads * hd),
+            "wo": (d.n_heads * hd, dm),
+        }
+    if spec.kind == "mlp":
+        return {"ln": (dm,), "wg": (dm, d.d_ff), "wu": (dm, d.d_ff), "wd": (d.d_ff, dm)}
+    if spec.kind == "moe":
+        sh: Dict[str, tuple] = {
+            "ln": (dm,),
+            "router": (dm, d.n_experts),
+            "we_g": (d.n_experts, dm, d.moe_d_ff),
+            "we_u": (d.n_experts, dm, d.moe_d_ff),
+            "we_d": (d.n_experts, d.moe_d_ff, dm),
+        }
+        if d.n_shared_experts:
+            sh.update({"ws_g": (dm, d.shared_d_ff), "ws_u": (dm, d.shared_d_ff),
+                       "ws_d": (d.shared_d_ff, dm)})
+        if d.dense_residual_d_ff:
+            sh.update({"wr_g": (dm, d.dense_residual_d_ff), "wr_u": (dm, d.dense_residual_d_ff),
+                       "wr_d": (d.dense_residual_d_ff, dm)})
+        return sh
+    if spec.kind == "mamba":
+        di, N, H = d.d_inner, d.ssm_state, d.ssm_heads
+        return {
+            "ln": (dm,),
+            "in_proj": (dm, 2 * di + 2 * N + H),
+            "conv_w": (d.conv_width, di + 2 * N),
+            "dt_bias": (H,),
+            "a_log": (H,),
+            "d_skip": (H,),
+            "out_norm": (di,),
+            "out_proj": (di, dm),
+        }
+    raise ValueError(spec.kind)
+
+
+def _init_block(key, spec: BlockSpec, d: StageDims, dtype):
+    shapes = _block_param_shapes(spec, d)
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for (name, shp), k in zip(sorted(shapes.items()), keys):
+        if name in ("ln", "out_norm"):
+            out[name] = jnp.zeros(shp, dtype)
+        elif name == "dt_bias":
+            out[name] = jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, shp[0]))).astype(jnp.float32)
+        elif name == "a_log":
+            out[name] = jnp.log(jnp.linspace(1.0, 16.0, shp[0])).astype(jnp.float32)
+        elif name == "d_skip":
+            out[name] = jnp.ones(shp, jnp.float32)
+        elif len(shp) == 1:
+            out[name] = jnp.zeros(shp, dtype)
+        elif len(shp) == 3:  # stacked experts / conv
+            if name == "conv_w":
+                out[name] = (jax.random.normal(k, shp, jnp.float32) * (shp[0] ** -0.5)).astype(dtype)
+            else:
+                out[name] = (jax.random.normal(k, shp, jnp.float32) * (shp[1] ** -0.5)).astype(dtype)
+        else:
+            out[name] = _init_dense(k, shp[0], shp[1], dtype)
+    return out
+
+
+def _init_stage(key, stage: Stage, dtype):
+    """Non-shared blocks stacked over n_rep; shared blocks unstacked."""
+    stacked, shared = {}, {}
+    for i, spec in enumerate(stage.superblock):
+        bk = jax.random.fold_in(key, i)
+        if spec.shared:
+            shared[spec.name] = _init_block(bk, spec, stage.dims, dtype)
+        else:
+            reps = [_init_block(jax.random.fold_in(bk, r), spec, stage.dims, dtype)
+                    for r in range(stage.n_rep)]
+            stacked[spec.name] = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    return {"stacked": stacked, "shared": shared}
+
+
+def init_params(plan: Plan, rng: Array, dtype=jnp.bfloat16) -> PyTree:
+    cfg = plan.cfg
+    k_embed, k_head, k_st, k_enc = jax.random.split(rng, 4)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init_dense(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    params["stages"] = {st.name: _init_stage(jax.random.fold_in(k_st, i), st, dtype)
+                        for i, st in enumerate(plan.stages)}
+    if plan.enc_stages:
+        params["enc_stages"] = {st.name: _init_stage(jax.random.fold_in(k_enc, i), st, dtype)
+                                for i, st in enumerate(plan.enc_stages)}
+        params["enc_final_ln"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# LoRA init  (B zero-init, A gaussian — Hu et al. 2022)
+# ---------------------------------------------------------------------------
+
+LORA_TARGET_SHAPES = {
+    # block-kind → param names eligible for adapters
+    "attn": ("wq", "wk", "wv", "wo"),
+    "enc_attn": ("wq", "wk", "wv", "wo"),
+    "cross_attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("wg", "wu", "wd"),
+    "moe": ("ws_g", "ws_u", "ws_d", "wr_g", "wr_u", "wr_d"),
+    "mamba": ("in_proj", "out_proj"),
+}
+
+# generic-target → per-kind param-name aliases (so LoRAConfig.targets stays
+# family-agnostic: "wg" covers mlp.wg, moe.ws_g and moe.wr_g, etc.)
+_ALIAS = {
+    "wq": ("wq",), "wk": ("wk",), "wv": ("wv",), "wo": ("wo",),
+    "wg": ("wg", "ws_g", "wr_g"), "wu": ("wu", "ws_u", "wr_u"),
+    "wd": ("wd", "ws_d", "wr_d"),
+    "in_proj": ("in_proj",), "out_proj": ("out_proj",),
+}
+# mamba projections always get adapters when family is ssm/hybrid
+DEFAULT_SSM_EXTRA = ("in_proj", "out_proj")
+
+
+def _lora_names_for(spec: BlockSpec, lora_cfg: LoRAConfig):
+    allowed = set()
+    targets = set(lora_cfg.targets) | set(DEFAULT_SSM_EXTRA)
+    for t in targets:
+        allowed.update(_ALIAS.get(t, (t,)))
+    return tuple(n for n in LORA_TARGET_SHAPES[spec.kind] if n in allowed)
+
+
+def _init_lora_block(key, spec: BlockSpec, d: StageDims, lora_cfg: LoRAConfig, dtype):
+    shapes = _block_param_shapes(spec, d)
+    out = {}
+    for i, name in enumerate(_lora_names_for(spec, lora_cfg)):
+        if name not in shapes:
+            continue
+        d_in, d_out = shapes[name]
+        k = jax.random.fold_in(key, i)
+        out[name] = {
+            "a": (jax.random.normal(k, (lora_cfg.rank, d_in), jnp.float32) * (d_in ** -0.5)).astype(dtype),
+            "b": jnp.zeros((d_out, lora_cfg.rank), dtype),
+        }
+    return out
+
+
+def init_lora(plan: Plan, lora_cfg: LoRAConfig, rng: Array) -> PyTree:
+    dtype = jnp.dtype(lora_cfg.dtype)
+    cfg = plan.cfg
+
+    def stage_lora(key, stage: Stage):
+        stacked, shared = {}, {}
+        for i, spec in enumerate(stage.superblock):
+            bk = jax.random.fold_in(key, i)
+            blk = _init_lora_block(bk, spec, stage.dims, lora_cfg, dtype)
+            if not blk:
+                continue
+            if spec.shared:
+                shared[spec.name] = blk
+            else:
+                reps = [
+                    _init_lora_block(jax.random.fold_in(bk, r + 1), spec, stage.dims, lora_cfg, dtype)
+                    for r in range(stage.n_rep)
+                ]
+                stacked[spec.name] = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+        return {"stacked": stacked, "shared": shared}
+
+    out: Dict[str, Any] = {
+        "stages": {st.name: stage_lora(jax.random.fold_in(rng, i), st)
+                   for i, st in enumerate(plan.stages)}
+    }
+    if plan.enc_stages:
+        out["enc_stages"] = {st.name: stage_lora(jax.random.fold_in(rng, 100 + i), st)
+                             for i, st in enumerate(plan.enc_stages)}
+    if "lm_head" in lora_cfg.targets and not cfg.tie_embeddings:
+        k = jax.random.fold_in(rng, 999)
+        out["lm_head"] = {
+            "a": (jax.random.normal(k, (lora_cfg.rank, cfg.d_model), jnp.float32)
+                  * (cfg.d_model ** -0.5)).astype(dtype),
+            "b": jnp.zeros((cfg.vocab_size, lora_cfg.rank), dtype),
+        }
+    return out
+
+
+def lora_param_count(lora: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _sub(d: Optional[dict], name: str) -> Optional[dict]:
+    if d is None:
+        return None
+    return d.get(name)
+
+
+def _attn_block(
+    x, bp, blora, d: StageDims, *,
+    kind: str, window: int, positions, theta: float, scale_l: float,
+    enc_out=None, cache=None, pos=None, masks=None,
+):
+    B = x.shape[0]
+    hd, H, K = d.head_dim, d.n_heads, d.n_kv_heads
+    xn = L.rms_norm(x, bp["ln"])
+    kv_src = enc_out if kind == "cross_attn" else xn
+
+    def pr(n):
+        return L.dense(xn if n == "wq" else kv_src, bp[n], _sub(blora, n), scale_l,
+                       None if masks is None else masks.get(n))
+
+    q = pr("wq").reshape(B, -1, H, hd)
+    if kind == "cross_attn" and cache is not None and "k" in cache:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = pr("wk").reshape(B, -1, K, hd)
+        v = pr("wv").reshape(B, -1, K, hd)
+        new_cache = None
+
+    if kind != "cross_attn":
+        q = L.apply_rope(q, positions, theta)
+        k = L.apply_rope(k, positions, theta)
+
+    if cache is not None and kind != "cross_attn":
+        # decode or prefill-write
+        cache_size = cache["k"].shape[1]
+        if q.shape[1] == 1:  # decode step
+            slot = pos % cache_size
+            ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            if window:
+                kpos = pos - ((pos - jnp.arange(cache_size)) % cache_size)
+                valid = kpos >= 0
+            else:
+                valid = jnp.arange(cache_size) <= pos
+            # GQA-grouped decode attention: contract against the K-head cache
+            # directly — repeat_kv would read H/K× (7× for yi-34b) more cache
+            # bytes per token (§Perf iteration 9)
+            B_, gs = q.shape[0], H // K
+            scale = 1.0 / (hd ** 0.5)
+            qg = q.reshape(B_, K, gs, hd)                 # (B, K, G, d)
+            logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32) * scale
+            logits = jnp.where(valid[None, None, None, :], logits, L.NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+            out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
+            out = out.reshape(B_, 1, H, hd)
+        else:  # prefill: full attention then write cache
+            out, new_cache = _prefill_attn_and_cache(_shard_heads(q), k, v, cache,
+                                                     window, H // K)
+    else:
+        kk = _shard_heads(L.repeat_kv(k, H // K))
+        vv = _shard_heads(L.repeat_kv(v, H // K))
+        q = _shard_heads(q)
+        causal = kind == "attn"
+        S = q.shape[1]
+        # adaptive q-chunk: bound live scores to ~2^21 elems per (batch, head)
+        chunk_q = max(64, (1 << 21) // S) if S >= LONG_SEQ_THRESHOLD else (
+            min(window, 512) if (causal and window and S >= 2 * window) else 0)
+        out = _shard_heads(
+            L.attention(q, kk, vv, causal=causal, window=window if causal else 0,
+                        chunk_q=chunk_q))
+        if kind == "cross_attn" and cache is not None:
+            new_cache = {"k": k, "v": v}
+
+    out = out.reshape(B, -1, H * hd)
+    out = L.dense(out, bp["wo"], _sub(blora, "wo"), scale_l,
+                  None if masks is None else masks.get("wo"))
+    res = x + out.astype(x.dtype)
+    return (res, new_cache) if cache is not None else (res, None)
+
+
+def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
+    S = q.shape[1]
+    cache_size = cache["k"].shape[1]
+    kk = L.repeat_kv(k, n_rep)
+    vv = L.repeat_kv(v, n_rep)
+    chunk_q = max(64, (1 << 21) // S) if S >= LONG_SEQ_THRESHOLD else 0
+    out = L.attention(q, kk, vv, causal=True, window=window, chunk_q=chunk_q)
+    kw = k.astype(cache["k"].dtype)
+    vw = v.astype(cache["v"].dtype)
+    if S >= cache_size:
+        tail_k, tail_v = kw[:, -cache_size:], vw[:, -cache_size:]
+        pos0 = S - cache_size
+        slots = (pos0 + jnp.arange(cache_size)) % cache_size
+        ck = cache["k"].at[:, slots].set(tail_k)
+        cv = cache["v"].at[:, slots].set(tail_v)
+    else:
+        ck = lax.dynamic_update_slice(cache["k"], kw, (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], vw, (0, 0, 0, 0))
+    return out, {"k": ck, "v": cv}
+
+
+def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelConfig,
+                 *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None):
+    new_cache = None
+    if spec.kind in ("attn", "enc_attn", "cross_attn"):
+        x, new_cache = _attn_block(
+            x, bp, blora, d, kind=spec.kind, window=spec.window, positions=positions,
+            theta=cfg.rope_theta, scale_l=scale_l, enc_out=enc_out, cache=cache, pos=pos,
+            masks=masks)
+    elif spec.kind == "mlp":
+        xn = L.rms_norm(x, bp["ln"])
+        x = x + L.swiglu(xn, bp, blora, scale_l, masks).astype(x.dtype)
+    elif spec.kind == "moe":
+        xn = L.rms_norm(x, bp["ln"])
+        out, a = moe_mlp(xn, bp, top_k=d.top_k, capacity_factor=capacity_factor,
+                         lora=blora, lora_scale=scale_l)
+        x = x + out.astype(x.dtype)
+        aux = aux + a
+    elif spec.kind == "mamba":
+        x, new_cache = mamba_block(x, bp, d, blora, scale_l, cache)
+    else:
+        raise ValueError(spec.kind)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stage runner (scan over superblock repetitions)
+# ---------------------------------------------------------------------------
+
+def run_stage(
+    stage: Stage, sp: dict, slora: Optional[dict], x: Array, aux: Array, cfg: ModelConfig,
+    *, positions, enc_out=None, cache: Optional[dict] = None, pos=None,
+    scale_l: float = 2.0, remat: bool = False, masks: Optional[dict] = None,
+):
+    """sp = {"stacked": {...}, "shared": {...}} with leading n_rep on stacked."""
+    stacked_p = sp["stacked"]
+    shared_p = sp["shared"]
+    stacked_l = (slora or {}).get("stacked", {})
+    shared_l = (slora or {}).get("shared", {})
+    stacked_m = (masks or {}).get("stacked", {}) if masks else {}
+
+    has_cache = cache is not None
+    cache_stacked = cache or {}
+
+    def body(carry, xs):
+        xx, aa = carry
+        bp_all, bl_all, bc_all, bm_all = xs
+        new_caches = {}
+        for spec in stage.superblock:
+            bp = shared_p[spec.name] if spec.shared else bp_all[spec.name]
+            bl = shared_l.get(spec.name) if spec.shared else bl_all.get(spec.name)
+            bm = bm_all.get(spec.name) if bm_all else None
+            bc = bc_all.get(spec.name) if has_cache else None
+
+            def apply(bp_, bl_, xx_, aa_, bc_, bm_, _spec=spec):
+                return _apply_block(
+                    _spec, bp_, bl_, xx_, aa_, stage.dims, cfg,
+                    positions=positions, enc_out=enc_out, cache=bc_, pos=pos,
+                    scale_l=scale_l, capacity_factor=cfg.capacity_factor,
+                    masks=bm_)
+
+            # adaptive remat granularity (§Perf iters 11/13): deep superblocks
+            # (gemma3's 12 blocks) checkpoint per block so the backward
+            # transient holds ONE block's scores; shallow superblocks keep
+            # whole-body remat (less recompute traffic — measured better on
+            # llama2-70b).
+            if remat and per_block:
+                apply = jax.checkpoint(apply)
+            xx, aa, nc = apply(bp, bl, xx, aa, bc, bm)
+            if has_cache and nc is not None:
+                new_caches[spec.name] = nc
+        xx = _shard_residual(xx)
+        return (xx, aa), new_caches
+
+    per_block = len(stage.superblock) > 4
+    body_fn = jax.checkpoint(body) if (remat and not per_block) else body
+    xs = (stacked_p, stacked_l, cache_stacked, stacked_m)
+    (x, aux), new_cache = lax.scan(body_fn, (x, aux), xs, length=stage.n_rep)
+    return x, aux, (new_cache if has_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Full model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens, lora=None):
+    e = params["embed"]
+    return jnp.take(e, tokens, axis=0)
+
+
+def _lm_logits(cfg, params, x, lora, scale_l):
+    if cfg.tie_embeddings or "lm_head" not in params:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        head_lora = None if lora is None else lora.get("lm_head")
+        logits = L.dense(x, params["lm_head"], head_lora, scale_l,
+                         accum_fp32=True)
+    # vocab-sharded logits: CE runs on shards (psum'd logsumexp) instead of
+    # materializing (B, S, V) fp32 per device — 4.3 GB/layer-less saving on
+    # gemma3's 262k vocab (was the 25 GiB/device train_4k overflow).
+    return _shard_logits(logits)
+
+
+def _run_encoder(plan, params, lora, frontend, scale_l, remat):
+    if not plan.enc_stages:
+        return None
+    h = frontend
+    aux = jnp.zeros((), jnp.float32)
+    for st in plan.enc_stages:
+        h, aux, _ = run_stage(
+            st, params["enc_stages"][st.name],
+            None if lora is None else lora.get("enc_stages", {}).get(st.name),
+            h, aux, plan.cfg, positions=jnp.broadcast_to(
+                jnp.arange(h.shape[1])[None], h.shape[:2]),
+            scale_l=scale_l, remat=remat)
+    return L.rms_norm(h, params["enc_final_ln"])
+
+
+def forward(
+    plan: Plan, params: PyTree, tokens: Array, lora: Optional[PyTree] = None,
+    *, frontend: Optional[Array] = None, positions: Optional[Array] = None,
+    lora_scale: float = 2.0, remat: bool = False, masks: Optional[PyTree] = None,
+):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    cfg = plan.cfg
+    enc_out = _run_encoder(plan, params, lora, frontend, lora_scale, remat)
+
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    aux = jnp.zeros((), jnp.float32)
+    for st in plan.stages:
+        x, aux, _ = run_stage(
+            st, params["stages"][st.name],
+            None if lora is None else lora.get("stages", {}).get(st.name),
+            x, aux, cfg, positions=positions, enc_out=enc_out,
+            scale_l=lora_scale, remat=remat,
+            masks=None if masks is None else masks.get("stages", {}).get(st.name))
+        x = _shard_residual(x)
+
+    x = L.grad_cast(x, x.dtype)   # keep the backbone backward in bf16
+    x = L.rms_norm(x, params["final_ln"])
+    if cfg.family == "vlm" and frontend is not None:
+        x = x[:, frontend.shape[1]:]
+    logits = _lm_logits(cfg, params, x, lora, lora_scale)
+    return logits, aux
+
+
+# activation sharding constraint hooks (set by repro.distributed.sharding)
+_RESIDUAL_CONSTRAINT = None
+_HEAD_CONSTRAINT = None
+_LOGITS_CONSTRAINT = None
+
+
+def set_residual_constraint(fn):
+    global _RESIDUAL_CONSTRAINT
+    _RESIDUAL_CONSTRAINT = fn
+
+
+def set_head_constraint(fn):
+    global _HEAD_CONSTRAINT
+    _HEAD_CONSTRAINT = fn
+
+
+def set_logits_constraint(fn):
+    global _LOGITS_CONSTRAINT
+    _LOGITS_CONSTRAINT = fn
+
+
+def _shard_logits(x):
+    if _LOGITS_CONSTRAINT is not None:
+        return _LOGITS_CONSTRAINT(x)
+    return x
+
+
+def _shard_residual(x):
+    if _RESIDUAL_CONSTRAINT is not None:
+        return _RESIDUAL_CONSTRAINT(x)
+    return x
+
+
+def _shard_heads(x):
+    if _HEAD_CONSTRAINT is not None:
+        return _HEAD_CONSTRAINT(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Caches / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(plan: Plan, batch: int, max_len: int, dtype=jnp.bfloat16) -> PyTree:
+    cfg = plan.cfg
+    caches = {}
+    for st in plan.stages:
+        d = st.dims
+        stage_cache = {}
+        for spec in st.superblock:
+            if spec.kind == "attn":
+                size = min(spec.window, max_len) if spec.window else max_len
+                stage_cache[spec.name] = {
+                    "k": jnp.zeros((st.n_rep, batch, size, d.n_kv_heads, d.head_dim), dtype),
+                    "v": jnp.zeros((st.n_rep, batch, size, d.n_kv_heads, d.head_dim), dtype),
+                }
+            elif spec.kind == "cross_attn":
+                stage_cache[spec.name] = {
+                    "k": jnp.zeros((st.n_rep, batch, cfg.enc_len, d.n_kv_heads, d.head_dim), dtype),
+                    "v": jnp.zeros((st.n_rep, batch, cfg.enc_len, d.n_kv_heads, d.head_dim), dtype),
+                }
+            elif spec.kind == "mamba":
+                stage_cache[spec.name] = {
+                    "conv": jnp.zeros((st.n_rep, batch, d.conv_width - 1, d.d_inner + 2 * d.ssm_state), dtype),
+                    "ssm": jnp.zeros((st.n_rep, batch, d.ssm_heads, d.ssm_head_dim, d.ssm_state), jnp.float32),
+                }
+        caches[st.name] = stage_cache
+    return caches
+
+
+def _dec_cross_kv(plan, params, lora, enc_out, scale_l):
+    """Precompute cross-attention K/V caches from encoder output."""
+    caches = {}
+    for st in plan.stages:
+        d = st.dims
+        st_c = {}
+        for spec in st.superblock:
+            if spec.kind != "cross_attn":
+                continue
+            bp = params["stages"][st.name]["stacked"][spec.name]
+            bl = None if lora is None else lora.get("stages", {}).get(st.name, {}).get("stacked", {}).get(spec.name)
+
+            def one(bp_r, bl_r):
+                k = L.dense(enc_out, bp_r["wk"], _sub(bl_r, "wk"), scale_l)
+                v = L.dense(enc_out, bp_r["wv"], _sub(bl_r, "wv"), scale_l)
+                B = enc_out.shape[0]
+                return {"k": k.reshape(B, -1, d.n_kv_heads, d.head_dim),
+                        "v": v.reshape(B, -1, d.n_kv_heads, d.head_dim)}
+
+            if bl is None:
+                st_c[spec.name] = jax.vmap(lambda p: one(p, None))(bp)
+            else:
+                st_c[spec.name] = jax.vmap(one)(bp, bl)
+        if st_c:
+            caches[st.name] = st_c
+    return caches
+
+
+def prefill(
+    plan: Plan, params: PyTree, tokens: Array, cache: PyTree,
+    lora: Optional[PyTree] = None, *, frontend: Optional[Array] = None,
+    lora_scale: float = 2.0,
+):
+    """Run the prompt through the model, filling caches.  Returns
+    (last_token_logits, cache, next_pos)."""
+    cfg = plan.cfg
+    enc_out = _run_encoder(plan, params, lora, frontend, lora_scale, remat=False)
+
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], x.shape[:2])
+
+    if enc_out is not None:
+        cross = _dec_cross_kv(plan, params, lora, enc_out, lora_scale)
+        for stn, stc in cross.items():
+            for bn, bc in stc.items():
+                cache[stn][bn] = bc
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for st in plan.stages:
+        x, aux, st_cache = run_stage(
+            st, params["stages"][st.name],
+            None if lora is None else lora.get("stages", {}).get(st.name),
+            x, aux, cfg, positions=positions, enc_out=enc_out,
+            cache=cache[st.name], pos=S - 1, scale_l=lora_scale)
+        new_cache[st.name] = st_cache
+    x = L.rms_norm(x[:, -1:], params["final_ln"])
+    logits = _lm_logits(cfg, params, x, lora, lora_scale)
+    return logits[:, 0], new_cache, S
+
+
+def decode_step(
+    plan: Plan, params: PyTree, token: Array, cache: PyTree, pos,
+    lora: Optional[PyTree] = None, *, lora_scale: float = 2.0,
+):
+    """One decode step.  token: (B,) int32; pos: scalar int32 (next position).
+    Returns (logits (B, V), new_cache)."""
+    cfg = plan.cfg
+    x = _embed_tokens(cfg, params, token[:, None])
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for st in plan.stages:
+        x, aux, st_cache = run_stage(
+            st, params["stages"][st.name],
+            None if lora is None else lora.get("stages", {}).get(st.name),
+            x, aux, cfg, positions=positions, enc_out=None,
+            cache=cache[st.name], pos=pos, scale_l=lora_scale)
+        new_cache[st.name] = st_cache
+    x = L.rms_norm(x, params["final_ln"])
+    logits = _lm_logits(cfg, params, x, lora, lora_scale)
+    return logits[:, 0], new_cache

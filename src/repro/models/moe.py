@@ -1,0 +1,109 @@
+"""Mixture-of-Experts MLP (Switch/Mixtral-style top-k with capacity buffers).
+
+Covers both assigned MoE archs:
+  * arctic-480b      — 128 routed experts top-2 **plus a dense FFN residual**
+  * deepseek-moe-16b — 64 fine-grained routed experts top-6 **plus 2 shared
+                       experts** (never pruned by LoRAM — see DESIGN.md)
+
+Dispatch is sort-free: top-k one-hot → per-expert position via cumsum →
+scatter into (E, C, d) capacity buffers → experts run as a single stacked
+einsum (EP: expert dim sharded over the ``model`` mesh axis) → weighted
+combine.  Compute is O(E·C·d·f) with C ≈ S·k/E·cf, i.e. proportional to
+*active* parameters — which is what makes the 6·N_active·D roofline term
+honest for MoE cells.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, swiglu
+from repro.quant.nf4 import maybe_dequant
+
+Array = jax.Array
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(n_tokens * top_k * cf / n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_mlp(
+    x: Array,                      # (B, S, D)
+    p: dict,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    lora: Optional[dict] = None,
+    lora_scale: float = 2.0,
+) -> tuple[Array, Array]:
+    """Returns (output, aux_loss)."""
+    b, s, d = x.shape
+    n_tok = b * s
+    xe = x.reshape(n_tok, d)
+    router = maybe_dequant(p["router"], jnp.float32)      # (D, E)
+    e = router.shape[-1]
+    cap = _capacity(n_tok, e, top_k, capacity_factor)
+
+    logits = (xe.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)               # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)     # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch): E * mean(f_e * p_e)
+    me = jnp.mean(probs, axis=0)
+    one_hot_all = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (T, k, E)
+    fe = jnp.mean(jnp.sum(one_hot_all, axis=1), axis=0)
+    aux = e * jnp.sum(me * fe)
+
+    # position of each (token, k) inside its expert's capacity buffer
+    flat_idx = gate_idx.reshape(-1)                               # (T·k,)
+    one_hot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)        # (T·k, E)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot                   # 1-based
+    pos = jnp.sum(pos, axis=-1) - 1                               # (T·k,)
+    keep = pos < cap                                              # drop overflow
+
+    dest = flat_idx * cap + jnp.where(keep, pos, 0)
+    buf = jnp.zeros((e * cap, d), xe.dtype)
+    src = jnp.repeat(xe, top_k, axis=0)                           # (T·k, D)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[dest].add(src)                                   # scatter
+    buf = buf.reshape(e, cap, d)
+
+    # stacked expert SwiGLU: weights (E, D, F) / (E, F, D)
+    def ffn(buf_e, wg, wu, wd):
+        g = jax.nn.silu((buf_e @ wg).astype(jnp.float32)).astype(buf_e.dtype)
+        u = buf_e @ wu
+        return (g * u) @ wd
+
+    out_buf = jax.vmap(ffn)(buf, maybe_dequant(p["we_g"], xe.dtype),
+                            maybe_dequant(p["we_u"], xe.dtype),
+                            maybe_dequant(p["we_d"], xe.dtype))     # (E, C, D)
+    out_buf = out_buf.reshape(e * cap, d)
+
+    gathered = out_buf[dest]                                       # (T·k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.sum(weighted.reshape(n_tok, top_k, d), axis=1)
+
+    # shared experts (deepseek) — always-on dense SwiGLU path
+    if "ws_g" in p:
+        sp = {"wg": p["ws_g"], "wu": p["ws_u"], "wd": p["ws_d"]}
+        out = out + swiglu(xe, sp, _strip(lora, "ws_"), lora_scale).reshape(n_tok, d)
+    # dense residual FFN (arctic)
+    if "wr_g" in p:
+        rp = {"wg": p["wr_g"], "wu": p["wr_u"], "wd": p["wr_d"]}
+        out = out + swiglu(xe, rp, _strip(lora, "wr_"), lora_scale).reshape(n_tok, d)
+
+    return out.reshape(b, s, d), aux
+
+
+def _strip(lora: Optional[dict], prefix: str) -> Optional[dict]:
+    if lora is None:
+        return None
+    sub = {k[len(prefix):]: v for k, v in lora.items() if k.startswith(prefix)}
+    # swiglu looks up "wg"/"wu"/"wd"; stripped keys are e.g. "g"→ need "wg"
+    sub = {("w" + k if not k.startswith("w") else k): v for k, v in sub.items()}
+    return sub or None

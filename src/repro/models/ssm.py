@@ -1,0 +1,177 @@
+"""Mamba2 (state-space duality) mixer — used by mamba2-370m and zamba2-2.7b.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024): within a chunk the
+recurrence is evaluated as a masked quadratic form (MXU-friendly), across
+chunks a ``lax.scan`` carries the (H, P, N) state.  Decode is the O(1)
+recurrent update — this is why the SSM/hybrid archs own the ``long_500k``
+cell.  A Pallas kernel for the intra-chunk quadratic lives in
+``repro/kernels/ssd_scan.py``; this file is the pure-jnp reference path used
+by default (and by the dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, rms_norm
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+
+
+def ssd_chunked(
+    x: Array,        # (B, S, H, P)   inputs per head
+    dt: Array,       # (B, S, H)      softplus'd step sizes
+    a: Array,        # (H,)           negative decay rates  (A = -exp(A_log))
+    b_mat: Array,    # (B, S, N)      input projections (G=1 group)
+    c_mat: Array,    # (B, S, N)      output projections
+    chunk: int = DEFAULT_CHUNK,
+    h0: Optional[Array] = None,       # (B, H, P, N) initial state
+):
+    """Returns (y, h_final) with y: (B, S, H, P)."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    la = dt * a[None, None, :]                        # log-decay per step (B,S,H) ≤ 0
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    lar = la.reshape(B, nc, chunk, H)
+    br = b_mat.reshape(B, nc, chunk, N)
+    cr = c_mat.reshape(B, nc, chunk, N)
+
+    # move chunk axis to the front for scan
+    xr, dtr, lar, br, cr = (t.transpose(1, 0, *range(2, t.ndim)) for t in (xr, dtr, lar, br, cr))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(h, inp):
+        xc, dtc, lac, bc, cc = inp                    # (B, chunk, ...)
+        cum = jnp.cumsum(lac, axis=1)                 # (B, chunk, H)
+        # ---- intra-chunk (quadratic, MXU) ----
+        scores = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B, i, j, H)
+        decay = jnp.where(causal[None, :, :, None], decay, 0.0)
+        dx = (dtc.astype(jnp.float32)[..., None] * xc.astype(jnp.float32))  # (B,chunk,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, dx)
+        # ---- inter-chunk: contribution of carried state ----
+        state_decay = jnp.exp(cum)                    # (B, chunk, H)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cc.astype(jnp.float32), h) * state_decay[..., None]
+        # ---- state update ----
+        total = cum[:, -1, :]                         # (B, H)
+        rem = jnp.exp(total[:, None, :] - cum)        # decay from step j to chunk end
+        dh = jnp.einsum("bjn,bjhp,bjh->bhpn", bc.astype(jnp.float32), dx, rem)
+        h_new = h * jnp.exp(total)[:, :, None, None] + dh
+        return h_new, (y_intra + y_inter)
+
+    h_final, ys = lax.scan(body, h0, (xr, dtr, lar, br, cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h: Array, x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array):
+    """One-token recurrent update.  x: (B, H, P); dt: (B, H); b/c: (B, N)."""
+    la = dt * a[None, :]                              # (B, H)
+    decay = jnp.exp(la)[:, :, None, None]
+    dx = (dt[..., None] * x).astype(jnp.float32)      # (B, H, P)
+    h_new = h * decay + jnp.einsum("bn,bhp->bhpn", b_mat.astype(jnp.float32), dx)
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (projections + conv + SSD + gating)
+# ---------------------------------------------------------------------------
+
+def _split_proj(zxbcdt: Array, d_inner: int, n_state: int, n_heads: int):
+    z, xc, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n_state, 2 * d_inner + 2 * n_state], axis=-1
+    )
+    return z, xc, b, c, dt  # dt: (..., H)
+
+
+def causal_conv(x: Array, w: Array, state: Optional[Array] = None):
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C).  If ``state`` (B, K-1, C)
+    is given, runs in streaming mode and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is not None:
+        xa = jnp.concatenate([state, x], axis=1)
+        new_state = xa[:, -(k - 1):, :]
+    else:
+        xa = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xa[:, -(k - 1):, :]
+    # (B, S, C) windows dot (K, C)
+    y = sum(xa[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return y, new_state
+
+
+def mamba_block(
+    x: Array,                     # (B, S, D)
+    p: dict,
+    dims,
+    lora: Optional[dict] = None,
+    lora_scale: float = 2.0,
+    cache: Optional[dict] = None,
+    chunk: int = DEFAULT_CHUNK,
+):
+    """Returns (out, new_cache).  cache = {"conv": (B,K-1,Cc), "ssm": (B,H,P,N)}."""
+    di, N, H, P = dims.d_inner, dims.ssm_state, dims.ssm_heads, dims.ssm_head_dim
+    resid_dtype = x.dtype
+    xn = rms_norm(x, p["ln"])
+
+    def l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    proj = dense(xn, p["in_proj"], l("in_proj"), lora_scale)      # (B,S, 2di+2N+H)
+    z, xc, b_mat, c_mat, dt = _split_proj(proj, di, N, H)
+
+    conv_in = jnp.concatenate([xc, b_mat, c_mat], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(resid_dtype)
+    xc, b_mat, c_mat = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (H,)
+
+    B, S = x.shape[:2]
+    xh = xc.reshape(B, S, H, P)
+
+    if cache is not None and S == 1:
+        y1, new_ssm = ssd_decode_step(
+            cache["ssm"], xh[:, 0], dt[:, 0], a, b_mat[:, 0], c_mat[:, 0]
+        )
+        y = y1[:, None]
+    else:
+        h0 = None if cache is None else cache["ssm"]
+        ck = min(chunk, S)
+        pad = (-S) % ck
+        if pad:
+            # zero-pad to a chunk multiple; dt=0 at padded steps → decay 1,
+            # zero input → state passes through untouched (exactness preserved)
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+            y, h_final = ssd_chunked(xh_p, dt_p, a, b_p, c_p, chunk=ck, h0=h0)
+            y = y[:, :S]
+        else:
+            y, h_final = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk=ck, h0=h0)
+        new_ssm = h_final
+
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)    # gate
+    y = rms_norm(y, p["out_norm"])
+    out = dense(y, p["out_proj"], l("out_proj"), lora_scale)
+    new_cache = None if cache is None else {"conv": new_conv, "ssm": new_ssm}
+    return x + out.astype(resid_dtype), new_cache

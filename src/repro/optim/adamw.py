@@ -1,0 +1,68 @@
+"""Pure-JAX AdamW with global-norm clipping.
+
+Moments are kept in fp32 regardless of param dtype (bf16-safe).  For LoRA
+training the optimizer state covers only the adapter tree — a few MB even for
+a 70B base — which is the property LoRAM exploits to make multi-pod DP
+nearly free (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params, grads, state: AdamWState, *, lr, b1: float = 0.9, b2: float = 0.999,
+    eps: float = 1e-8, wd: float = 0.0, clip: float = 0.0,
+):
+    if clip:
+        grads, _ = clip_by_global_norm(grads, clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if wd:
+            update = update + wd * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - jnp.asarray(lr, jnp.float32) * update
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([n[0] for n in new])
+    new_m = tdef.unflatten([n[1] for n in new])
+    new_v = tdef.unflatten([n[2] for n in new])
+    return new_p, AdamWState(step, new_m, new_v)

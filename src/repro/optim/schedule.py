@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    t = jnp.asarray(step, jnp.float32)
+    warm = t / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((t - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(t < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full((), peak_lr, jnp.float32)

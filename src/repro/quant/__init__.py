@@ -1,0 +1,1 @@
+from repro.quant import nf4  # noqa: F401

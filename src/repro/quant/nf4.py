@@ -1,0 +1,175 @@
+"""NF4 (NormalFloat-4) blockwise quantization — the Q(·) of QLoRAM.
+
+Faithful to QLoRA (Dettmers et al., 2023): the 16 NF4 levels are the
+quantiles of N(0,1) normalised to [-1, 1]; weights are scaled per block of
+``block_size`` elements by the block absmax.  Optional double quantization
+compresses the per-block scales with an int8 secondary quantizer.
+
+TPU adaptation: codes are packed two-per-byte along the *input* (contraction)
+axis so a (128, 128) MXU tile dequantizes from a contiguous (64, 128) uint8
+VMEM tile — see ``repro/kernels/nf4_matmul.py`` for the fused kernel; this
+module is the reference/storage layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The canonical NF4 codebook (QLoRA appendix E) — quantiles of a standard
+# normal, symmetrised, with an exact zero.
+NF4_CODEBOOK = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+DEFAULT_BLOCK = 64
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Packed NF4 tensor.  Logical shape (d_in, d_out); codes packed on d_in."""
+
+    codes: jax.Array          # uint8 (d_in // 2, d_out), two 4-bit codes/byte
+    scales: jax.Array         # fp16/fp32 (d_in // block, d_out) absmax per block
+    shape: tuple              # logical (d_in, d_out)
+    block: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        return cls(codes, scales, aux[0], aux[1])
+
+    @property
+    def dtype(self):  # duck-types jnp arrays for repro.models.layers.dense
+        return jnp.bfloat16
+
+    @property
+    def nbytes_logical(self) -> int:
+        return int(np.prod(self.shape)) // 2 + int(np.prod(self.scales.shape)) * self.scales.dtype.itemsize
+
+
+def _codebook(dtype=jnp.float32):
+    return jnp.asarray(NF4_CODEBOOK, dtype)
+
+
+def quantize(w: jax.Array, block: int = DEFAULT_BLOCK,
+             scale_dtype=jnp.float16) -> QTensor:
+    """Quantize (d_in, d_out) weights to NF4, blocked along d_in."""
+    d_in, d_out = w.shape
+    assert d_in % block == 0 and d_in % 2 == 0, (w.shape, block)
+    wf = w.astype(jnp.float32).reshape(d_in // block, block, d_out)
+    absmax = jnp.max(jnp.abs(wf), axis=1, keepdims=True)
+    absmax = jnp.maximum(absmax, 1e-12)
+    normed = wf / absmax                                          # in [-1, 1]
+    # nearest codebook entry
+    dist = jnp.abs(normed[..., None] - _codebook()[None, None, None, :])
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)           # (nb, block, d_out)
+    codes = codes.reshape(d_in, d_out)
+    packed = (codes[0::2, :] | (codes[1::2, :] << 4)).astype(jnp.uint8)
+    scales = absmax[:, 0, :].astype(scale_dtype)                  # (nb, d_out)
+    return QTensor(packed, scales, (d_in, d_out), block)
+
+
+def dequantize(q: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    # note: lax.scan slices the leading (layer) axis of stacked QTensors while
+    # leaving aux ``shape`` untouched — always derive dims from the codes.
+    # Scope name is load-bearing: hlo_analysis projects the fused
+    # nf4_matmul Pallas kernel (dequant stays in VMEM) over this traffic.
+    with jax.named_scope("nf4_dequant"):
+        d_in, d_out = q.codes.shape[0] * 2, q.codes.shape[1]
+        lo = (q.codes & 0x0F).astype(jnp.int32)
+        hi = (q.codes >> 4).astype(jnp.int32)
+        codes = jnp.stack([lo, hi], axis=1).reshape(d_in, d_out)  # interleave rows
+        vals = _codebook()[codes]                                 # (d_in, d_out) f32
+        vals = vals.reshape(d_in // q.block, q.block, d_out)
+        vals = vals * q.scales.astype(jnp.float32)[:, None, :]
+        return vals.reshape(d_in, d_out).astype(dtype)
+
+
+def quantize_tree(params, block: int = DEFAULT_BLOCK, min_size: int = 4096,
+                  predicate=None):
+    """NF4-quantize every eligible 2-D weight in a pytree (frozen base only).
+
+    predicate(path, leaf) → bool decides eligibility; default: 2-D, both dims
+    even/blocked, and ≥ min_size elements (skips norms, biases, codebooks).
+    """
+    def default_pred(path, leaf):
+        return (
+            isinstance(leaf, jax.Array)
+            and leaf.ndim == 2
+            and leaf.size >= min_size
+            and leaf.shape[0] % block == 0
+        )
+
+    pred = predicate or default_pred
+
+    def visit(path, leaf):
+        if pred(path, leaf):
+            return quantize(leaf, block=block)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def quantize_stacked(w: jax.Array, block: int = DEFAULT_BLOCK) -> "QTensor":
+    """Quantize (..., d_in, d_out) stacked weights (scan layers and/or MoE
+    experts) — vmapped over all leading dims."""
+    assert w.ndim >= 3
+    lead = w.shape[:-2]
+    d_in, d_out = w.shape[-2:]
+    flat = w.reshape((-1, d_in, d_out))
+
+    def q1(wi):
+        t = quantize(wi, block=block)
+        return t.codes, t.scales
+
+    codes, scales = jax.vmap(q1)(flat)
+    codes = codes.reshape(lead + codes.shape[1:])
+    scales = scales.reshape(lead + scales.shape[1:])
+    return QTensor(codes, scales, tuple(w.shape), block)
+
+
+def dequantize_stacked(q: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    d_in, d_out = q.codes.shape[-2] * 2, q.codes.shape[-1]
+    lead = q.codes.shape[:-2]
+    flat_c = q.codes.reshape((-1,) + q.codes.shape[-2:])
+    flat_s = q.scales.reshape((-1,) + q.scales.shape[-2:])
+
+    def d1(codes, scales):
+        return dequantize(QTensor(codes, scales, (d_in, d_out), q.block), dtype)
+
+    out = jax.vmap(d1)(flat_c, flat_s)
+    return out.reshape(lead + (d_in, d_out))
+
+
+def maybe_dequant(w, dtype=jnp.bfloat16):
+    """Transparent accessor used by call sites that matmul raw weight arrays
+    (e.g. stacked MoE experts)."""
+    if isinstance(w, QTensor):
+        return dequantize_stacked(w, dtype) if w.codes.ndim >= 3 else dequantize(w, dtype)
+    return w
+
+
+def param_bytes(tree) -> int:
+    """Physical parameter storage in bytes (QTensors counted packed)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.codes.size * 1 + leaf.scales.size * leaf.scales.dtype.itemsize
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

@@ -1,0 +1,47 @@
+"""Elastic scaling: deterministic re-sharding of the data stream and state.
+
+Because the data pipeline is stateless (``data.index_for(step, host,
+n_hosts)``) and the trainable state under LoRAM is tiny (rank-r adapters +
+Adam moments), elasticity costs exactly one checkpoint restore:
+
+* scale-down/up → restart with a different ``n_hosts``; every host derives
+  its shard for step k from the mapping below; no data is replayed or lost.
+* adapter/opt state is replicated (or re-replicated on restore) — MBs, not
+  the 10s-of-GB a full fine-tune would move.
+
+``plan_transition`` computes which global batch rows move where, so a warm
+handoff (live reshard, no restart) knows exactly what to transfer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardAssignment:
+    host: int
+    n_hosts: int
+    rows: Tuple[int, ...]      # global-batch row indices owned by this host
+
+
+def shard_rows(global_batch: int, host: int, n_hosts: int) -> ShardAssignment:
+    assert global_batch % n_hosts == 0, (global_batch, n_hosts)
+    per = global_batch // n_hosts
+    return ShardAssignment(host, n_hosts, tuple(range(host * per, (host + 1) * per)))
+
+
+def plan_transition(global_batch: int, old_n: int, new_n: int
+                    ) -> Dict[int, List[Tuple[int, int]]]:
+    """rows to transfer: {new_host: [(old_host, row), ...]} — identity rows
+    (already local) are omitted."""
+    moves: Dict[int, List[Tuple[int, int]]] = {}
+    old_owner = {}
+    for h in range(old_n):
+        for r in shard_rows(global_batch, h, old_n).rows:
+            old_owner[r] = h
+    for h in range(new_n):
+        for r in shard_rows(global_batch, h, new_n).rows:
+            if old_owner.get(r) != h:
+                moves.setdefault(h, []).append((old_owner[r], r))
+    return moves

@@ -1,0 +1,115 @@
+"""jit-able train / prefill / decode steps shared by the Trainer, the serving
+engine and the multi-pod dry-run.
+
+``make_train_step`` implements the LoRAM online stage: frozen (pruned,
+possibly NF4) base, trainable adapters only, gradient accumulation over
+microbatches via ``lax.scan`` (XLA overlaps microbatch k+1 compute with
+microbatch k collectives), AdamW on the adapter tree, warmup-cosine LR.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LoRAConfig, TrainConfig
+from repro.core.objectives import sft_loss
+from repro.models.model import Plan, decode_step as model_decode, forward, prefill as model_prefill
+from repro.optim.adamw import AdamWState, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(
+    plan: Plan,
+    train_cfg: TrainConfig,
+    lora_cfg: LoRAConfig,
+    *,
+    n_micro: int = 1,
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """Returns train_step(base_params, lora, opt_state, step, batch) →
+    (lora, opt_state, metrics)."""
+
+    def train_step(base_params, lora, opt_state: AdamWState, step, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B = tokens.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+
+        def reshape_micro(x):
+            return x.reshape((n_micro, mb) + x.shape[1:])
+
+        micro = jax.tree.map(reshape_micro, batch)
+
+        def loss_fn(l, microbatch):
+            loss, (ce, aux) = sft_loss(
+                plan, base_params, l, microbatch,
+                lora_scale=lora_cfg.scale, remat=train_cfg.remat)
+            return loss, ce
+
+        def acc_body(carry, microbatch):
+            g_acc, loss_acc, ce_acc = carry
+            (loss, ce), g = jax.value_and_grad(loss_fn, has_aux=True)(lora, microbatch)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss, ce_acc + ce), ()
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), lora)
+        (grads, loss_sum, ce_sum), _ = lax.scan(
+            acc_body, (g0, jnp.zeros(()), jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        lr = warmup_cosine(step, peak_lr=train_cfg.learning_rate,
+                           warmup_steps=train_cfg.warmup_steps,
+                           total_steps=train_cfg.total_steps)
+        new_lora, new_opt = adamw_update(
+            lora, grads, opt_state, lr=lr, wd=train_cfg.weight_decay,
+            clip=train_cfg.grad_clip)
+        metrics = {"loss": loss_sum / n_micro, "ce": ce_sum / n_micro, "lr": lr,
+                   "step": step}
+        return new_lora, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(plan: Plan, lora_cfg: LoRAConfig) -> Callable:
+    def eval_step(base_params, lora, batch):
+        loss, (ce, aux) = sft_loss(plan, base_params, lora, batch,
+                                   lora_scale=lora_cfg.scale, remat=False)
+        return {"loss": loss, "ce": ce, "ppl": jnp.exp(ce)}
+
+    return eval_step
+
+
+def make_prefill_step(plan: Plan, *, lora_scale: float = 2.0,
+                      with_lora: bool = False) -> Callable:
+    """serve-side prefill: (params[, lora], tokens, cache[, frontend])."""
+
+    if with_lora:
+        def step(params, lora, tokens, cache, frontend=None):
+            return model_prefill(plan, params, tokens, cache, lora,
+                                 frontend=frontend, lora_scale=lora_scale)
+    else:
+        def step(params, tokens, cache, frontend=None):
+            return model_prefill(plan, params, tokens, cache, None,
+                                 frontend=frontend)
+    return step
+
+
+def make_decode_step(plan: Plan, *, lora_scale: float = 2.0,
+                     with_lora: bool = False) -> Callable:
+    """serve_step: one new token for every sequence in the batch, against a
+    KV/SSM cache of the configured length."""
+
+    if with_lora:
+        def step(params, lora, token, cache, pos):
+            return model_decode(plan, params, token, cache, pos, lora,
+                                lora_scale=lora_scale)
+    else:
+        def step(params, token, cache, pos):
+            return model_decode(plan, params, token, cache, pos, None)
+    return step

@@ -1,0 +1,175 @@
+"""Fault-tolerant LoRAM Trainer.
+
+Orchestrates the online training stage on top of the substrates:
+
+  data (stateless host-sharded batches) → jitted train_step (frozen base +
+  adapter AdamW, microbatch scan) → watchdog (straggler alarm) →
+  CheckpointManager (async, atomic, validated) → restore_or_init (resume
+  from the newest valid checkpoint after any crash/preemption).
+
+The same class drives smoke-scale CPU runs (tests, examples) and the
+production mesh (launch/train.py) — only the mesh and config differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import LoRAConfig, TrainConfig
+from repro.distributed import sharding
+from repro.models.model import Plan
+from repro.optim.adamw import AdamWState, adamw_init
+from repro.runtime.steps import make_eval_step, make_train_step
+from repro.runtime.watchdog import StepWatchdog, StragglerAlarm
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: int
+    lora: Any
+    opt: AdamWState
+
+
+class Trainer:
+    def __init__(
+        self,
+        plan: Plan,
+        base_params: Any,
+        lora0: Any,
+        train_cfg: TrainConfig,
+        lora_cfg: LoRAConfig,
+        *,
+        mesh=None,
+        n_micro: int = 1,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 50,
+        keep: int = 3,
+        watchdog: Optional[StepWatchdog] = None,
+        on_straggler: str = "checkpoint_and_continue",   # or "raise"
+    ):
+        self.plan = plan
+        self.base_params = base_params
+        self.train_cfg = train_cfg
+        self.lora_cfg = lora_cfg
+        self.mesh = mesh
+        self.n_micro = n_micro
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.watchdog = watchdog or StepWatchdog(threshold=10.0)
+        self.on_straggler = on_straggler
+        self.metrics_log: list = []
+
+        step_fn = make_train_step(plan, train_cfg, lora_cfg, n_micro=n_micro)
+        if mesh is not None:
+            sharding.install_residual_constraint()
+            base_sh = sharding.to_shardings(
+                sharding.param_specs(base_params, mesh, fsdp=False), mesh)
+            lspec = sharding.param_specs(lora0, mesh, fsdp=False)
+            lora_sh = sharding.to_shardings(lspec, mesh)
+            opt_sh = sharding.to_shardings(
+                sharding.opt_specs(lspec, None), mesh)
+            self._step = jax.jit(
+                step_fn,
+                in_shardings=(base_sh, lora_sh, opt_sh, None, None),
+                donate_argnums=(1, 2))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(1, 2))
+        self._eval = jax.jit(make_eval_step(plan, lora_cfg))
+        self._init_lora = lora0
+
+    # ----------------------------------------------------------------- state
+    def init_state(self) -> TrainState:
+        # fresh copies: the step donates its lora/opt buffers, and the init
+        # tree may be shared with other Trainers (tests, restarts)
+        lora = jax.tree.map(jnp.copy, self._init_lora)
+        return TrainState(0, lora, adamw_init(lora))
+
+    def restore_or_init(self) -> TrainState:
+        state = self.init_state()
+        if self.ckpt is None:
+            return state
+        template = {"lora": state.lora, "opt": state.opt}
+        step, tree = self.ckpt.restore_latest(template)
+        if step is None:
+            return state
+        print(f"[trainer] resumed from step {step}")
+        return TrainState(step, tree["lora"], tree["opt"])
+
+    def save(self, state: TrainState, blocking: bool = False) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(state.step, {"lora": state.lora, "opt": state.opt},
+                       blocking=blocking)
+
+    # ------------------------------------------------------------------ loop
+    def train(
+        self,
+        batches: Iterator[Dict[str, np.ndarray]],
+        *,
+        steps: Optional[int] = None,
+        state: Optional[TrainState] = None,
+        log_every: int = 10,
+        eval_batch: Optional[Dict[str, np.ndarray]] = None,
+        eval_every: int = 0,
+        callback: Optional[Callable] = None,
+    ) -> TrainState:
+        state = state or self.restore_or_init()
+        total = steps if steps is not None else self.train_cfg.total_steps
+        ctx = (sharding.use_mesh(self.mesh, self.train_cfg.seq_shard_activations)
+               if self.mesh is not None else _null_ctx())
+        with ctx:
+            while state.step < total:
+                batch = next(batches)
+                self.watchdog.start()
+                try:
+                    lora, opt, metrics = self._step(
+                        self.base_params, state.lora, state.opt,
+                        jnp.asarray(state.step, jnp.int32), batch)
+                    jax.block_until_ready(metrics["loss"])
+                    self.watchdog.stop(state.step)
+                except StragglerAlarm as alarm:
+                    if self.on_straggler == "raise":
+                        raise
+                    print(f"[trainer] straggler: {alarm}; checkpointing")
+                    self.save(state, blocking=True)
+                    continue  # in production: reschedule; here: proceed
+                state = TrainState(state.step + 1, lora, opt)
+                m = {k: float(v) for k, v in metrics.items()}
+                self.metrics_log.append(m)
+                if log_every and state.step % log_every == 0:
+                    print(f"[trainer] step {state.step} "
+                          f"loss={m['loss']:.4f} lr={m['lr']:.2e}")
+                if eval_every and eval_batch is not None and state.step % eval_every == 0:
+                    ev = self._eval(self.base_params, state.lora, eval_batch)
+                    print(f"[trainer] eval step {state.step} "
+                          f"ppl={float(ev['ppl']):.3f}")
+                if callback:
+                    callback(state, m)
+                if self.ckpt and state.step % self.checkpoint_every == 0:
+                    self.save(state)
+        if self.ckpt:
+            self.save(state, blocking=True)
+            self.ckpt.wait()
+        return state
+
+    def evaluate(self, batch) -> Dict[str, float]:
+        with (sharding.use_mesh(self.mesh, False) if self.mesh is not None
+              else _null_ctx()):
+            ev = self._eval(self.base_params,
+                            self.restore_or_init().lora, batch)
+        return {k: float(v) for k, v in ev.items()}
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,50 @@
+"""Straggler / hang detection for the step loop.
+
+At thousand-node scale the common failure is not a crash but a slow or
+wedged worker.  The watchdog keeps an EWMA of step wall-time; a step
+exceeding ``threshold × EWMA`` raises :class:`StragglerAlarm`, which the
+Trainer converts into checkpoint-and-reschedule (in a real deployment the
+launcher replaces the slow host; here the policy hook is unit-tested with a
+fake clock).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+
+class StragglerAlarm(RuntimeError):
+    def __init__(self, step: int, elapsed: float, ewma: float):
+        super().__init__(
+            f"step {step} took {elapsed:.2f}s vs EWMA {ewma:.2f}s")
+        self.step = step
+        self.elapsed = elapsed
+        self.ewma = ewma
+
+
+class StepWatchdog:
+    def __init__(self, *, alpha: float = 0.2, threshold: float = 5.0,
+                 warmup_steps: int = 5, clock: Callable[[], float] = time.monotonic):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self.clock = clock
+        self.ewma: Optional[float] = None
+        self._t0: Optional[float] = None
+        self._n = 0
+
+    def start(self) -> None:
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> float:
+        assert self._t0 is not None, "stop() without start()"
+        elapsed = self.clock() - self._t0
+        self._t0 = None
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = elapsed
+        else:
+            if self._n > self.warmup_steps and elapsed > self.threshold * self.ewma:
+                raise StragglerAlarm(step, elapsed, self.ewma)
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * elapsed
+        return elapsed

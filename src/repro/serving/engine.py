@@ -1,0 +1,125 @@
+"""Batched serving engine — the "infer large" half of LoRAM.
+
+Serves the ORIGINAL (large) model with recovered adapters, either merged
+(paper default, Eq. 7: W₀ + Bᴿ*Aᴿ*) or unmerged (multi-adapter serving: one
+base, several LoRAM-trained adapters hot-swapped per request batch).
+
+Pipeline per request batch: tokenize-stub → prefill (fills KV/SSM caches)
+→ greedy/temperature decode loop (jitted one-token step) → detokenize-stub.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core.recovery import merge_lora
+from repro.distributed import sharding
+from repro.models.model import Plan, init_cache
+from repro.runtime.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, n_generated)
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class ServeEngine:
+    def __init__(self, plan: Plan, params: Any, cfg: ServeConfig,
+                 lora: Optional[Any] = None, *, lora_scale: float = 2.0,
+                 mesh=None):
+        self.plan = plan
+        self.cfg = cfg
+        self.mesh = mesh
+        if lora is not None and cfg.merge_adapters:
+            params = merge_lora(params, lora, lora_scale)
+            lora = None
+        self.params = params
+        self.lora = lora
+        self._prefill = jax.jit(make_prefill_step(
+            plan, lora_scale=lora_scale, with_lora=lora is not None))
+        self._decode = jax.jit(make_decode_step(
+            plan, lora_scale=lora_scale, with_lora=lora is not None),
+            donate_argnums=(2 if lora is None else 3,))
+
+    def _call_prefill(self, tokens, cache, frontend=None):
+        if self.lora is not None:
+            return self._prefill(self.params, self.lora, tokens, cache,
+                                 frontend)
+        return self._prefill(self.params, tokens, cache, frontend)
+
+    def _call_decode(self, token, cache, pos):
+        if self.lora is not None:
+            return self._decode(self.params, self.lora, token, cache, pos)
+        return self._decode(self.params, token, cache, pos)
+
+    def generate(
+        self,
+        prompts: np.ndarray,               # (B, S_prompt) int32
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        top_p: float = 0.95,
+        seed: int = 0,
+        frontend: Optional[np.ndarray] = None,
+    ) -> GenerationResult:
+        B = prompts.shape[0]
+        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
+               else _null())
+        with ctx:
+            cache = init_cache(self.plan, B, self.cfg.max_seq_len,
+                               jnp.dtype(self.cfg.kv_cache_dtype))
+            t0 = time.perf_counter()
+            logits, cache, pos = self._call_prefill(
+                jnp.asarray(prompts), cache,
+                None if frontend is None else jnp.asarray(frontend))
+            jax.block_until_ready(logits)
+            t1 = time.perf_counter()
+
+            rng = jax.random.PRNGKey(seed)
+            out = []
+            tok = _sample(logits, temperature, top_p, rng)
+            out.append(np.asarray(tok))
+            for i in range(1, max_new_tokens):
+                rng = jax.random.fold_in(rng, i)
+                logits, cache = self._call_decode(
+                    tok, cache, jnp.asarray(pos + i - 1, jnp.int32))
+                tok = _sample(logits, temperature, top_p, rng)
+                out.append(np.asarray(tok))
+            jax.block_until_ready(tok)
+            t2 = time.perf_counter()
+        gen = np.stack(out, axis=1)
+        return GenerationResult(
+            tokens=gen, prefill_s=t1 - t0, decode_s=t2 - t1,
+            tokens_per_s=B * max_new_tokens / max(t2 - t1, 1e-9))
+
+
+def _sample(logits, temperature, top_p, rng):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    probs = jax.nn.softmax(logits, axis=-1)
+    sorted_idx = jnp.argsort(-probs, axis=-1)
+    sorted_p = jnp.take_along_axis(probs, sorted_idx, axis=-1)
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    keep = cum - sorted_p < top_p
+    filt = jnp.where(keep, sorted_p, 0.0)
+    filt = filt / jnp.sum(filt, axis=-1, keepdims=True)
+    choice = jax.random.categorical(rng, jnp.log(filt + 1e-20), axis=-1)
+    return jnp.take_along_axis(sorted_idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

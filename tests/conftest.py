@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single host CPU device (the 512-device override is
+# dryrun.py-only, per spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

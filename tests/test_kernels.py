@@ -1,0 +1,148 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle (ref.py), plus hypothesis property tests on the oracles."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nf4_matmul import nf4_matmul
+from repro.kernels.ref import flash_attention_ref, nf4_matmul_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.quant import nf4
+
+
+# ---------------------------------------------------------------------------
+# nf4_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (64, 128, 128, 64, 128, 64),
+    (128, 256, 512, 128, 256, 128),
+    (8, 64, 128, 8, 128, 64),          # decode-like skinny M
+    (256, 192, 384, 128, 128, 64),     # non-square, odd multiples
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nf4_matmul_sweep(m, k, n, bm, bn, bk, dtype):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+    q = nf4.quantize(w)
+    out = nf4_matmul(x, q.codes, q.scales, bm=bm, bn=bn, bk=bk, interpret=True)
+    ref = nf4_matmul_ref(x, q.codes, q.scales)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_nf4_matmul_matches_dequant_dense():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)) * 0.1, jnp.float32)
+    q = nf4.quantize(w)
+    via_kernel = nf4_matmul(x, q.codes, q.scales, interpret=True)
+    via_dense = x @ nf4.dequantize(q, jnp.float32)
+    np.testing.assert_allclose(np.asarray(via_kernel), np.asarray(via_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,bq,bk", [
+    (128, 64, 64, 64),
+    (256, 128, 128, 64),
+    (256, 64, 256, 256),
+    (512, 32, 128, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, d, bq, bk, causal, dtype):
+    rng = np.random.default_rng(s + d)
+    q = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.4, dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.4, dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.4, dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@hypothesis.given(scale=st.floats(0.05, 2.0), seed=st.integers(0, 50))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_flash_attention_rowsums(scale, seed):
+    """Property: output rows are convex combinations of V rows — max(|out|)
+    ≤ max(|v|)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 1, 64, 32)) * scale, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 64, 32)) * scale, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [
+    (64, 2, 16, 8, 16),
+    (128, 3, 32, 16, 32),
+    (128, 1, 64, 32, 128),
+    (256, 2, 32, 64, 64),
+])
+def test_ssd_scan_sweep(s, h, p, n, chunk):
+    rng = np.random.default_rng(s + h + p)
+    B = 2
+    x = jnp.asarray(rng.standard_normal((B, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, s, h))) * 0.2 + 0.01,
+                     jnp.float32)
+    a = -jnp.asarray(np.abs(rng.standard_normal(h)) + 0.2, jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, s, n)) * 0.4, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, s, n)) * 0.4, jnp.float32)
+    y, hf = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, hr = ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=2e-4,
+                               atol=2e-4)
+
+
+@hypothesis.given(seed=st.integers(0, 30))
+@hypothesis.settings(max_examples=6, deadline=None)
+def test_ssd_chunk_invariance(seed):
+    """Property: chunked SSD output is invariant to the chunk size."""
+    rng = np.random.default_rng(seed)
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))) * 0.2 + 0.01,
+                     jnp.float32)
+    a = -jnp.asarray(np.abs(rng.standard_normal(H)) + 0.2, jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.4, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.4, jnp.float32)
+    y16, h16 = ssd_scan(x, dt, a, bm, cm, chunk=16, interpret=True)
+    y64, h64 = ssd_scan(x, dt, a, bm, cm, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h64), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_cpu_uses_ref():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 1, 32, 16)), jnp.float32)
+    out = ops.flash_attention(q, q, q, causal=True)
+    ref = flash_attention_ref(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6,
+                               atol=1e-6)

@@ -1,0 +1,183 @@
+"""LoRAM core invariants: prune → train → recover → merge, all variants.
+
+Property tests (hypothesis) cover the system's central invariants:
+  1. merge-equivalence:   forward(W₀+R(B,A)) == forward(W₀, adapters)
+  2. delta support:       recovered delta is zero on pruned coordinates
+  3. prune-shapes:        pruned dims are 128-aligned and match the spec
+  4. NF4 roundtrip:       |deq(q(w)) - w| ≤ codebook-gap × blockwise absmax
+  5. recovery inverse:    scatter(gather(x)) restores kept coords exactly
+"""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LoRAConfig, LoRAMConfig, get_smoke
+from repro.core import loram, pruning, recovery
+from repro.core.objectives import sft_loss
+from repro.models import forward, init_params, make_plan
+from repro.quant import nf4
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tiny_plan(d_ff=256, n_layers=4, d_model=64):
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=n_layers,
+                              d_ff=d_ff, d_model=d_model)
+    return make_plan(cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    plan = _tiny_plan()
+    params = init_params(plan, RNG, jnp.float32)
+    return plan, params
+
+
+# ---------------------------------------------------------------------------
+# structured variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["rand", "stru"])
+@pytest.mark.parametrize("keep", [(0, 0), (1, 1)])
+def test_structured_cycle(tiny, method, keep):
+    plan, params = tiny
+    cfg = LoRAMConfig(method=method, ratio=0.5, keep_first=keep[0],
+                      keep_last=keep[1])
+    setup = loram.setup(plan, params, cfg, LoRAConfig(rank=4), RNG)
+    # pruned dims are MXU-aligned
+    for stg in setup.small_plan.stages:
+        assert stg.dims.d_ff % 128 == 0
+    # train-free check: perturb adapters, recover, merge, compare paths
+    lora = jax.tree.map(
+        lambda x: x + 0.02 * jax.random.normal(RNG, x.shape, x.dtype),
+        setup.lora0)
+    lora_full, merged = loram.finalize(setup, lora, params)
+    assert recovery.delta_support_check(setup.spec, plan, lora_full)
+    tokens = jax.random.randint(RNG, (2, 8), 0, plan.cfg.vocab_size)
+    lg_m, _ = forward(plan, merged, tokens)
+    lg_a, _ = forward(plan, params, tokens, lora_full, lora_scale=4.0)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_a),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("method", ["semi", "unst"])
+def test_nonstructured_cycle(tiny, method):
+    plan, params = tiny
+    cfg = LoRAMConfig(method=method, ratio=0.5)
+    setup = loram.setup(plan, params, cfg, LoRAConfig(rank=4), RNG)
+    # masked-dense: plan unchanged, base masked
+    assert setup.small_plan is plan
+    masks = setup.spec.masks["stages"]
+    for stn, stm in masks.items():
+        for bn, bm in stm["stacked"].items():
+            for pn, m in bm.items():
+                w = setup.small_params["stages"][stn]["stacked"][bn][pn]
+                assert not bool(jnp.abs(jnp.asarray(w) * (1 - m)).max() > 0)
+    if method == "semi":
+        # 4:8 pattern: every 8 consecutive along d_in keeps exactly 4
+        m = next(iter(next(iter(masks.values()))["stacked"].values()))
+        mm = np.asarray(next(iter(m.values())), np.float32)
+        g = mm.reshape(mm.shape[0], mm.shape[1] // 8, 8, mm.shape[2]).sum(2)
+        assert np.all(g == 4)
+    # recovery is identity for non-structured (paper C3)
+    rec = recovery.recover_lora(setup.lora0, setup.spec, plan, setup.small_plan)
+    assert rec is setup.lora0
+
+
+def test_qloram_storage_reduction(tiny):
+    plan, params = tiny
+    cfg = LoRAMConfig(method="stru", ratio=0.65, quantize=True,
+                      keep_first=0, keep_last=0)
+    setup = loram.setup(plan, params, cfg, LoRAConfig(rank=4), RNG)
+    rep = loram.storage_report(params, setup.small_params)
+    assert rep["reduction_ratio"] > 1.2
+    assert rep["hbm_reduction"] > rep["reduction_ratio"]  # NF4 compounds
+
+
+def test_training_on_pruned_beats_init(tiny):
+    plan, params = tiny
+    cfg = LoRAMConfig(method="stru", ratio=0.5, keep_first=1, keep_last=1)
+    setup = loram.setup(plan, params, cfg, LoRAConfig(rank=4), RNG)
+    tokens = jax.random.randint(RNG, (4, 16), 0, plan.cfg.vocab_size)
+    batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def loss(l):
+        return sft_loss(setup.small_plan, setup.small_params, l, batch,
+                        lora_scale=4.0)[0]
+
+    lora = setup.lora0
+    l0 = float(loss(lora))
+    g = jax.grad(loss)
+    for _ in range(8):
+        lora = jax.tree.map(lambda p, gg: p - 0.01 * gg, lora, g(lora))
+    assert float(loss(lora)) < l0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    d_in=st.sampled_from([64, 128, 192]),
+    d_out=st.sampled_from([32, 64, 96]),
+    scale=st.floats(0.001, 10.0),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_nf4_roundtrip_bounded(d_in, d_out, scale):
+    w = jax.random.normal(jax.random.PRNGKey(d_in + d_out), (d_in, d_out)) * scale
+    q = nf4.quantize(w)
+    wd = nf4.dequantize(q, jnp.float32)
+    # error bounded by half the max codebook gap × per-block absmax
+    gap = float(np.max(np.diff(nf4.NF4_CODEBOOK)))
+    wb = np.asarray(w, np.float32).reshape(d_in // 64, 64, d_out)
+    absmax = np.abs(wb).max(axis=1, keepdims=True)
+    # + 2e-3·absmax: scales are stored fp16 (QLoRA), adding ≤ 2^-11 rel error
+    bound = (gap / 2 + 2e-3) * absmax + 1e-6
+    err = np.abs(np.asarray(wd).reshape(wb.shape) - wb)
+    assert np.all(err <= bound)
+
+
+@hypothesis.given(
+    n=st.integers(2, 6),
+    keep=st.integers(1, 5),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_scatter_gather_inverse(n, keep, seed):
+    """recovery._scatter_rows is a right-inverse of the prune gather."""
+    rng = np.random.default_rng(seed)
+    total = n * 16
+    k = min(keep * 8, total)
+    full = rng.standard_normal((3, total, 5)).astype(np.float32)
+    idx = np.sort(np.stack([rng.choice(total, size=k, replace=False)
+                            for _ in range(3)]), axis=1)
+    gathered = np.take_along_axis(full, idx[:, :, None], axis=1)
+    scattered = recovery._scatter_rows(n * 16, jnp.asarray(idx),
+                                       jnp.asarray(gathered))
+    back = np.take_along_axis(np.asarray(scattered), idx[:, :, None], axis=1)
+    np.testing.assert_allclose(back, gathered)
+    # zeros elsewhere
+    mask = np.ones((3, n * 16), bool)
+    np.put_along_axis(mask, idx, False, axis=1)
+    assert np.abs(np.asarray(scattered)[mask]).max(initial=0) == 0
+
+
+@hypothesis.given(ratio=st.floats(0.1, 0.9), seed=st.integers(0, 20))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_prune_keep_counts_aligned(ratio, seed):
+    plan = _tiny_plan(d_ff=512, n_layers=2)
+    cfg = LoRAMConfig(method="rand", ratio=ratio, keep_first=0, keep_last=0,
+                      seed=seed)
+    scores = pruning.random_scores(plan, seed)
+    small_plan, spec = pruning.build_structured_spec(plan, cfg, scores)
+    for stg in small_plan.stages:
+        assert stg.dims.d_ff % 128 == 0
+        assert stg.dims.d_ff >= 128
+        assert stg.dims.n_kv_heads >= 1
+        assert stg.dims.n_heads == stg.dims.n_kv_heads * (
+            plan.cfg.n_heads // plan.cfg.n_kv_heads)

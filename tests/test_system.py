@@ -1,0 +1,135 @@
+"""End-to-end behaviour tests for the LoRAM system (paper Algorithm 1):
+
+  offline:  prune → align → quantize
+  online:   LoRA-train the pruned base (loss ↓)
+  inference: recover → merge into FULL model → generate
+
+plus fault-tolerance: kill mid-run, resume from checkpoint, same trajectory.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (LoRAConfig, LoRAMConfig, ServeConfig, TrainConfig,
+                           get_smoke)
+from repro.core import loram, pruning, recovery
+from repro.core.objectives import cross_entropy
+from repro.data import AlignmentCorpus, SFTDataset, batch_iterator
+from repro.models import forward, init_params, make_plan
+from repro.runtime.trainer import Trainer
+from repro.serving import ServeEngine
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    return cfg, plan, params
+
+
+def test_full_loram_pipeline(base, tmp_path):
+    cfg, plan, params = base
+    lora_cfg = LoRAConfig(rank=4)
+    loram_cfg = LoRAMConfig(method="stru", ratio=0.5, keep_first=0,
+                            keep_last=0, quantize=False, align=True)
+
+    corpus = AlignmentCorpus(cfg.vocab_size, 24)
+    setup = loram.setup(
+        plan, params, loram_cfg, lora_cfg, RNG,
+        align_batches=batch_iterator(corpus, batch_size=4),
+        align_steps=3, align_lr=1e-4)
+
+    tc = TrainConfig(global_batch=8, seq_len=24, learning_rate=5e-3,
+                     total_steps=15, warmup_steps=2, remat=False)
+    ds = SFTDataset(cfg.vocab_size, tc.seq_len)
+    trainer = Trainer(setup.small_plan, setup.small_params, setup.lora0, tc,
+                      lora_cfg, n_micro=2, checkpoint_dir=str(tmp_path))
+    state = trainer.train(batch_iterator(ds, batch_size=tc.global_batch),
+                          steps=15, log_every=0)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    assert losses[-1] < losses[0]
+
+    # inference on the FULL model with recovered adapters
+    lora_full, merged = loram.finalize(setup, state.lora, params)
+    assert recovery.delta_support_check(setup.spec, plan, lora_full)
+    eng = ServeEngine(plan, merged, ServeConfig(max_seq_len=48))
+    res = eng.generate(np.ones((2, 8), np.int32), max_new_tokens=4)
+    assert res.tokens.shape == (2, 4)
+
+    # fine-tuning actually moved full-model behaviour
+    tokens = jax.random.randint(RNG, (2, 12), 0, cfg.vocab_size)
+    lg_base, _ = forward(plan, params, tokens)
+    lg_merged, _ = forward(plan, merged, tokens)
+    assert float(jnp.abs(lg_base - lg_merged).max()) > 1e-4
+
+
+def test_crash_resume_same_trajectory(base, tmp_path):
+    """Checkpoint/restart determinism: run 10 steps straight vs 5+restart+5."""
+    cfg, plan, params = base
+    lora_cfg = LoRAConfig(rank=4)
+    setup = loram.setup(plan, params,
+                        LoRAMConfig(method="rand", ratio=0.5, keep_first=0,
+                                    keep_last=0),
+                        lora_cfg, RNG)
+    tc = TrainConfig(global_batch=4, seq_len=16, learning_rate=1e-3,
+                     total_steps=10, warmup_steps=1, remat=False)
+    ds = SFTDataset(cfg.vocab_size, tc.seq_len)
+
+    def fresh_trainer(ckpt):
+        return Trainer(setup.small_plan, setup.small_params, setup.lora0, tc,
+                       lora_cfg, n_micro=1, checkpoint_dir=ckpt,
+                       checkpoint_every=5)
+
+    # straight run
+    t1 = fresh_trainer(str(tmp_path / "a"))
+    s1 = t1.train(batch_iterator(ds, batch_size=4), steps=10, log_every=0)
+
+    # interrupted run
+    t2 = fresh_trainer(str(tmp_path / "b"))
+    t2.train(batch_iterator(ds, batch_size=4), steps=5, log_every=0)
+    t3 = fresh_trainer(str(tmp_path / "b"))   # "new process"
+    s_resumed = t3.restore_or_init()
+    assert s_resumed.step == 5
+    s2 = t3.train(batch_iterator(ds, batch_size=4, start_step=5),
+                  steps=10, state=s_resumed, log_every=0)
+
+    for a, b in zip(jax.tree.leaves(s1.lora), jax.tree.leaves(s2.lora)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_recovery_helps_full_model(base):
+    """Fig. 6 direction: training on the pruned model, recovering and merging
+    improves the FULL model over its untrained baseline."""
+    cfg, plan, params = base
+    lora_cfg = LoRAConfig(rank=4)
+    setup = loram.setup(plan, params,
+                        LoRAMConfig(method="stru", ratio=0.5, keep_first=0,
+                                    keep_last=0),
+                        lora_cfg, RNG)
+    ds = SFTDataset(cfg.vocab_size, 24, seed=5)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0, batch_size=8).items()}
+
+    from repro.core.objectives import sft_loss
+    from repro.optim import adamw_init, adamw_update
+
+    lora = setup.lora0
+    opt = adamw_init(lora)
+    for i in range(25):
+        loss, g = jax.value_and_grad(
+            lambda l: sft_loss(setup.small_plan, setup.small_params, l,
+                               batch, lora_scale=lora_cfg.scale)[0])(lora)
+        lora, opt = adamw_update(lora, g, opt, lr=5e-3)
+
+    lora_full, merged = loram.finalize(setup, lora, params)
+    lg_rec, _ = forward(plan, merged, batch["tokens"])
+    loss_rec = cross_entropy(lg_rec, batch["labels"], batch["loss_mask"])
+    lg_base, _ = forward(plan, params, batch["tokens"])
+    loss_base = cross_entropy(lg_base, batch["labels"], batch["loss_mask"])
+    assert float(loss_rec) < float(loss_base)
