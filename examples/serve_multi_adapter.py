@@ -1,10 +1,16 @@
 """Multi-adapter serving: one FULL base model, several LoRAM-trained adapters
-hot-swapped per request batch (unmerged mode) — the deployment pattern when a
-publisher ships one base + many task adapters trained cheaply via LoRAM.
+served SIMULTANEOUSLY through the continuous-batching engine — the deployment
+pattern when a publisher ships one base + many task adapters trained cheaply
+via LoRAM.
+
+Each adapter is trained on the pruned ("train small") model, recovered to
+full rank, registered in the adapter bank, and then requests naming different
+adapters share every decode step of the big ("infer large") model.
 
   PYTHONPATH=src python examples/serve_multi_adapter.py
 """
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +21,7 @@ from repro.core import loram
 from repro.data import SFTDataset, batch_iterator
 from repro.models import init_params, make_plan
 from repro.runtime.trainer import Trainer
-from repro.serving import ServeEngine
+from repro.serving import AdapterRegistry, ContinuousServeEngine
 
 rng = jax.random.PRNGKey(0)
 cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
@@ -41,12 +47,31 @@ for task, seed in [("math", 11), ("code", 22)]:
     print(f"[multi-adapter] trained '{task}' adapter "
           f"({sum(x.size for x in jax.tree.leaves(lora_full)):,} params)")
 
-# serve the SAME full base with each adapter, unmerged
-prompts = np.random.default_rng(0).integers(2, cfg.vocab_size, (2, 8)).astype(np.int32)
+# register both adapters into one bank; serve the SAME full base for all
+registry = AdapterRegistry(adapters["math"], max_adapters=4)
 for task, lora in adapters.items():
-    eng = ServeEngine(plan, params, ServeConfig(max_seq_len=64,
-                                                merge_adapters=False),
-                      lora=lora, lora_scale=lora_cfg.scale)
-    res = eng.generate(prompts, max_new_tokens=8)
-    print(f"[multi-adapter] task={task:5s} tokens={res.tokens[0][:8]}")
-print("[multi-adapter] OK")
+    registry.add(task, lora)
+
+eng = ContinuousServeEngine(
+    plan, params,
+    ServeConfig(max_seq_len=64, max_slots=4, max_adapters=4,
+                max_new_tokens=16),
+    registry, lora_scale=lora_cfg.scale)
+
+# mixed-length, mixed-adapter traffic, all in flight together
+rs = np.random.default_rng(0)
+t0 = time.perf_counter()
+for task, n_prompt, n_new in [
+        ("math", 8, 8), ("code", 12, 6), ("math", 5, 8), (None, 8, 4),
+        ("code", 5, 8), ("math", 12, 5)]:
+    prompt = rs.integers(2, cfg.vocab_size, (n_prompt,)).astype(np.int32)
+    eng.submit(prompt, max_new_tokens=n_new, adapter=task)
+
+for res in eng.stream():
+    task = res.adapter or "base"
+    print(f"[multi-adapter] uid={res.uid} task={task:5s} "
+          f"prompt={res.prompt_len:2d} tokens={res.tokens.tolist()}")
+dt = time.perf_counter() - t0
+total = eng.n_decode_tokens + eng.n_completed
+print(f"[multi-adapter] {eng.n_completed} requests, {total} tokens in "
+      f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate) — OK")

@@ -288,6 +288,10 @@ class ServeConfig:
     max_seq_len: int = 4096
     merge_adapters: bool = True      # paper merges W0 + B^R A^R
     kv_cache_dtype: str = "bfloat16"
+    # continuous batching (repro.serving.scheduler / ContinuousServeEngine):
+    max_slots: int = 8               # fixed decode batch — jit never recompiles
+    max_adapters: int = 4            # capacity of the stacked adapter bank
+    max_new_tokens: int = 128        # per-slot on-device output buffer length
 
 
 def round_to(x: int, mult: int) -> int:

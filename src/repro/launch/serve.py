@@ -2,10 +2,15 @@
 into the FULL model, serve batched requests.
 
   python -m repro.launch.serve --arch yi-34b --smoke --batch 4 --new-tokens 16
+
+``--continuous`` serves the same requests through the continuous-batching
+multi-adapter engine (implies ``--no-merge``; each request routes through the
+adapter registry per-slot instead of a single global adapter).
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +19,7 @@ import numpy as np
 from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_arch, get_smoke
 from repro.core import loram
 from repro.models import init_params, make_plan
-from repro.serving import ServeEngine
+from repro.serving import AdapterRegistry, ContinuousServeEngine, ServeEngine
 
 
 def main():
@@ -28,6 +33,9 @@ def main():
     ap.add_argument("--max-seq-len", type=int, default=256)
     ap.add_argument("--no-merge", action="store_true",
                     help="serve base + adapters unmerged (multi-adapter mode)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (submit/step/stream)")
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -41,12 +49,36 @@ def main():
                         LoRAConfig(rank=8), rng)
     lora_full, merged = loram.finalize(setup, setup.lora0, params)
 
+    prompts = np.random.default_rng(0).integers(
+        2, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.continuous:
+        registry = AdapterRegistry(lora_full, max_adapters=2)
+        registry.add("task", lora_full)
+        eng = ContinuousServeEngine(
+            plan, params,
+            ServeConfig(max_seq_len=args.max_seq_len, max_slots=args.slots,
+                        max_adapters=registry.max_adapters,
+                        max_new_tokens=max(args.new_tokens, 1)),
+            registry)
+        t0 = time.perf_counter()
+        for row in prompts:
+            eng.submit(row, max_new_tokens=args.new_tokens, adapter="task",
+                       temperature=args.temperature)
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(r.n_generated for r in results.values())
+        print(f"[serve] continuous: {len(results)} requests, {n_tok} tokens "
+              f"in {dt:.3f}s ({n_tok / max(dt, 1e-9):.1f} tok/s aggregate, "
+              f"{args.slots} slots)")
+        for uid in sorted(results)[:4]:
+            print(f"  uid={uid} tokens={results[uid].tokens[:12]}")
+        return
+
     eng = ServeEngine(plan, params if args.no_merge else merged,
                       ServeConfig(max_seq_len=args.max_seq_len,
                                   merge_adapters=not args.no_merge),
                       lora=lora_full if args.no_merge else None)
-    prompts = np.random.default_rng(0).integers(
-        2, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
     fe = None
     if cfg.family == "encdec":
         fe = np.zeros((args.batch, cfg.enc_len, cfg.d_model), np.float32)

@@ -41,11 +41,17 @@ def dense(
     lora_scale: float = 2.0,
     mask: Optional[Array] = None,    # element mask for semi/unst LoRAM
     accum_fp32: bool = False,        # fp32 MXU accumulation (lm_head/loss path)
+    adapter_ids: Optional[Array] = None,  # (B,) routes a stacked adapter bank
 ) -> Array:
     """``y = x @ W (∘M) + scale · (x @ Aᵀ) @ Bᵀ (∘M applied to BA via stop-grad
     masking of the delta contribution — see DESIGN.md C2 note)``.
 
     x: (..., d_in); returns (..., d_out).
+
+    Multi-adapter serving: when ``lora`` holds a stacked bank —
+    ``a: (K, r, d_in)``, ``b: (K, d_out, r)`` — each leading-axis row of ``x``
+    is routed to adapter ``adapter_ids[row]`` via a gather, so one batched
+    matmul serves K different LoRAM-recovered adapters at once.
     """
     if isinstance(w, nf4.QTensor):
         wd = (nf4.dequantize_stacked(w, dtype=x.dtype) if w.codes.ndim == 3
@@ -59,8 +65,8 @@ def dense(
     else:
         y = x @ wd
     if lora is not None:
-        a = lora["a"].astype(x.dtype)    # (r, d_in)
-        b = lora["b"].astype(x.dtype)    # (d_out, r)
+        a = lora["a"].astype(x.dtype)    # (r, d_in) or (K, r, d_in)
+        b = lora["b"].astype(x.dtype)    # (d_out, r) or (K, d_out, r)
         if mask is not None:
             # Non-structured LoRAM (paper C2): the delta must live on the same
             # support as the pruned base.  Materialising (BA)∘M is O(d_in·d_out)
@@ -68,7 +74,16 @@ def dense(
             # path dense — per paper C3 the recovery for non-structured LoRAM
             # is the identity, so the trained factors are used as-is.
             pass
-        y = y + ((x @ a.T) @ b.T) * jnp.asarray(lora_scale, x.dtype)
+        scale = jnp.asarray(lora_scale, x.dtype)
+        if a.ndim == 3:
+            assert adapter_ids is not None, (
+                "stacked LoRA bank requires per-row adapter_ids")
+            a_sel = a[adapter_ids]       # (B, r, d_in)
+            b_sel = b[adapter_ids]       # (B, d_out, r)
+            u = jnp.einsum("b...i,bri->b...r", x, a_sel)
+            y = y + jnp.einsum("b...r,bor->b...o", u, b_sel) * scale
+        else:
+            y = y + ((x @ a.T) @ b.T) * scale
     return y
 
 
@@ -257,14 +272,16 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cache_len: Array,
 # ---------------------------------------------------------------------------
 
 def swiglu(x: Array, p: dict, lora: Optional[dict], lora_scale: float,
-           masks: Optional[dict] = None) -> Array:
+           masks: Optional[dict] = None,
+           adapter_ids: Optional[Array] = None) -> Array:
     def l(name):
         return None if lora is None or name not in lora else lora[name]
 
     def m(name):
         return None if masks is None else masks.get(name)
 
-    g = dense(x, p["wg"], l("wg"), lora_scale, m("wg"))
-    u = dense(x, p["wu"], l("wu"), lora_scale, m("wu"))
+    g = dense(x, p["wg"], l("wg"), lora_scale, m("wg"), adapter_ids=adapter_ids)
+    u = dense(x, p["wu"], l("wu"), lora_scale, m("wu"), adapter_ids=adapter_ids)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return dense(h, p["wd"], l("wd"), lora_scale, m("wd"))
+    return dense(h, p["wd"], l("wd"), lora_scale, m("wd"),
+                 adapter_ids=adapter_ids)

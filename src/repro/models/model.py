@@ -269,7 +269,7 @@ def _sub(d: Optional[dict], name: str) -> Optional[dict]:
 def _attn_block(
     x, bp, blora, d: StageDims, *,
     kind: str, window: int, positions, theta: float, scale_l: float,
-    enc_out=None, cache=None, pos=None, masks=None,
+    enc_out=None, cache=None, pos=None, masks=None, adapter_ids=None,
 ):
     B = x.shape[0]
     hd, H, K = d.head_dim, d.n_heads, d.n_kv_heads
@@ -278,7 +278,8 @@ def _attn_block(
 
     def pr(n):
         return L.dense(xn if n == "wq" else kv_src, bp[n], _sub(blora, n), scale_l,
-                       None if masks is None else masks.get(n))
+                       None if masks is None else masks.get(n),
+                       adapter_ids=adapter_ids)
 
     q = pr("wq").reshape(B, -1, H, hd)
     if kind == "cross_attn" and cache is not None and "k" in cache:
@@ -297,15 +298,21 @@ def _attn_block(
         # decode or prefill-write
         cache_size = cache["k"].shape[1]
         if q.shape[1] == 1:  # decode step
-            slot = pos % cache_size
-            ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            # pos may be a scalar (whole batch at one position — legacy
+            # engine) or per-slot (B,) (continuous batching: every slot sits
+            # at its own depth in its own sequence).
+            pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            slot = pos_v % cache_size
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
+            karange = jnp.arange(cache_size)
             if window:
-                kpos = pos - ((pos - jnp.arange(cache_size)) % cache_size)
+                kpos = pos_v[:, None] - ((pos_v[:, None] - karange[None, :]) % cache_size)
                 valid = kpos >= 0
             else:
-                valid = jnp.arange(cache_size) <= pos
+                valid = karange[None, :] <= pos_v[:, None]
             # GQA-grouped decode attention: contract against the K-head cache
             # directly — repeat_kv would read H/K× (7× for yi-34b) more cache
             # bytes per token (§Perf iteration 9)
@@ -313,7 +320,7 @@ def _attn_block(
             scale = 1.0 / (hd ** 0.5)
             qg = q.reshape(B_, K, gs, hd)                 # (B, K, G, d)
             logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32) * scale
-            logits = jnp.where(valid[None, None, None, :], logits, L.NEG_INF)
+            logits = jnp.where(valid[:, None, None, :], logits, L.NEG_INF)
             probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
             out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
             out = out.reshape(B_, 1, H, hd)
@@ -337,7 +344,8 @@ def _attn_block(
 
     out = out.reshape(B, -1, H * hd)
     out = L.dense(out, bp["wo"], _sub(blora, "wo"), scale_l,
-                  None if masks is None else masks.get("wo"))
+                  None if masks is None else masks.get("wo"),
+                  adapter_ids=adapter_ids)
     res = x + out.astype(x.dtype)
     return (res, new_cache) if cache is not None else (res, None)
 
@@ -364,24 +372,27 @@ def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
 
 
 def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelConfig,
-                 *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None):
+                 *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None,
+                 adapter_ids=None):
     new_cache = None
     if spec.kind in ("attn", "enc_attn", "cross_attn"):
         x, new_cache = _attn_block(
             x, bp, blora, d, kind=spec.kind, window=spec.window, positions=positions,
             theta=cfg.rope_theta, scale_l=scale_l, enc_out=enc_out, cache=cache, pos=pos,
-            masks=masks)
+            masks=masks, adapter_ids=adapter_ids)
     elif spec.kind == "mlp":
         xn = L.rms_norm(x, bp["ln"])
-        x = x + L.swiglu(xn, bp, blora, scale_l, masks).astype(x.dtype)
+        x = x + L.swiglu(xn, bp, blora, scale_l, masks,
+                         adapter_ids=adapter_ids).astype(x.dtype)
     elif spec.kind == "moe":
         xn = L.rms_norm(x, bp["ln"])
         out, a = moe_mlp(xn, bp, top_k=d.top_k, capacity_factor=capacity_factor,
-                         lora=blora, lora_scale=scale_l)
+                         lora=blora, lora_scale=scale_l, adapter_ids=adapter_ids)
         x = x + out.astype(x.dtype)
         aux = aux + a
     elif spec.kind == "mamba":
-        x, new_cache = mamba_block(x, bp, d, blora, scale_l, cache)
+        x, new_cache = mamba_block(x, bp, d, blora, scale_l, cache,
+                                   adapter_ids=adapter_ids)
     else:
         raise ValueError(spec.kind)
     return x, aux, new_cache
@@ -395,6 +406,7 @@ def run_stage(
     stage: Stage, sp: dict, slora: Optional[dict], x: Array, aux: Array, cfg: ModelConfig,
     *, positions, enc_out=None, cache: Optional[dict] = None, pos=None,
     scale_l: float = 2.0, remat: bool = False, masks: Optional[dict] = None,
+    adapter_ids=None,
 ):
     """sp = {"stacked": {...}, "shared": {...}} with leading n_rep on stacked."""
     stacked_p = sp["stacked"]
@@ -421,7 +433,7 @@ def run_stage(
                     _spec, bp_, bl_, xx_, aa_, stage.dims, cfg,
                     positions=positions, enc_out=enc_out, cache=bc_, pos=pos,
                     scale_l=scale_l, capacity_factor=cfg.capacity_factor,
-                    masks=bm_)
+                    masks=bm_, adapter_ids=adapter_ids)
 
             # adaptive remat granularity (§Perf iters 11/13): deep superblocks
             # (gemma3's 12 blocks) checkpoint per block so the backward
@@ -452,14 +464,14 @@ def _embed_tokens(cfg, params, tokens, lora=None):
     return jnp.take(e, tokens, axis=0)
 
 
-def _lm_logits(cfg, params, x, lora, scale_l):
+def _lm_logits(cfg, params, x, lora, scale_l, adapter_ids=None):
     if cfg.tie_embeddings or "lm_head" not in params:
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
                             preferred_element_type=jnp.float32)
     else:
         head_lora = None if lora is None else lora.get("lm_head")
         logits = L.dense(x, params["lm_head"], head_lora, scale_l,
-                         accum_fp32=True)
+                         accum_fp32=True, adapter_ids=adapter_ids)
     # vocab-sharded logits: CE runs on shards (psum'd logsumexp) instead of
     # materializing (B, S, V) fp32 per device — 4.3 GB/layer-less saving on
     # gemma3's 262k vocab (was the 25 GiB/device train_4k overflow).
@@ -651,12 +663,16 @@ def prefill(
 def decode_step(
     plan: Plan, params: PyTree, token: Array, cache: PyTree, pos,
     lora: Optional[PyTree] = None, *, lora_scale: float = 2.0,
+    adapter_ids: Optional[Array] = None,
 ):
-    """One decode step.  token: (B,) int32; pos: scalar int32 (next position).
-    Returns (logits (B, V), new_cache)."""
+    """One decode step.  token: (B,) int32; pos: scalar int32 (next position,
+    whole batch in lockstep) or (B,) int32 (per-slot positions — continuous
+    batching).  ``adapter_ids`` (B,) routes each slot through its own adapter
+    when ``lora`` is a stacked bank.  Returns (logits (B, V), new_cache)."""
     cfg = plan.cfg
     x = _embed_tokens(cfg, params, token[:, None])
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos[:, None]
 
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -665,8 +681,9 @@ def decode_step(
             st, params["stages"][st.name],
             None if lora is None else lora.get("stages", {}).get(st.name),
             x, aux, cfg, positions=positions, enc_out=None,
-            cache=cache[st.name], pos=pos, scale_l=lora_scale)
+            cache=cache[st.name], pos=pos, scale_l=lora_scale,
+            adapter_ids=adapter_ids)
         new_cache[st.name] = st_cache
     x = L.rms_norm(x, params["final_ln"])
-    logits = _lm_logits(cfg, params, x, lora, lora_scale)
+    logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)
     return logits[:, 0], new_cache

@@ -38,14 +38,25 @@ def moe_mlp(
     capacity_factor: float = 1.25,
     lora: Optional[dict] = None,
     lora_scale: float = 2.0,
+    adapter_ids: Optional[Array] = None,   # (B,) multi-adapter routing
 ) -> tuple[Array, Array]:
     """Returns (output, aux_loss)."""
     b, s, d = x.shape
     n_tok = b * s
     xe = x.reshape(n_tok, d)
+    # shared/residual expert LoRA runs on flattened (B·S, D) tokens — expand
+    # per-sequence adapter ids to per-token ids to match
+    ids_tok = None if adapter_ids is None else jnp.repeat(adapter_ids, s)
     router = maybe_dequant(p["router"], jnp.float32)      # (D, E)
     e = router.shape[-1]
     cap = _capacity(n_tok, e, top_k, capacity_factor)
+    if s == 1:
+        # single-token decode: capacity must be lossless.  With statistical
+        # capacity, garbage tokens from free serving slots (or an unlucky
+        # routing draw) can displace a live request's token from an expert
+        # buffer and silently corrupt its output; n_tok is the decode batch,
+        # so the worst case (every token's k routes on one expert) is cheap.
+        cap = max(cap, n_tok * top_k)
 
     logits = (xe.astype(jnp.float32) @ router.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)               # (T, E)
@@ -91,11 +102,13 @@ def moe_mlp(
     # shared experts (deepseek) — always-on dense SwiGLU path
     if "ws_g" in p:
         sp = {"wg": p["ws_g"], "wu": p["ws_u"], "wd": p["ws_d"]}
-        out = out + swiglu(xe, sp, _strip(lora, "ws_"), lora_scale).reshape(n_tok, d)
+        out = out + swiglu(xe, sp, _strip(lora, "ws_"), lora_scale,
+                           adapter_ids=ids_tok).reshape(n_tok, d)
     # dense residual FFN (arctic)
     if "wr_g" in p:
         rp = {"wg": p["wr_g"], "wu": p["wr_u"], "wd": p["wr_d"]}
-        out = out + swiglu(xe, rp, _strip(lora, "wr_"), lora_scale).reshape(n_tok, d)
+        out = out + swiglu(xe, rp, _strip(lora, "wr_"), lora_scale,
+                           adapter_ids=ids_tok).reshape(n_tok, d)
 
     return out.reshape(b, s, d), aux
 

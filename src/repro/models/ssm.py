@@ -122,6 +122,7 @@ def mamba_block(
     lora_scale: float = 2.0,
     cache: Optional[dict] = None,
     chunk: int = DEFAULT_CHUNK,
+    adapter_ids: Optional[Array] = None,
 ):
     """Returns (out, new_cache).  cache = {"conv": (B,K-1,Cc), "ssm": (B,H,P,N)}."""
     di, N, H, P = dims.d_inner, dims.ssm_state, dims.ssm_heads, dims.ssm_head_dim
@@ -131,7 +132,8 @@ def mamba_block(
     def l(name):
         return None if lora is None or name not in lora else lora[name]
 
-    proj = dense(xn, p["in_proj"], l("in_proj"), lora_scale)      # (B,S, 2di+2N+H)
+    proj = dense(xn, p["in_proj"], l("in_proj"), lora_scale,
+                 adapter_ids=adapter_ids)                         # (B,S, 2di+2N+H)
     z, xc, b_mat, c_mat, dt = _split_proj(proj, di, N, H)
 
     conv_in = jnp.concatenate([xc, b_mat, c_mat], axis=-1)
@@ -172,6 +174,7 @@ def mamba_block(
     y = y.reshape(B, S, di)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)    # gate
     y = rms_norm(y, p["out_norm"])
-    out = dense(y, p["out_proj"], l("out_proj"), lora_scale)
+    out = dense(y, p["out_proj"], l("out_proj"), lora_scale,
+                adapter_ids=adapter_ids)
     new_cache = None if cache is None else {"conv": new_conv, "ssm": new_ssm}
     return x + out.astype(resid_dtype), new_cache

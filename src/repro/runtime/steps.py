@@ -113,3 +113,49 @@ def make_decode_step(plan: Plan, *, lora_scale: float = 2.0,
         def step(params, token, cache, pos):
             return model_decode(plan, params, token, cache, pos, None)
     return step
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serve steps
+# ---------------------------------------------------------------------------
+
+def make_multi_adapter_decode_step(plan: Plan, *,
+                                   lora_scale: float = 2.0) -> Callable:
+    """One token for every *slot*: per-slot positions (each sequence sits at
+    its own depth) and per-slot ``adapter_ids`` routed through a stacked
+    adapter bank (see repro.serving.adapters)."""
+
+    def step(params, bank, token, cache, pos, adapter_ids):
+        return model_decode(plan, params, token, cache, pos, bank,
+                            lora_scale=lora_scale, adapter_ids=adapter_ids)
+
+    return step
+
+
+def make_prefill_into_slot(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
+    """Prefill ONE request directly into slot ``slot`` of a live multi-slot
+    cache while other slots keep decoding unchanged.
+
+    The slot's cache row starts from zeros (a freed slot may hold the previous
+    occupant's KV / SSM state — stale SSM state would corrupt the recurrence)
+    and is written back with ``dynamic_update_slice`` along the batch axis, so
+    the jitted computation is reused for every slot index.
+    """
+
+    def _zeros_row(c):
+        return jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype)
+
+    def _write_row(big, small, slot):
+        return lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype),
+                                               slot, axis=1)
+
+    def step(params, lora, tokens, big_cache, slot):
+        # tokens: (1, S_prompt); slot: scalar int32
+        row = jax.tree.map(_zeros_row, big_cache)
+        logits, row, _ = model_prefill(plan, params, tokens, row, lora,
+                                       lora_scale=lora_scale)
+        new_cache = jax.tree.map(
+            lambda b, s: _write_row(b, s, slot), big_cache, row)
+        return logits, new_cache
+
+    return step

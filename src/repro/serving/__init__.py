@@ -1,1 +1,5 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.adapters import AdapterRegistry  # noqa: F401
+from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401
+                                  GenerationResult, ServeEngine)
+from repro.serving.scheduler import (Request, RequestResult,  # noqa: F401
+                                     Scheduler)

@@ -1,0 +1,150 @@
+"""Multi-adapter registry for LoRAM serving — the "one base, many adapters"
+deployment the paper motivates: adapters are trained cheaply on the pruned
+model, recovered to full rank, and K of them are served simultaneously
+against a single copy of the large base model.
+
+The registry stacks K recovered adapter trees into ONE bank tree whose
+leaves carry an extra ``K`` axis:
+
+  * stacked-block leaves  (n_rep, r, d)   → (n_rep, K, r, d)   (axis 1 — the
+    leading ``n_rep`` axis must stay outermost so ``lax.scan`` over depth
+    still slices it)
+  * shared-block / lm_head leaves (r, d)  → (K, r, d)          (axis 0)
+
+``repro.models.layers.dense`` detects the extra axis and routes each batch
+row through ``adapter_ids`` with a gather — so one jitted decode step serves
+all K adapters at once and never recompiles when adapters are added or
+swapped (the bank is a plain argument, not a closure constant).
+
+Unused bank rows are zeros; LoRA deltas are ``B·A`` with ``B = 0`` → a zero
+row is exactly the base model, which doubles as the built-in "no adapter"
+route (:data:`BASE_ADAPTER`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+BASE_ADAPTER = "__base__"     # reserved name: zero delta == plain base model
+
+
+def _stage_axes(stage_tree: dict) -> dict:
+    return {
+        "stacked": jax.tree.map(lambda _: 1, stage_tree.get("stacked", {})),
+        "shared": jax.tree.map(lambda _: 0, stage_tree.get("shared", {})),
+    }
+
+
+def stack_axes(template: PyTree) -> PyTree:
+    """Tree of ints matching ``template``: the axis at which the K (adapter)
+    dimension is inserted for each leaf."""
+    axes: Dict[str, Any] = {}
+    for key in ("stages", "enc_stages"):
+        if key in template:
+            axes[key] = {stn: _stage_axes(st)
+                         for stn, st in template[key].items()}
+    if "lm_head" in template:
+        axes["lm_head"] = jax.tree.map(lambda _: 0, template["lm_head"])
+    return axes
+
+
+class AdapterRegistry:
+    """Named slots in a stacked adapter bank.
+
+    ``template`` is any adapter tree with the target structure (e.g. the
+    output of ``loram.finalize`` or ``init_lora`` on the FULL plan); its
+    leaf values are not used, only shapes/dtypes.
+    """
+
+    def __init__(self, template: PyTree, max_adapters: int):
+        assert max_adapters >= 1
+        self.max_adapters = max_adapters
+        self._template_struct = jax.tree.structure(template)
+        self._template_shapes = [x.shape for x in jax.tree.leaves(template)]
+        self._axes = stack_axes(template)
+        self._bank = jax.tree.map(
+            lambda leaf, ax: jnp.zeros(
+                leaf.shape[:ax] + (max_adapters,) + leaf.shape[ax:],
+                leaf.dtype),
+            template, self._axes)
+        self._names: Dict[str, int] = {}
+        self._trees: List[Optional[PyTree]] = [None] * max_adapters
+        # id 0 is reserved for the base-model (zero-delta) route
+        self._names[BASE_ADAPTER] = 0
+
+    # -- registration -------------------------------------------------------
+
+    def add(self, name: str, lora: PyTree) -> int:
+        """Register ``lora`` under ``name``; returns its adapter id.
+        Re-registering a name overwrites its bank row (hot-swap)."""
+        assert name != BASE_ADAPTER, "reserved name"
+        struct = jax.tree.structure(lora)
+        assert struct == self._template_struct, (
+            f"adapter tree structure mismatch:\n{struct}\n"
+            f"!=\n{self._template_struct}")
+        shapes = [x.shape for x in jax.tree.leaves(lora)]
+        assert shapes == self._template_shapes, "adapter leaf shape mismatch"
+
+        if name in self._names:
+            aid = self._names[name]
+        else:
+            aid = len(self._names)
+            if aid >= self.max_adapters:
+                raise RuntimeError(
+                    f"adapter bank full ({self.max_adapters} slots; "
+                    f"slot 0 is the reserved base route)")
+            self._names[name] = aid
+
+        def write(bank_leaf, leaf, ax):
+            idx = (slice(None),) * ax + (aid,)
+            return bank_leaf.at[idx].set(leaf.astype(bank_leaf.dtype))
+
+        self._bank = jax.tree.map(write, self._bank, lora, self._axes)
+        self._trees[aid] = lora
+        return aid
+
+    # -- lookup -------------------------------------------------------------
+
+    def resolve(self, adapter: Union[str, int, None]) -> int:
+        if adapter is None:
+            return 0
+        if isinstance(adapter, int):
+            # ids are assigned densely from 0 (base) upward; an in-range but
+            # unregistered id would silently gather a zero (= base) bank row
+            if not 0 <= adapter < len(self._names):
+                raise KeyError(
+                    f"adapter id {adapter} not registered "
+                    f"(have ids 0..{len(self._names) - 1})")
+            return adapter
+        if adapter not in self._names:
+            known = sorted(n for n in self._names if n != BASE_ADAPTER)
+            raise KeyError(
+                f"unknown adapter {adapter!r}; registered: {known} "
+                f"(None routes to the base model)")
+        return self._names[adapter]
+
+    def name_of(self, aid: int) -> Optional[str]:
+        for n, i in self._names.items():
+            if i == aid:
+                return None if n == BASE_ADAPTER else n
+        return None
+
+    def adapter_tree(self, adapter: Union[str, int, None]) -> Optional[PyTree]:
+        """The single (unstacked) adapter tree — the prefill-into-slot path
+        runs one request at a time, so it uses the plain LoRA fast path."""
+        return self._trees[self.resolve(adapter)]
+
+    @property
+    def bank(self) -> PyTree:
+        return self._bank
+
+    @property
+    def names(self) -> Dict[str, int]:
+        return dict(self._names)
+
+    def __len__(self) -> int:
+        return len(self._names) - 1   # exclude the reserved base route

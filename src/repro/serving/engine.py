@@ -1,17 +1,31 @@
-"""Batched serving engine — the "infer large" half of LoRAM.
+"""Serving engines — the "infer large" half of LoRAM.
 
 Serves the ORIGINAL (large) model with recovered adapters, either merged
 (paper default, Eq. 7: W₀ + Bᴿ*Aᴿ*) or unmerged (multi-adapter serving: one
-base, several LoRAM-trained adapters hot-swapped per request batch).
+base, several LoRAM-trained adapters).
 
-Pipeline per request batch: tokenize-stub → prefill (fills KV/SSM caches)
-→ greedy/temperature decode loop (jitted one-token step) → detokenize-stub.
+Two engines:
+
+* :class:`ServeEngine` — the synchronous single-batch reference path: one
+  prefill for the whole batch, then a lock-step decode loop.  Every request
+  in the batch shares one adapter and one prompt length.
+
+* :class:`ContinuousServeEngine` — continuous batching over a fixed slot
+  table (``ServeConfig.max_slots``): requests are admitted into free slots
+  the moment one opens (per-slot prefill insertion), every decode tick
+  advances all active slots at their own positions, and each slot routes
+  through its own adapter via the stacked bank
+  (:class:`repro.serving.adapters.AdapterRegistry`).  The jitted one-token
+  decode step has a fixed shape — slot count, cache, id/pos vectors — so XLA
+  compiles it exactly once and never recompiles mid-flight; free slots decode
+  masked garbage that nothing reads.  Generated tokens accumulate on device
+  and transfer to the host once per request, at eviction.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +35,10 @@ from repro.configs.base import ServeConfig
 from repro.core.recovery import merge_lora
 from repro.distributed import sharding
 from repro.models.model import Plan, init_cache
-from repro.runtime.steps import make_decode_step, make_prefill_step
+from repro.runtime.steps import (make_decode_step, make_multi_adapter_decode_step,
+                                 make_prefill_into_slot, make_prefill_step)
+from repro.serving.adapters import AdapterRegistry
+from repro.serving.scheduler import Request, RequestResult, Scheduler
 
 
 @dataclasses.dataclass
@@ -29,10 +46,14 @@ class GenerationResult:
     tokens: np.ndarray            # (B, n_generated)
     prefill_s: float
     decode_s: float
-    tokens_per_s: float
+    tokens_per_s: float           # end-to-end: all generated tokens / total time
+    prefill_tokens_per_s: float   # prompt tokens through prefill
+    decode_tokens_per_s: float    # decode-loop tokens over the decode window only
 
 
 class ServeEngine:
+    """Synchronous single-batch engine (the pre-scheduler reference path)."""
+
     def __init__(self, plan: Plan, params: Any, cfg: ServeConfig,
                  lora: Optional[Any] = None, *, lora_scale: float = 2.0,
                  mesh=None):
@@ -71,7 +92,7 @@ class ServeEngine:
         seed: int = 0,
         frontend: Optional[np.ndarray] = None,
     ) -> GenerationResult:
-        B = prompts.shape[0]
+        B, S_prompt = prompts.shape
         ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
                else _null())
         with ctx:
@@ -85,21 +106,248 @@ class ServeEngine:
             t1 = time.perf_counter()
 
             rng = jax.random.PRNGKey(seed)
-            out = []
+            # tokens accumulate on device; one transfer at the end (a
+            # per-token np.asarray would force a host sync every step)
+            out_buf = jnp.zeros((B, max_new_tokens), jnp.int32)
             tok = _sample(logits, temperature, top_p, rng)
-            out.append(np.asarray(tok))
+            out_buf = out_buf.at[:, 0].set(tok)
             for i in range(1, max_new_tokens):
                 rng = jax.random.fold_in(rng, i)
                 logits, cache = self._call_decode(
                     tok, cache, jnp.asarray(pos + i - 1, jnp.int32))
                 tok = _sample(logits, temperature, top_p, rng)
-                out.append(np.asarray(tok))
-            jax.block_until_ready(tok)
+                out_buf = out_buf.at[:, i].set(tok)
+            jax.block_until_ready(out_buf)
             t2 = time.perf_counter()
-        gen = np.stack(out, axis=1)
+        gen = np.asarray(out_buf)
+        # honest accounting: the first token comes out of prefill, so the
+        # decode window covers only max_new_tokens - 1 steps
+        decode_toks = B * max(max_new_tokens - 1, 0)
         return GenerationResult(
             tokens=gen, prefill_s=t1 - t0, decode_s=t2 - t1,
-            tokens_per_s=B * max_new_tokens / max(t2 - t1, 1e-9))
+            tokens_per_s=B * max_new_tokens / max(t2 - t0, 1e-9),
+            prefill_tokens_per_s=B * S_prompt / max(t1 - t0, 1e-9),
+            decode_tokens_per_s=decode_toks / max(t2 - t1, 1e-9))
+
+
+class ContinuousServeEngine:
+    """Continuous-batching, multi-adapter engine (``submit`` / ``step`` /
+    ``stream``)."""
+
+    def __init__(self, plan: Plan, params: Any, cfg: ServeConfig,
+                 registry: Optional[AdapterRegistry] = None, *,
+                 lora_scale: float = 2.0, mesh=None):
+        if plan.cfg.family == "encdec":
+            raise NotImplementedError(
+                "continuous batching does not cover encoder-decoder "
+                "frontends yet — use ServeEngine")
+        self.plan = plan
+        self.params = params
+        self.cfg = cfg
+        self.registry = registry
+        self.mesh = mesh
+        if registry is not None and registry.max_adapters != cfg.max_adapters:
+            raise ValueError(
+                f"ServeConfig.max_adapters={cfg.max_adapters} does not match "
+                f"the registry's capacity ({registry.max_adapters})")
+        S = cfg.max_slots
+        self._sched = Scheduler(S)
+        self._n_ticks = 0
+
+        self._prefill = jax.jit(
+            make_prefill_into_slot(plan, lora_scale=lora_scale),
+            donate_argnums=(3,))
+
+        decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale)
+
+        def make_tick(sampling: bool):
+            def tick(params_, bank, cache, st):
+                logits, cache = decode(params_, bank, st["last_tok"], cache,
+                                       st["pos"], st["adapter_ids"])
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if sampling:
+                    # key = (request seed, generation index): sampling is
+                    # reproducible per request no matter how the scheduler
+                    # interleaved it with other traffic
+                    keys = jax.vmap(
+                        lambda sd, gi: jax.random.fold_in(
+                            jax.random.PRNGKey(sd), gi)
+                    )(st["seeds"], st["gen_idx"])
+                    temp = jnp.maximum(st["temps"], 1e-6)[:, None]
+                    sampled = jax.vmap(jax.random.categorical)(
+                        keys, logits / temp).astype(jnp.int32)
+                    tok = jnp.where(st["temps"] > 0.0, sampled, tok)
+                act = st["active"]
+                tok = jnp.where(act, tok, st["last_tok"])
+                step1 = act.astype(jnp.int32)
+                bidx = jnp.arange(S)
+                gi = jnp.minimum(st["gen_idx"], st["out_buf"].shape[1] - 1)
+                cur = st["out_buf"][bidx, gi]
+                out_buf = st["out_buf"].at[bidx, gi].set(
+                    jnp.where(act, tok, cur))
+                new_st = {
+                    "last_tok": tok,
+                    "pos": st["pos"] + step1,
+                    "active": act,
+                    "adapter_ids": st["adapter_ids"],
+                    "temps": st["temps"],
+                    "seeds": st["seeds"],
+                    "gen_idx": st["gen_idx"] + step1,
+                    "out_buf": out_buf,
+                }
+                return cache, new_st
+
+            return jax.jit(tick, donate_argnums=(2, 3))
+
+        # all-greedy traffic skips the per-slot rng/categorical work entirely
+        self._tick_greedy = make_tick(False)
+        self._tick_sample = make_tick(True)
+        self._n_hot = 0    # in-flight/queued requests with temperature > 0
+
+        def admit_update(st, slot, first, pos0, aid, temp, seed):
+            return {
+                "last_tok": st["last_tok"].at[slot].set(first),
+                "pos": st["pos"].at[slot].set(pos0),
+                "active": st["active"].at[slot].set(True),
+                "adapter_ids": st["adapter_ids"].at[slot].set(aid),
+                "temps": st["temps"].at[slot].set(temp),
+                "seeds": st["seeds"].at[slot].set(seed),
+                "gen_idx": st["gen_idx"].at[slot].set(1),
+                "out_buf": st["out_buf"].at[slot, 0].set(first),
+            }
+
+        # one fused dispatch per admission instead of seven .at[].set calls
+        self._admit_update = jax.jit(admit_update, donate_argnums=(0,))
+
+        self.cache = init_cache(plan, S, cfg.max_seq_len,
+                                jnp.dtype(cfg.kv_cache_dtype))
+        self._st: Dict[str, jax.Array] = {
+            "last_tok": jnp.zeros((S,), jnp.int32),
+            "pos": jnp.zeros((S,), jnp.int32),
+            "active": jnp.zeros((S,), bool),
+            "adapter_ids": jnp.zeros((S,), jnp.int32),
+            "temps": jnp.zeros((S,), jnp.float32),
+            "seeds": jnp.zeros((S,), jnp.int32),
+            "gen_idx": jnp.zeros((S,), jnp.int32),
+            "out_buf": jnp.zeros((S, cfg.max_new_tokens), jnp.int32),
+        }
+        # aggregate counters for benchmarks / monitoring
+        self.n_prefill_tokens = 0
+        self.n_decode_tokens = 0
+        self.n_completed = 0
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 32,
+               adapter: Union[str, int, None] = None,
+               temperature: float = 0.0, seed: int = 0) -> int:
+        """Enqueue one request; returns its uid.  Non-blocking — call
+        :meth:`step` (or :meth:`run` / :meth:`stream`) to make progress."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1 or max_new_tokens > self.cfg.max_new_tokens:
+            raise ValueError(
+                f"max_new_tokens must be in [1, {self.cfg.max_new_tokens}]")
+        if len(prompt) + max_new_tokens > self.cfg.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_seq_len={self.cfg.max_seq_len}")
+        aid = 0
+        if self.registry is not None:
+            aid = self.registry.resolve(adapter)
+        elif adapter is not None:
+            raise ValueError("adapter given but engine has no registry")
+        req = Request(uid=self._sched.new_uid(), prompt=prompt,
+                      max_new_tokens=max_new_tokens, adapter=adapter
+                      if isinstance(adapter, str) else None,
+                      adapter_id=aid, temperature=temperature, seed=seed)
+        if temperature > 0.0:
+            self._n_hot += 1
+        return self._sched.submit(req)
+
+    # -- progress -----------------------------------------------------------
+
+    def step(self) -> List[RequestResult]:
+        """Admit whatever fits, run one decode tick, return newly completed
+        requests (empty list if nothing finished this tick)."""
+        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
+               else _null())
+        done: List[RequestResult] = []
+        with ctx:
+            while True:
+                adm = self._sched.next_admission()
+                if adm is None:
+                    break
+                self._admit(*adm)
+            # single-token requests finish at prefill, before any tick
+            for slot in self._sched.completed_slots():
+                done.append(self._finalize(slot))
+            if self._sched.active_slots():
+                tick = self._tick_sample if self._n_hot else self._tick_greedy
+                # read the bank through the registry every tick so add() /
+                # hot-swap after construction takes effect (same shapes →
+                # no recompile)
+                bank = None if self.registry is None else self.registry.bank
+                self.cache, self._st = tick(
+                    self.params, bank, self.cache, self._st)
+                self._n_ticks += 1
+                for slot in self._sched.tick():
+                    done.append(self._finalize(slot))
+        return done
+
+    def run(self) -> Dict[int, RequestResult]:
+        """Drain the queue completely; returns {uid: result}."""
+        out: Dict[int, RequestResult] = {}
+        for res in self.stream():
+            out[res.uid] = res
+        return out
+
+    def stream(self) -> Iterator[RequestResult]:
+        """Yield results as requests complete (streaming consumption)."""
+        while self._sched.has_work:
+            yield from self.step()
+
+    @property
+    def pending(self) -> int:
+        return self._sched.queued + len(self._sched.active_slots())
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request):
+        tokens = jnp.asarray(req.prompt[None])
+        tree = (None if self.registry is None
+                else self.registry.adapter_tree(req.adapter_id))
+        logits, self.cache = self._prefill(self.params, tree, tokens,
+                                           self.cache, slot)
+        first = self._first_token(logits[0], req)
+        self._st = self._admit_update(
+            self._st, slot, first, len(req.prompt), req.adapter_id,
+            req.temperature, req.seed)
+        self.n_prefill_tokens += len(req.prompt)
+
+    @staticmethod
+    def _first_token(logits, req: Request):
+        if req.temperature <= 0.0:
+            return jnp.argmax(logits).astype(jnp.int32)
+        # generation index 0 of the same (seed, gen_idx) stream the tick uses
+        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), 0)
+        return jax.random.categorical(
+            key, logits / req.temperature).astype(jnp.int32)
+
+    def _finalize(self, slot: int) -> RequestResult:
+        req = self._sched.slot_request(slot)
+        n = self._sched.slot_generated(slot)
+        # the single device→host transfer for this request
+        row = np.asarray(self._st["out_buf"][slot, :n])
+        self._st["active"] = self._st["active"].at[slot].set(False)
+        req_evicted = self._sched.evict(slot)
+        if req_evicted.temperature > 0.0:
+            self._n_hot -= 1
+        self.n_decode_tokens += n - 1
+        self.n_completed += 1
+        name = (self.registry.name_of(req.adapter_id)
+                if self.registry is not None else None)
+        return RequestResult(uid=req.uid, tokens=row, adapter=name,
+                             prompt_len=len(req.prompt), n_generated=n)
 
 
 def _sample(logits, temperature, top_p, rng):

@@ -1,0 +1,145 @@
+"""Host-side continuous-batching scheduler: request queue + fixed slot table.
+
+Pure bookkeeping, no device work — the engine owns the arrays.  Separating
+the two keeps the policy unit-testable and keeps every decode step
+shape-stable: the slot count never changes, free slots simply decode masked
+garbage that nothing reads.
+
+Policy (vLLM-style admit-on-free-slot, FCFS):
+
+  * ``submit`` appends to a FIFO queue.
+  * Before every decode tick the engine drains ``next_admission()`` — one
+    (slot, request) pair per free slot — and prefetches each request's prompt
+    directly into its slot's cache row while the other slots are untouched.
+  * A slot is evicted the moment its request has produced all its tokens;
+    the freed slot is eligible for admission before the very next tick.
+
+Completion is tracked with host counters only (every decode tick yields
+exactly one token per active slot), so the hot loop never blocks on a
+device→host read; generated tokens stay on device until eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S_prompt,) int32
+    max_new_tokens: int
+    adapter: Optional[str] = None      # registry name; None → base model
+    adapter_id: int = 0                # resolved by the engine
+    temperature: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray                 # (n_generated,) int32
+    adapter: Optional[str]
+    prompt_len: int
+    n_generated: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    steps_left: int = 0                # decode ticks until completion
+    generated: int = 0                 # tokens produced so far (incl. prefill's)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Scheduler:
+    def __init__(self, max_slots: int):
+        assert max_slots >= 1
+        self.max_slots = max_slots
+        self._queue: Deque[Request] = deque()
+        self._slots: List[_Slot] = [_Slot() for _ in range(max_slots)]
+        self._uids = itertools.count()
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        self._queue.append(request)
+        return request.uid
+
+    def new_uid(self) -> int:
+        return next(self._uids)
+
+    # -- admission ----------------------------------------------------------
+
+    def next_admission(self) -> Optional[Tuple[int, Request]]:
+        """Pop the next queued request and assign it the lowest free slot.
+        Returns None when the queue is empty or all slots are busy."""
+        if not self._queue:
+            return None
+        for i, slot in enumerate(self._slots):
+            if slot.free:
+                req = self._queue.popleft()
+                slot.request = req
+                # prefill itself yields token #1; the remaining tokens come
+                # one per decode tick
+                slot.generated = 1
+                slot.steps_left = req.max_new_tokens - 1
+                return i, req
+        return None
+
+    # -- decode ticks -------------------------------------------------------
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if not s.free]
+
+    def completed_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots)
+                if not s.free and s.steps_left <= 0]
+
+    def tick(self) -> List[int]:
+        """Account one decode step for every active slot; returns the slots
+        that just finished (ready for eviction)."""
+        done = []
+        for i, s in enumerate(self._slots):
+            if s.free or s.steps_left <= 0:
+                continue
+            s.steps_left -= 1
+            s.generated += 1
+            if s.steps_left <= 0:
+                done.append(i)
+        return done
+
+    def evict(self, slot: int) -> Request:
+        s = self._slots[slot]
+        assert s.request is not None, f"evicting free slot {slot}"
+        req = s.request
+        s.request = None
+        s.steps_left = 0
+        s.generated = 0
+        return req
+
+    # -- introspection ------------------------------------------------------
+
+    def slot_generated(self, slot: int) -> int:
+        return self._slots[slot].generated
+
+    def slot_request(self, slot: int) -> Optional[Request]:
+        return self._slots[slot].request
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(not s.free for s in self._slots)
+
+    def utilization(self) -> float:
+        return sum(not s.free for s in self._slots) / self.max_slots

@@ -1,0 +1,121 @@
+"""Property-testing shim: real ``hypothesis`` when installed, else a minimal
+fixed-seed fallback.
+
+The CI image for this repo does not ship ``hypothesis``; importing it at
+module scope made three tier-1 test modules fail at *collection*.  Test
+modules import ``hypothesis`` and ``st`` from here instead:
+
+    from _propcheck import hypothesis, st
+
+The fallback implements exactly the surface those modules use —
+``hypothesis.given`` / ``hypothesis.settings`` and the ``st.integers`` /
+``st.floats`` / ``st.sampled_from`` / ``st.booleans`` strategies — by drawing
+``max_examples`` pseudo-random examples from a seed derived from the test
+name (stable across runs and processes, so failures are reproducible).
+Endpoint values are always exercised first, which is where most of the
+real shrink-to-boundary value of hypothesis lives for these tests.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random as _random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy = boundary examples + a random sampler."""
+
+        def __init__(self, boundary, sample):
+            self.boundary = list(boundary)
+            self.sample = sample
+
+        def example(self, rng: _random.Random):
+            return self.sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                (min_value, max_value),
+                lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                (min_value, max_value),
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                (elements[0], elements[-1]),
+                lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy((False, True), lambda rng: rng.random() < 0.5)
+
+    class _Hypothesis:
+        DEFAULT_MAX_EXAMPLES = 10
+
+        @staticmethod
+        def settings(max_examples=None, deadline=None, **_kw):
+            def deco(fn):
+                fn._propcheck_settings = {"max_examples": max_examples}
+                return fn
+
+            return deco
+
+        @staticmethod
+        def given(**strategies):
+            def deco(fn):
+                @functools.wraps(fn)
+                def wrapper(*args, **kwargs):
+                    cfg = (getattr(wrapper, "_propcheck_settings", None)
+                           or getattr(fn, "_propcheck_settings", None) or {})
+                    n = cfg.get("max_examples") or _Hypothesis.DEFAULT_MAX_EXAMPLES
+                    seed = int.from_bytes(
+                        hashlib.sha256(fn.__qualname__.encode()).digest()[:8],
+                        "big")
+                    rng = _random.Random(seed)
+                    names = sorted(strategies)
+                    # boundary pass: each strategy pinned to an endpoint while
+                    # the others draw randomly
+                    cases = []
+                    for name in names:
+                        for b in strategies[name].boundary:
+                            ex = {k: strategies[k].example(rng) for k in names}
+                            ex[name] = b
+                            cases.append(ex)
+                    while len(cases) < max(n, len(cases)):
+                        cases.append(
+                            {k: strategies[k].example(rng) for k in names})
+                    for ex in cases[: max(n, len(strategies) * 2)]:
+                        try:
+                            fn(*args, **ex, **kwargs)
+                        except Exception as e:
+                            raise AssertionError(
+                                f"propcheck falsifying example "
+                                f"{fn.__qualname__}({ex!r})") from e
+
+                # pytest must not mistake the strategy kwargs for fixtures:
+                # hide the wrapped signature (it would follow __wrapped__)
+                wrapper.__signature__ = inspect.Signature()
+                return wrapper
+
+            return deco
+
+    hypothesis = _Hypothesis()
+    st = _Strategies()
+
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

@@ -1,11 +1,11 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
 pure-jnp oracle (ref.py), plus hypothesis property tests on the oracles."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _propcheck import hypothesis, st
 
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention

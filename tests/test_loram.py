@@ -9,12 +9,12 @@ Property tests (hypothesis) cover the system's central invariants:
 """
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _propcheck import hypothesis, st
 
 from repro.configs import LoRAConfig, LoRAMConfig, get_smoke
 from repro.core import loram, pruning, recovery
@@ -99,6 +99,7 @@ def test_qloram_storage_reduction(tiny):
     assert rep["hbm_reduction"] > rep["reduction_ratio"]  # NF4 compounds
 
 
+@pytest.mark.slow
 def test_training_on_pruned_beats_init(tiny):
     plan, params = tiny
     cfg = LoRAMConfig(method="stru", ratio=0.5, keep_first=1, keep_last=1)

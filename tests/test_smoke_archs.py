@@ -44,6 +44,7 @@ def test_forward_shapes_no_nans(arch, rng):
 
 
 @pytest.mark.parametrize("arch", [a for a in ALL_ARCHS if a in SMOKE])
+@pytest.mark.slow
 def test_train_step_decreases_nothing_nan(arch, rng):
     cfg = get_smoke(arch)
     plan = make_plan(cfg)

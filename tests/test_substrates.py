@@ -4,12 +4,12 @@ import os
 import threading
 import time
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _propcheck import hypothesis, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import AlignmentCorpus, SFTDataset, index_for

@@ -24,6 +24,9 @@ from repro.serving import ServeEngine
 
 RNG = jax.random.PRNGKey(0)
 
+# end-to-end pipeline runs dominate suite wall-time (120s+ worst case)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def base():
