@@ -1,0 +1,101 @@
+"""Speculative serving with the LoRAM-pruned draft, end to end:
+
+  1. offline  — prune the full model (P(·)): the "train small" artifact
+  2. online   — train task adapters AT PRUNED WIDTHS on the small model
+  3. recover  — scatter the adapters to full rank (R(·)) for the target
+  4. serve    — the SAME pruned model + the SAME pruned adapters (pre-
+                recovery) now draft γ tokens per slot; the full model with
+                the recovered adapters verifies them in one batched forward
+
+The verify pass makes the output provably identical in distribution to
+serving the full model alone (token-identical under greedy) — the pruned
+model only sets the acceptance rate, i.e. how many tokens each round emits.
+
+  PYTHONPATH=src python examples/serve_speculative.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (LoRAConfig, LoRAMConfig, ServeConfig, TrainConfig,
+                           get_smoke)
+from repro.core import loram, recovery
+from repro.data import SFTDataset, batch_iterator
+from repro.models import init_params, make_plan
+from repro.runtime.trainer import Trainer
+from repro.serving import (AdapterRegistry, ContinuousServeEngine,
+                           SpeculativeServeEngine, draft_from_setup)
+
+rng = jax.random.PRNGKey(0)
+cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+plan = make_plan(cfg)
+params = init_params(plan, rng, jnp.float32)
+lora_cfg = LoRAConfig(rank=4)
+
+# offline: one pruning pass shared by every adapter AND by the draft
+setup = loram.setup(plan, params,
+                    LoRAMConfig(method="stru", ratio=0.5, keep_first=0,
+                                keep_last=0),
+                    lora_cfg, rng)
+draft = draft_from_setup(setup, max_adapters=4)
+
+# online: train two task adapters on the small model; register the PRUNED
+# weights with the draft and the RECOVERED weights with the target
+registry = None
+for task, seed in [("math", 11), ("code", 22)]:
+    tc = TrainConfig(global_batch=8, seq_len=32, learning_rate=5e-3,
+                     total_steps=25, warmup_steps=2, remat=False)
+    ds = SFTDataset(cfg.vocab_size, tc.seq_len, seed=seed)
+    trainer = Trainer(setup.small_plan, setup.small_params, setup.lora0, tc,
+                      lora_cfg, n_micro=1)
+    state = trainer.train(batch_iterator(ds, batch_size=8), log_every=0)
+    lora_full = recovery.recover_lora(state.lora, setup.spec, plan,
+                                      setup.small_plan)
+    if registry is None:
+        registry = AdapterRegistry(lora_full, max_adapters=4)
+    registry.add(task, lora_full)
+    draft.add(task, state.lora)
+    print(f"[speculative] trained '{task}' adapter at pruned widths "
+          f"({sum(x.size for x in jax.tree.leaves(state.lora)):,} params)")
+
+serve_cfg = ServeConfig(max_seq_len=64, max_slots=4, max_adapters=4,
+                        max_new_tokens=16, draft_gamma=3)
+
+# mixed-adapter traffic through both engines; identical greedy tokens
+work = [("math", 8, 8), ("code", 12, 6), ("math", 5, 8), (None, 8, 4),
+        ("code", 5, 8), ("math", 12, 5)]
+rs = np.random.default_rng(0)
+prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+           for _, n, _ in work]
+
+plain = ContinuousServeEngine(plan, params, serve_cfg, registry,
+                              lora_scale=lora_cfg.scale)
+spec = SpeculativeServeEngine(plan, params, serve_cfg, registry, draft,
+                              lora_scale=lora_cfg.scale)
+
+t0 = time.perf_counter()
+up = [plain.submit(p, max_new_tokens=m, adapter=a)
+      for p, (a, _, m) in zip(prompts, work)]
+rp = plain.run()
+t_plain = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+us = [spec.submit(p, max_new_tokens=m, adapter=a)
+      for p, (a, _, m) in zip(prompts, work)]
+rsp = spec.run()
+t_spec = time.perf_counter() - t0
+
+for a, b, (task, _, _) in zip(up, us, work):
+    assert np.array_equal(rp[a].tokens, rsp[b].tokens), "diverged!"
+    print(f"[speculative] uid={b} task={task or 'base':5s} "
+          f"tokens={rsp[b].tokens.tolist()}")
+
+tok = sum(r.n_generated for r in rsp.values())
+print(f"[speculative] {len(work)} requests, {tok} tokens — identical to the "
+      f"plain engine, token for token")
+print(f"[speculative] rounds={spec.n_rounds} (vs {plain._n_ticks} plain "
+      f"ticks), acceptance={spec.acceptance_rate:.1%}, "
+      f"plain {t_plain:.2f}s vs speculative {t_spec:.2f}s — OK")

@@ -292,6 +292,10 @@ class ServeConfig:
     max_slots: int = 8               # fixed decode batch — jit never recompiles
     max_adapters: int = 4            # capacity of the stacked adapter bank
     max_new_tokens: int = 128        # per-slot on-device output buffer length
+    # speculative decoding (repro.serving.speculative):
+    draft_gamma: int = 0             # draft tokens per round (0 → disabled)
+    draft_stage: str = "trained"     # "trained" (pruned base + pruned LoRA)
+                                     # | "base" (pruned base only)
 
 
 def round_to(x: int, mult: int) -> int:

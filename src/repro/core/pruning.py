@@ -375,6 +375,40 @@ def prune_params(params, plan: Plan, small_plan: Plan, spec: PruneSpec):
 
 
 # ---------------------------------------------------------------------------
+# Lossless-prune construction (bench / test harness)
+# ---------------------------------------------------------------------------
+
+def zero_prunable_tail(params, plan: Plan, ratio: float):
+    """Zero exactly the FFN channels / KV groups that magnitude-structured
+    pruning at ``ratio`` will remove, making P(·) LOSSLESS: the pruned model
+    computes the full model's function, so a speculative draft built from it
+    accepts ~100% of proposals.  Dense (mlp + attn) blocks only — callers
+    benchmarking MoE/SSM acceptance need their own construction.  Keep counts
+    come from the same :func:`_keep_counts` policy pruning itself uses, so
+    the two can never drift apart."""
+    out = jax.tree.map(lambda x: x, params)
+    for st in plan.stages:
+        d = st.dims
+        keep = _keep_counts(d, ratio)
+        for spec in st.superblock:
+            if spec.shared:
+                continue
+            bp = dict(out["stages"][st.name]["stacked"][spec.name])
+            if spec.kind == "mlp" and "ff" in keep:
+                bp["wg"] = bp["wg"].at[:, :, keep["ff"]:].set(0.0)
+                bp["wu"] = bp["wu"].at[:, :, keep["ff"]:].set(0.0)
+                bp["wd"] = bp["wd"].at[:, keep["ff"]:, :].set(0.0)
+            elif spec.kind == "attn" and "kv" in keep:
+                gs, hd = d.n_heads // d.n_kv_heads, d.head_dim
+                bp["wq"] = bp["wq"].at[:, :, keep["kv"] * gs * hd:].set(0.0)
+                bp["wk"] = bp["wk"].at[:, :, keep["kv"] * hd:].set(0.0)
+                bp["wv"] = bp["wv"].at[:, :, keep["kv"] * hd:].set(0.0)
+                bp["wo"] = bp["wo"].at[:, keep["kv"] * gs * hd:, :].set(0.0)
+            out["stages"][st.name]["stacked"][spec.name] = bp
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Non-structured masks (semi 4:8 / unstructured)
 # ---------------------------------------------------------------------------
 

@@ -6,6 +6,11 @@ into the FULL model, serve batched requests.
 ``--continuous`` serves the same requests through the continuous-batching
 multi-adapter engine (implies ``--no-merge``; each request routes through the
 adapter registry per-slot instead of a single global adapter).
+
+``--speculative`` additionally uses the LoRAM-pruned model as a draft: γ
+(``--gamma``) tokens are proposed per slot by the small model (running the
+pruned adapters pre-recovery) and verified by the full model in one batched
+forward — output is identical in distribution to plain serving.
 """
 from __future__ import annotations
 
@@ -19,7 +24,9 @@ import numpy as np
 from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_arch, get_smoke
 from repro.core import loram
 from repro.models import init_params, make_plan
-from repro.serving import AdapterRegistry, ContinuousServeEngine, ServeEngine
+from repro.serving import (AdapterRegistry, ContinuousServeEngine,
+                           ServeEngine, SpeculativeServeEngine,
+                           draft_from_setup)
 
 
 def main():
@@ -36,7 +43,14 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine (submit/step/stream)")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--speculative", action="store_true",
+                    help="pruned-draft speculative decoding (implies "
+                         "--continuous)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens per speculative round")
     args = ap.parse_args()
+    if args.speculative:
+        args.continuous = True
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     plan = make_plan(cfg)
@@ -55,12 +69,19 @@ def main():
     if args.continuous:
         registry = AdapterRegistry(lora_full, max_adapters=2)
         registry.add("task", lora_full)
-        eng = ContinuousServeEngine(
-            plan, params,
-            ServeConfig(max_seq_len=args.max_seq_len, max_slots=args.slots,
-                        max_adapters=registry.max_adapters,
-                        max_new_tokens=max(args.new_tokens, 1)),
-            registry)
+        serve_cfg = ServeConfig(
+            max_seq_len=args.max_seq_len, max_slots=args.slots,
+            max_adapters=registry.max_adapters,
+            max_new_tokens=max(args.new_tokens, 1),
+            draft_gamma=args.gamma if args.speculative else 0)
+        if args.speculative:
+            # the SAME pruned artifacts the adapter was trained on now draft
+            draft = draft_from_setup(setup, max_adapters=2)
+            draft.add("task", setup.lora0)
+            eng = SpeculativeServeEngine(plan, params, serve_cfg, registry,
+                                         draft)
+        else:
+            eng = ContinuousServeEngine(plan, params, serve_cfg, registry)
         t0 = time.perf_counter()
         for row in prompts:
             eng.submit(row, max_new_tokens=args.new_tokens, adapter="task",
@@ -68,9 +89,13 @@ def main():
         results = eng.run()
         dt = time.perf_counter() - t0
         n_tok = sum(r.n_generated for r in results.values())
-        print(f"[serve] continuous: {len(results)} requests, {n_tok} tokens "
+        mode = "speculative" if args.speculative else "continuous"
+        print(f"[serve] {mode}: {len(results)} requests, {n_tok} tokens "
               f"in {dt:.3f}s ({n_tok / max(dt, 1e-9):.1f} tok/s aggregate, "
               f"{args.slots} slots)")
+        if args.speculative:
+            print(f"[serve] γ={args.gamma}, acceptance "
+                  f"{eng.acceptance_rate:.1%}, {eng.n_rounds} rounds")
         for uid in sorted(results)[:4]:
             print(f"  uid={uid} tokens={results[uid].tokens[:12]}")
         return

@@ -270,6 +270,7 @@ def _attn_block(
     x, bp, blora, d: StageDims, *,
     kind: str, window: int, positions, theta: float, scale_l: float,
     enc_out=None, cache=None, pos=None, masks=None, adapter_ids=None,
+    verify: bool = False,
 ):
     B = x.shape[0]
     hd, H, K = d.head_dim, d.n_heads, d.n_kv_heads
@@ -295,9 +296,54 @@ def _attn_block(
         k = L.apply_rope(k, positions, theta)
 
     if cache is not None and kind != "cross_attn":
-        # decode or prefill-write
+        # decode, speculative verify, or prefill-write
         cache_size = cache["k"].shape[1]
-        if q.shape[1] == 1:  # decode step
+        if verify:
+            # Speculative verify: T draft tokens per slot, each slot at its own
+            # depth.  The persistent cache is NOT written — the engine commits
+            # only the accepted prefix (see serving.speculative.commit_cache) —
+            # so each query attends (a) the pre-round cache, masked to
+            # positions it may see, and (b) the in-block keys causally.  This
+            # keeps windowed ring caches exact under rollback: rejected tokens
+            # never touch the ring, so no slot ever aliases a stale write.
+            T = q.shape[1]
+            pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            qpos = pos_v[:, None] + jnp.arange(T)[None, :]          # (B, T)
+            karange = jnp.arange(cache_size)
+            # absolute position held by each ring slot before this round
+            last = pos_v[:, None] - 1
+            slot_pos = last - ((last - karange[None, :]) % cache_size)
+            valid_old = jnp.broadcast_to(
+                (slot_pos >= 0)[:, None, :], (B, T, cache_size))
+            if window:
+                valid_old = valid_old & (
+                    slot_pos[:, None, :] > qpos[:, :, None] - window)
+            tidx = jnp.arange(T)
+            blk = tidx[None, :] <= tidx[:, None]                    # (Tq, Tk)
+            if window:
+                blk = blk & (tidx[None, :] > tidx[:, None] - window)
+            gs = H // K
+            scale = 1.0 / (hd ** 0.5)
+            qg = q.reshape(B, T, K, gs, hd).transpose(0, 2, 3, 1, 4)
+            ck, cv = cache["k"], cache["v"]
+            kw = k.astype(ck.dtype)
+            vw = v.astype(cv.dtype)
+            lo = jnp.einsum("bkgtd,bskd->bkgts", qg,
+                            ck.astype(qg.dtype)).astype(jnp.float32) * scale
+            lb = jnp.einsum("bkgtd,bjkd->bkgtj", qg,
+                            k).astype(jnp.float32) * scale
+            lo = jnp.where(valid_old[:, None, None], lo, L.NEG_INF)
+            lb = jnp.where(blk[None, None, None], lb, L.NEG_INF)
+            probs = jax.nn.softmax(
+                jnp.concatenate([lo, lb], axis=-1), axis=-1)
+            po = probs[..., :cache_size].astype(cv.dtype)
+            pb = probs[..., cache_size:].astype(v.dtype)
+            out = (jnp.einsum("bkgts,bskd->bkgtd", po, cv)
+                   + jnp.einsum("bkgtj,bjkd->bkgtd", pb, v))
+            out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+            # pending writes: the engine scatters rows j < n_keep per slot
+            new_cache = {"k": kw, "v": vw}
+        elif q.shape[1] == 1:  # decode step
             # pos may be a scalar (whole batch at one position — legacy
             # engine) or per-slot (B,) (continuous batching: every slot sits
             # at its own depth in its own sequence).
@@ -373,26 +419,29 @@ def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
 
 def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelConfig,
                  *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None,
-                 adapter_ids=None):
+                 adapter_ids=None, verify: bool = False):
     new_cache = None
     if spec.kind in ("attn", "enc_attn", "cross_attn"):
         x, new_cache = _attn_block(
             x, bp, blora, d, kind=spec.kind, window=spec.window, positions=positions,
             theta=cfg.rope_theta, scale_l=scale_l, enc_out=enc_out, cache=cache, pos=pos,
-            masks=masks, adapter_ids=adapter_ids)
+            masks=masks, adapter_ids=adapter_ids, verify=verify)
     elif spec.kind == "mlp":
         xn = L.rms_norm(x, bp["ln"])
         x = x + L.swiglu(xn, bp, blora, scale_l, masks,
                          adapter_ids=adapter_ids).astype(x.dtype)
     elif spec.kind == "moe":
         xn = L.rms_norm(x, bp["ln"])
+        # verify batches B·T tokens: capacity must stay lossless so garbage
+        # from free slots can never displace a live request's token
         out, a = moe_mlp(xn, bp, top_k=d.top_k, capacity_factor=capacity_factor,
-                         lora=blora, lora_scale=scale_l, adapter_ids=adapter_ids)
+                         lora=blora, lora_scale=scale_l, adapter_ids=adapter_ids,
+                         lossless=verify)
         x = x + out.astype(x.dtype)
         aux = aux + a
     elif spec.kind == "mamba":
         x, new_cache = mamba_block(x, bp, d, blora, scale_l, cache,
-                                   adapter_ids=adapter_ids)
+                                   adapter_ids=adapter_ids, verify=verify)
     else:
         raise ValueError(spec.kind)
     return x, aux, new_cache
@@ -406,7 +455,7 @@ def run_stage(
     stage: Stage, sp: dict, slora: Optional[dict], x: Array, aux: Array, cfg: ModelConfig,
     *, positions, enc_out=None, cache: Optional[dict] = None, pos=None,
     scale_l: float = 2.0, remat: bool = False, masks: Optional[dict] = None,
-    adapter_ids=None,
+    adapter_ids=None, verify: bool = False,
 ):
     """sp = {"stacked": {...}, "shared": {...}} with leading n_rep on stacked."""
     stacked_p = sp["stacked"]
@@ -433,7 +482,7 @@ def run_stage(
                     _spec, bp_, bl_, xx_, aa_, stage.dims, cfg,
                     positions=positions, enc_out=enc_out, cache=bc_, pos=pos,
                     scale_l=scale_l, capacity_factor=cfg.capacity_factor,
-                    masks=bm_, adapter_ids=adapter_ids)
+                    masks=bm_, adapter_ids=adapter_ids, verify=verify)
 
             # adaptive remat granularity (§Perf iters 11/13): deep superblocks
             # (gemma3's 12 blocks) checkpoint per block so the backward
@@ -687,3 +736,45 @@ def decode_step(
     x = L.rms_norm(x, params["final_ln"])
     logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)
     return logits[:, 0], new_cache
+
+
+def verify_step(
+    plan: Plan, params: PyTree, tokens: Array, cache: PyTree, pos,
+    lora: Optional[PyTree] = None, *, lora_scale: float = 2.0,
+    adapter_ids: Optional[Array] = None,
+):
+    """Speculative-decoding verify: score T tokens per slot in ONE forward.
+
+    tokens: (B, T) int32 — per slot the already-emitted last token followed by
+    T-1 draft proposals; pos: (B,) int32 — the position at which each slot's
+    first token lands.  Returns ``(logits (B, T, V), pending)``: logits[:, j]
+    conditions on tokens[:, :j+1], and ``pending`` mirrors the cache tree but
+    holds this round's UNCOMMITTED state — attention blocks carry the block
+    K/V ``(n_rep, B, T, kv, hd)`` to scatter, mamba blocks carry per-step
+    conv/SSM snapshots ``(n_rep, B, T, ...)``.  The persistent cache is left
+    untouched; ``repro.serving.speculative.commit_cache`` applies the accepted
+    prefix once the accept length is known, which is what lets one fixed-shape
+    verify step serve every accept/reject outcome without recompiling.
+    """
+    cfg = plan.cfg
+    if plan.enc_stages:
+        raise NotImplementedError(
+            "speculative verify does not cover encoder-decoder frontends")
+    B, T = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(T)[None, :]
+
+    aux = jnp.zeros((), jnp.float32)
+    pending = {}
+    for st in plan.stages:
+        x, aux, st_pend = run_stage(
+            st, params["stages"][st.name],
+            None if lora is None else lora.get("stages", {}).get(st.name),
+            x, aux, cfg, positions=positions, enc_out=None,
+            cache=cache[st.name], pos=pos, scale_l=lora_scale,
+            adapter_ids=adapter_ids, verify=True)
+        pending[st.name] = st_pend
+    x = L.rms_norm(x, params["final_ln"])
+    logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)
+    return logits, pending

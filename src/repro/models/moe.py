@@ -39,6 +39,7 @@ def moe_mlp(
     lora: Optional[dict] = None,
     lora_scale: float = 2.0,
     adapter_ids: Optional[Array] = None,   # (B,) multi-adapter routing
+    lossless: bool = False,                # force drop-free capacity (verify)
 ) -> tuple[Array, Array]:
     """Returns (output, aux_loss)."""
     b, s, d = x.shape
@@ -50,12 +51,14 @@ def moe_mlp(
     router = maybe_dequant(p["router"], jnp.float32)      # (D, E)
     e = router.shape[-1]
     cap = _capacity(n_tok, e, top_k, capacity_factor)
-    if s == 1:
-        # single-token decode: capacity must be lossless.  With statistical
-        # capacity, garbage tokens from free serving slots (or an unlucky
-        # routing draw) can displace a live request's token from an expert
-        # buffer and silently corrupt its output; n_tok is the decode batch,
-        # so the worst case (every token's k routes on one expert) is cheap.
+    if s == 1 or lossless:
+        # single-token decode (and speculative verify, which batches B·T
+        # tokens): capacity must be lossless.  With statistical capacity,
+        # garbage tokens from free serving slots (or an unlucky routing draw)
+        # can displace a live request's token from an expert buffer and
+        # silently corrupt its output; n_tok is the decode batch (× the short
+        # verify length), so the worst case (every token's k routes on one
+        # expert) is cheap.
         cap = max(cap, n_tok * top_k)
 
     logits = (xe.astype(jnp.float32) @ router.astype(jnp.float32))

@@ -123,8 +123,18 @@ def mamba_block(
     cache: Optional[dict] = None,
     chunk: int = DEFAULT_CHUNK,
     adapter_ids: Optional[Array] = None,
+    verify: bool = False,
 ):
-    """Returns (out, new_cache).  cache = {"conv": (B,K-1,Cc), "ssm": (B,H,P,N)}."""
+    """Returns (out, new_cache).  cache = {"conv": (B,K-1,Cc), "ssm": (B,H,P,N)}.
+
+    ``verify=True`` (speculative decoding): S is the draft length; the
+    recurrence is stepped token by token from the cached state, and
+    ``new_cache`` holds PER-STEP snapshots ``{"conv": (B,S,K-1,Cc), "ssm":
+    (B,S,H,P,N)}`` — snapshot j is the state after consuming token j.  The
+    engine commits the snapshot at the accept boundary, which is how rejected
+    speculative tokens are rolled out of a recurrence that has no positions
+    to mask.
+    """
     di, N, H, P = dims.d_inner, dims.ssm_state, dims.ssm_heads, dims.ssm_head_dim
     resid_dtype = x.dtype
     xn = rms_norm(x, p["ln"])
@@ -138,7 +148,20 @@ def mamba_block(
 
     conv_in = jnp.concatenate([xc, b_mat, c_mat], axis=-1)
     conv_state = None if cache is None else cache["conv"]
-    conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_snaps = None
+    if verify and cache is not None:
+        # streaming conv + per-step (k-1)-window snapshots: after token j the
+        # conv state is inputs j+1-(k-1) .. j of the padded stream
+        kw = p["conv_w"].shape[0]
+        xa = jnp.concatenate([conv_state, conv_in], axis=1)
+        conv_out = sum(xa[:, i: i + conv_in.shape[1], :]
+                       * p["conv_w"][i][None, None, :] for i in range(kw))
+        new_conv = xa[:, -(kw - 1):, :]
+        snap_idx = (jnp.arange(conv_in.shape[1])[:, None] + 1
+                    + jnp.arange(kw - 1)[None, :])
+        conv_snaps = xa[:, snap_idx]                      # (B, S, k-1, Cc)
+    else:
+        conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state)
     conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(resid_dtype)
     xc, b_mat, c_mat = jnp.split(conv_out, [di, di + N], axis=-1)
 
@@ -148,7 +171,21 @@ def mamba_block(
     B, S = x.shape[:2]
     xh = xc.reshape(B, S, H, P)
 
-    if cache is not None and S == 1:
+    if cache is not None and verify:
+        # token-by-token recurrence (bitwise-identical to sequential decode
+        # steps), collecting the state after every token
+        def step(h, inp):
+            x_t, dt_t, b_t, c_t = inp
+            y_t, h_new = ssd_decode_step(h, x_t, dt_t, a, b_t, c_t)
+            return h_new, (y_t, h_new)
+
+        seq = (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+               b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+        _, (ys, hs) = lax.scan(step, cache["ssm"], seq)
+        y = ys.transpose(1, 0, 2, 3)                      # (B, S, H, P)
+        new_ssm = jnp.moveaxis(hs, 0, 1)                  # (B, S, H, P, N)
+        new_conv = conv_snaps
+    elif cache is not None and S == 1:
         y1, new_ssm = ssd_decode_step(
             cache["ssm"], xh[:, 0], dt[:, 0], a, b_mat[:, 0], c_mat[:, 0]
         )

@@ -17,7 +17,9 @@ from jax import lax
 
 from repro.configs.base import LoRAConfig, TrainConfig
 from repro.core.objectives import sft_loss
-from repro.models.model import Plan, decode_step as model_decode, forward, prefill as model_prefill
+from repro.models.model import (Plan, decode_step as model_decode, forward,
+                                prefill as model_prefill,
+                                verify_step as model_verify)
 from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import warmup_cosine
 
@@ -159,3 +161,119 @@ def make_prefill_into_slot(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
         return logits, new_cache
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# speculative-decoding serve steps (draft propose + target verify)
+# ---------------------------------------------------------------------------
+
+def request_key(seed, gen_idx, tag: Optional[int] = None):
+    """THE per-request PRNG key derivation, shared by every sampling site.
+
+    ``fold_in(PRNGKey(seed), gen_idx)`` is the key the plain engine uses for
+    the token at absolute generation index ``gen_idx``; speculative streams
+    fold in a ``tag`` on top (1 = draft proposal, 2 = accept draw,
+    3 = residual sample).  The spec engine's plain-slot bit-identity with
+    :class:`~repro.serving.engine.ContinuousServeEngine` depends on all
+    call sites deriving keys through this one function — do not inline it.
+    """
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), gen_idx)
+    return k if tag is None else jax.random.fold_in(k, tag)
+
+
+def make_verify_step(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
+    """Length-γ target verify for speculative decoding: per-slot token blocks
+    ``(B, γ)`` at per-slot positions through ONE forward.  Returns
+    ``(logits (B, γ, V), pending)`` — the persistent cache is untouched;
+    ``repro.serving.speculative.commit_cache`` scatters the accepted prefix
+    (see models.model.verify_step)."""
+
+    def step(params, bank, tokens, cache, pos, adapter_ids):
+        return model_verify(plan, params, tokens, cache, pos, bank,
+                            lora_scale=lora_scale, adapter_ids=adapter_ids)
+
+    return step
+
+
+def make_draft_loop(plan: Plan, gamma: int, *, lora_scale: float = 2.0,
+                    full_len: int = 0, sampling: bool = True) -> Callable:
+    """γ-step draft-proposal loop (the "train small" model as proposer).
+
+    One ``lax.scan`` of single-token decode steps — a single dispatch per
+    round no matter γ.  Step j consumes the previous token at per-slot
+    position ``pos + j`` and proposes the next; sampling slots draw from the
+    draft distribution at the request temperature with a key derived from
+    ``(seed, absolute generation index)`` so proposals are independent of
+    scheduling.  Returns ``(cache, drafts (γ, B), qs (γ, B, V), undo)`` where
+    ``cache`` contains the loop's (uncommitted) writes and ``undo`` carries
+    what the engine needs to roll back rejected tokens (see
+    repro.serving.speculative.commit_draft_cache): per-step conv/SSM
+    snapshots for mamba blocks, pre-write K/V rows for WINDOWED attention
+    blocks.  Full-length attention caches (``cache size == full_len``, the
+    engine's max_seq_len) need no rollback — a slot index equals its
+    position, so writes past the accept boundary are masked by the position
+    check and overwritten in order as decoding resumes — and are skipped
+    entirely, which keeps the rollback bookkeeping off the dense-model hot
+    path.  ``full_len=0`` conservatively tracks every attention block.
+    (In the final γ tokens of a near-max_seq_len request the loop's writes
+    can wrap past the cache end and clobber early DRAFT rows; that only
+    lowers acceptance for that tail — the verify pass owns correctness.)
+
+    ``sampling=False`` builds the all-greedy variant: proposals are pure
+    argmax and the per-step draft distributions are not materialized (qs is
+    returned as None) — the same greedy/sampled split the plain engine's
+    decode tick uses.
+    """
+    decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale)
+
+    def loop(params, bank, cache, last_tok, pos, adapter_ids, temps, seeds,
+             gen_idx):
+        B = last_tok.shape[0]
+        bidx = jnp.arange(B)
+        temp = jnp.maximum(temps, 1e-6)[:, None]
+
+        def keys_at(idx, tag):
+            return jax.vmap(lambda s, i: request_key(s, i, tag))(seeds, idx)
+
+        def body(carry, j):
+            dc, tok = carry
+            pre = {}
+            for stn, stc in dc.items():
+                for bn, bc in stc.items():
+                    if "k" in bc and bc["k"].shape[2] != full_len:
+                        slot = (pos + j) % bc["k"].shape[2]
+                        pre.setdefault(stn, {})[bn] = {
+                            "k": bc["k"][:, bidx, slot],
+                            "v": bc["v"][:, bidx, slot],
+                        }
+            logits, dc = decode(params, bank, tok, dc, pos + j, adapter_ids)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if sampling:
+                keys = keys_at(gen_idx + j, 1)
+                sampled = jax.vmap(jax.random.categorical)(
+                    keys, logits / temp).astype(jnp.int32)
+                nxt = jnp.where(temps > 0.0, sampled, nxt)
+            undo = {}
+            for stn, stc in dc.items():
+                undo[stn] = {}
+                for bn, bc in stc.items():
+                    if "k" in bc:
+                        if stn in pre and bn in pre[stn]:
+                            undo[stn][bn] = pre[stn][bn]
+                    else:                              # mamba: post-step state
+                        undo[stn][bn] = {"conv": bc["conv"], "ssm": bc["ssm"]}
+            if sampling:
+                q = jax.nn.softmax(logits / temp, axis=-1)
+                return (dc, nxt), (nxt, q, undo)
+            return (dc, nxt), (nxt, undo)
+
+        if sampling:
+            (cache, _), (drafts, qs, undo) = lax.scan(
+                body, (cache, last_tok), jnp.arange(gamma))
+        else:
+            (cache, _), (drafts, undo) = lax.scan(
+                body, (cache, last_tok), jnp.arange(gamma))
+            qs = None
+        return cache, drafts, qs, undo
+
+    return loop

@@ -1,5 +1,10 @@
 from repro.serving.adapters import AdapterRegistry  # noqa: F401
+from repro.serving.draft import (DraftModel, build_draft,  # noqa: F401
+                                 draft_from_setup)
 from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401
                                   GenerationResult, ServeEngine)
 from repro.serving.scheduler import (Request, RequestResult,  # noqa: F401
                                      Scheduler)
+from repro.serving.speculative import (SpeculativeConfig,  # noqa: F401
+                                       SpeculativeServeEngine, commit_cache,
+                                       commit_draft_cache, speculative_accept)

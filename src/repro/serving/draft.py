@@ -1,0 +1,86 @@
+"""Draft models for speculative serving — LoRAM's pruned model as proposer.
+
+The paper's central artifact is a structurally pruned "train small" model
+whose :class:`~repro.core.pruning.PruneSpec` maps every kept channel back
+into the full model.  That same artifact is a ready-made DRAFT model for
+speculative decoding: it is a real (smaller) transformer over the same
+vocabulary, and the adapters trained on it run natively at pruned widths —
+no recovery needed on the draft side.  A :class:`DraftModel` bundles:
+
+  * the pruned plan + pruned frozen base (``LoRAMSetup.small_plan`` /
+    ``small_params`` — possibly aligned and/or NF4-quantized), and
+  * optionally an :class:`~repro.serving.adapters.AdapterRegistry` whose bank
+    stacks the PRE-RECOVERY (pruned-width) adapter trees, routed per slot by
+    the same ``adapter_id`` the target registry uses.
+
+Correctness never depends on the draft: the target's acceptance-rejection
+verify makes the output distribution exactly the target model's (and
+token-identical under greedy) for ANY proposer.  The draft only sets the
+acceptance rate — i.e. the speedup.  A draft without adapters (``registry
+= None``) therefore still serves adapter traffic correctly, just with more
+rejections on adapter-heavy streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+from repro.models.model import Plan
+from repro.serving.adapters import AdapterRegistry
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class DraftModel:
+    """The pruned proposer: small plan, frozen pruned base, optional bank of
+    pruned-width adapters (ids MUST mirror the target registry's)."""
+
+    plan: Plan
+    params: Any
+    registry: Optional[AdapterRegistry] = None
+
+    @property
+    def bank(self) -> Optional[PyTree]:
+        return None if self.registry is None else self.registry.bank
+
+    def add(self, name: str, small_lora: PyTree) -> int:
+        """Register a pruned-width adapter under ``name``.  Register adapters
+        in the SAME ORDER as on the target registry so ids line up."""
+        if self.registry is None:
+            raise ValueError("draft model was built without an adapter bank")
+        return self.registry.add(name, small_lora)
+
+    def adapter_tree(self, adapter: Union[str, int, None]) -> Optional[PyTree]:
+        if self.registry is None:
+            return None
+        aid = adapter if isinstance(adapter, int) else None
+        if aid is not None and aid >= len(self.registry.names):
+            # target knows more adapters than the draft — fall back to the
+            # pruned base (correct, just a worse proposer for that stream).
+            # The decode loop needs no such guard: an unregistered bank row
+            # is zeros, and a zero LoRA delta IS the base route.
+            return None
+        return self.registry.adapter_tree(adapter)
+
+
+def build_draft(small_plan: Plan, small_params, *,
+                adapter_template: Optional[PyTree] = None,
+                max_adapters: int = 0) -> DraftModel:
+    """Assemble a :class:`DraftModel` from the pruned ("train small") plan and
+    params.  ``adapter_template`` is any pruned-width adapter tree (e.g.
+    ``LoRAMSetup.lora0``) — required when ``max_adapters > 0``."""
+    registry = None
+    if max_adapters:
+        if adapter_template is None:
+            raise ValueError("max_adapters > 0 requires an adapter_template")
+        registry = AdapterRegistry(adapter_template, max_adapters)
+    return DraftModel(small_plan, small_params, registry)
+
+
+def draft_from_setup(setup, *, max_adapters: int = 0) -> DraftModel:
+    """Build the draft straight from a :class:`~repro.core.loram.LoRAMSetup` —
+    the exact artifacts the online training stage already has in memory."""
+    return build_draft(setup.small_plan, setup.small_params,
+                       adapter_template=setup.lora0,
+                       max_adapters=max_adapters)

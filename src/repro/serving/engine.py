@@ -36,7 +36,8 @@ from repro.core.recovery import merge_lora
 from repro.distributed import sharding
 from repro.models.model import Plan, init_cache
 from repro.runtime.steps import (make_decode_step, make_multi_adapter_decode_step,
-                                 make_prefill_into_slot, make_prefill_step)
+                                 make_prefill_into_slot, make_prefill_step,
+                                 request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 
@@ -169,10 +170,7 @@ class ContinuousServeEngine:
                     # key = (request seed, generation index): sampling is
                     # reproducible per request no matter how the scheduler
                     # interleaved it with other traffic
-                    keys = jax.vmap(
-                        lambda sd, gi: jax.random.fold_in(
-                            jax.random.PRNGKey(sd), gi)
-                    )(st["seeds"], st["gen_idx"])
+                    keys = jax.vmap(request_key)(st["seeds"], st["gen_idx"])
                     temp = jnp.maximum(st["temps"], 1e-6)[:, None]
                     sampled = jax.vmap(jax.random.categorical)(
                         keys, logits / temp).astype(jnp.int32)
@@ -240,9 +238,12 @@ class ContinuousServeEngine:
 
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 32,
                adapter: Union[str, int, None] = None,
-               temperature: float = 0.0, seed: int = 0) -> int:
+               temperature: float = 0.0, seed: int = 0,
+               speculative: bool = True) -> int:
         """Enqueue one request; returns its uid.  Non-blocking — call
-        :meth:`step` (or :meth:`run` / :meth:`stream`) to make progress."""
+        :meth:`step` (or :meth:`run` / :meth:`stream`) to make progress.
+        ``speculative`` is honored by :class:`SpeculativeServeEngine` only
+        (per-request opt-out of draft-then-verify); this engine ignores it."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1 or max_new_tokens > self.cfg.max_new_tokens:
             raise ValueError(
@@ -259,7 +260,8 @@ class ContinuousServeEngine:
         req = Request(uid=self._sched.new_uid(), prompt=prompt,
                       max_new_tokens=max_new_tokens, adapter=adapter
                       if isinstance(adapter, str) else None,
-                      adapter_id=aid, temperature=temperature, seed=seed)
+                      adapter_id=aid, temperature=temperature, seed=seed,
+                      speculative=speculative)
         if temperature > 0.0:
             self._n_hot += 1
         return self._sched.submit(req)
@@ -329,9 +331,9 @@ class ContinuousServeEngine:
         if req.temperature <= 0.0:
             return jnp.argmax(logits).astype(jnp.int32)
         # generation index 0 of the same (seed, gen_idx) stream the tick uses
-        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), 0)
         return jax.random.categorical(
-            key, logits / req.temperature).astype(jnp.int32)
+            request_key(req.seed, 0),
+            logits / req.temperature).astype(jnp.int32)
 
     def _finalize(self, slot: int) -> RequestResult:
         req = self._sched.slot_request(slot)

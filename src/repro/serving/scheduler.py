@@ -37,6 +37,7 @@ class Request:
     adapter_id: int = 0                # resolved by the engine
     temperature: float = 0.0
     seed: int = 0
+    speculative: bool = True           # opt-out honored by the spec engine
 
 
 @dataclasses.dataclass
@@ -116,6 +117,17 @@ class Scheduler:
                 done.append(i)
         return done
 
+    def advance(self, slot: int, k: int) -> bool:
+        """Account ``k`` decode tokens for one active slot (speculative
+        rounds emit a variable 1..γ tokens per round); returns True when the
+        request just finished (ready for eviction)."""
+        s = self._slots[slot]
+        assert s.request is not None, f"advancing free slot {slot}"
+        assert k >= 0, k
+        s.steps_left -= k
+        s.generated += k
+        return s.steps_left <= 0
+
     def evict(self, slot: int) -> Request:
         s = self._slots[slot]
         assert s.request is not None, f"evicting free slot {slot}"
@@ -129,6 +141,9 @@ class Scheduler:
 
     def slot_generated(self, slot: int) -> int:
         return self._slots[slot].generated
+
+    def slot_steps_left(self, slot: int) -> int:
+        return self._slots[slot].steps_left
 
     def slot_request(self, slot: int) -> Optional[Request]:
         return self._slots[slot].request

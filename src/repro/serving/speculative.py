@@ -1,0 +1,527 @@
+"""Speculative decoding: the LoRAM-pruned model drafts, the full model
+verifies — the paper's memory-saving artifact turned into a serving-latency
+win.
+
+Per continuous-batching round (one jitted dispatch, fixed shapes forever):
+
+  1. **Draft**: the pruned small model proposes γ tokens per slot via a
+     ``lax.scan`` of single-token decode steps, running its PRE-RECOVERY
+     (pruned-width) adapters from the draft bank.
+  2. **Verify**: the full model scores all γ tokens per slot in ONE batched
+     forward (:func:`repro.models.model.verify_step`) — one weight pass for γ
+     tokens, which is the entire economics of speculative decoding.
+  3. **Accept**: greedy slots accept the longest prefix matching the target
+     argmax (output is token-identical to non-speculative decoding);
+     temperature>0 slots run standard acceptance-rejection sampling
+     (Leviathan et al.; Chen et al. 2023): accept ``d ~ q`` with probability
+     ``min(1, p(d)/q(d))``, else emit a sample from ``norm(max(p - q, 0))``
+     — the emitted distribution is EXACTLY the target's ``p``.
+  4. **Commit**: the verify pass never wrote the persistent caches; a fused
+     scatter commits only the accepted prefix (attention K/V rows) / selects
+     the accepted per-step state snapshot (SSM, conv), and the draft's
+     rejected writes are rolled back from saved rows.  Nothing downstream
+     ever observes a rejected token.
+
+Rounds emit between 1 and γ tokens.  When all γ drafts are accepted the round
+emits exactly γ (no bonus token): the draft then sits exactly ONE token
+behind the target — the same lag as after a rejection — so every round has
+identical shapes and neither model ever recompiles mid-flight.
+
+Per-slot ``speculative=False`` requests share the same round with all
+accepts masked off; their correction token is sampled from the raw target
+logits with the plain engine's exact ``(seed, generation index)`` key, so
+plain traffic through this engine is bit-identical to
+:class:`~repro.serving.engine.ContinuousServeEngine` output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ServeConfig
+from repro.distributed import sharding
+from repro.models.model import init_cache
+from repro.runtime.steps import (make_draft_loop, make_prefill_into_slot,
+                                 make_verify_step, request_key)
+from repro.serving.adapters import AdapterRegistry
+from repro.serving.draft import DraftModel
+from repro.serving.engine import ContinuousServeEngine, _null
+from repro.serving.scheduler import RequestResult
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Knobs of the draft-then-verify subsystem.
+
+    gamma:       draft proposals per round (verify scores γ tokens at once).
+    draft_stage: which pruned artifact proposes — "trained" runs the pruned
+                 base WITH the pruned-width adapters (best acceptance),
+                 "base" runs the pruned base alone (one draft for all
+                 adapter streams; correct, lower acceptance).
+    """
+
+    gamma: int = 4
+    draft_stage: str = "trained"
+
+    def __post_init__(self):
+        assert self.gamma >= 1, "draft_gamma must be >= 1"
+        assert self.draft_stage in ("trained", "base"), self.draft_stage
+
+    @classmethod
+    def from_serve(cls, cfg: ServeConfig) -> "SpeculativeConfig":
+        if cfg.draft_gamma < 1:
+            # 0 means "speculation disabled" — don't silently pick a default
+            raise ValueError(
+                "ServeConfig.draft_gamma=0 disables speculation; set "
+                "draft_gamma >= 1 (or pass an explicit SpeculativeConfig) "
+                "to use SpeculativeServeEngine")
+        return cls(gamma=cfg.draft_gamma, draft_stage=cfg.draft_stage)
+
+
+# ---------------------------------------------------------------------------
+# acceptance-rejection (pure math — property-tested directly)
+# ---------------------------------------------------------------------------
+
+def speculative_accept(p, q, drafts, uniforms, *, greedy_ok=None, temps=None,
+                       spec=None):
+    """Leading-accept count + residual distribution at the first rejection.
+
+    p, q: (B, T, V) target/draft distributions per position; drafts (B, T)
+    proposed tokens; uniforms (B, T) accept draws in [0, 1).  Position i is
+    accepted iff ``u_i · q_i(d_i) < p_i(d_i)`` (for greedy rows, iff the draft
+    matches ``greedy_ok``); ``spec=False`` rows reject everything, and their
+    residual collapses to the raw target distribution (q treated as 0) — that
+    is what makes non-speculative slots inside a speculative round emit
+    exactly plain-engine tokens.
+
+    Returns ``(n, m, resid)``: n (B,) leading accepts, m = min(n, T-1) the
+    correction position, resid (B, V) the normalized ``max(p_m - q_m, 0)``
+    residual.  Emitting drafts[:, :n] then (when n < T) a resid sample yields
+    EXACTLY the target distribution at every position.
+    """
+    B, T, _ = p.shape
+    bidx = jnp.arange(B)
+    p_d = jnp.take_along_axis(p, drafts[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+    acc = uniforms * q_d < p_d
+    if greedy_ok is not None:
+        acc = jnp.where(temps[:, None] > 0.0, acc, greedy_ok)
+    if spec is not None:
+        acc = acc & spec[:, None]
+    n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    m = jnp.minimum(n, T - 1)
+    q_eff = q if spec is None else jnp.where(spec[:, None, None], q, 0.0)
+    resid = jnp.maximum(p[bidx, m] - q_eff[bidx, m], 0.0)
+    resid = resid / jnp.maximum(jnp.sum(resid, axis=-1, keepdims=True), 1e-30)
+    return n, m, resid
+
+
+# ---------------------------------------------------------------------------
+# cache commit / rollback
+# ---------------------------------------------------------------------------
+
+def _commit_kv(big, pend, pos, n_keep):
+    """Scatter pending K/V rows j < n_keep[b] into the ring cache; rows at or
+    beyond the accept boundary keep their pre-round values."""
+    S, T = big.shape[2], pend.shape[2]
+    B = pos.shape[0]
+    bidx = jnp.arange(B)
+    slots = (pos[:, None] + jnp.arange(T)[None, :]) % S         # (B, T)
+    old = big[:, bidx[:, None], slots]                          # (r, B, T, ...)
+    keep = jnp.arange(T)[None, :] < n_keep[:, None]
+    mixed = jnp.where(keep[None, :, :, None, None], pend.astype(big.dtype), old)
+    return big.at[:, bidx[:, None], slots].set(mixed)
+
+
+def _commit_kv_all(big, pend, pos):
+    """Full-length caches (slot == position, the ring never wraps): write ALL
+    pending rows.  Rows past the accept boundary are semantically stale but
+    harmless — every reader masks positions beyond the committed ``pos`` and
+    resumed decoding overwrites them in order — so the masked read-modify-
+    write of :func:`_commit_kv` is unnecessary.  Rows past the END of the
+    cache (a slot in its final tokens) are dropped, not wrapped: position
+    ``max_seq_len`` does not exist, and wrapping would corrupt position 0."""
+    T = pend.shape[2]
+    B = pos.shape[0]
+    bidx = jnp.arange(B)
+    slots = pos[:, None] + jnp.arange(T)[None, :]       # deliberately un-modded
+    return big.at[:, bidx[:, None], slots].set(pend.astype(big.dtype),
+                                               mode="drop")
+
+
+def _restore_kv(big, old, pos, n_keep):
+    """Inverse of a draft loop's writes: rows j >= n_keep[b] are rolled back
+    to the saved pre-write values (old: (γ, n_rep, B, kv, hd))."""
+    G = old.shape[0]
+    S = big.shape[2]
+    B = pos.shape[0]
+    bidx = jnp.arange(B)
+    slots = (pos[:, None] + jnp.arange(G)[None, :]) % S
+    cur = big[:, bidx[:, None], slots]
+    oldt = jnp.moveaxis(old, 0, 2)                              # (r, B, γ, ...)
+    keep = jnp.arange(G)[None, :] < n_keep[:, None]
+    mixed = jnp.where(keep[None, :, :, None, None], cur, oldt.astype(big.dtype))
+    return big.at[:, bidx[:, None], slots].set(mixed)
+
+
+def _commit_state(cur, snaps, n_keep):
+    """Recurrent state (SSM/conv): select the snapshot after the last kept
+    token; n_keep == 0 rows keep ``cur`` (free slots are reset at admission
+    anyway)."""
+    B = n_keep.shape[0]
+    idx = jnp.clip(n_keep - 1, 0, snaps.shape[2] - 1)
+    sel = snaps[:, jnp.arange(B), idx]                          # (r, B, ...)
+    mask = (n_keep > 0).reshape((1, B) + (1,) * (sel.ndim - 2))
+    return jnp.where(mask, sel.astype(cur.dtype), cur)
+
+
+def commit_cache(cache, pending, pos, n_keep, full_len: int = 0):
+    """Apply a verify pass's accepted prefix to the target cache.  ``pending``
+    is :func:`repro.models.model.verify_step`'s second output.  Attention
+    caches of size ``full_len`` (= the engine's max_seq_len: slot index ==
+    position) take the cheap unconditional-write path; windowed rings and
+    recurrent state commit exactly at the accept boundary."""
+    out = {}
+    for stn, stc in cache.items():
+        out[stn] = {}
+        for bn, bc in stc.items():
+            pend = pending[stn][bn]
+            if "k" in bc:
+                if bc["k"].shape[2] == full_len:
+                    out[stn][bn] = {
+                        "k": _commit_kv_all(bc["k"], pend["k"], pos),
+                        "v": _commit_kv_all(bc["v"], pend["v"], pos),
+                    }
+                else:
+                    out[stn][bn] = {
+                        "k": _commit_kv(bc["k"], pend["k"], pos, n_keep),
+                        "v": _commit_kv(bc["v"], pend["v"], pos, n_keep),
+                    }
+            else:
+                out[stn][bn] = {
+                    "conv": _commit_state(bc["conv"], pend["conv"], n_keep),
+                    "ssm": _commit_state(bc["ssm"], pend["ssm"], n_keep),
+                }
+    return out
+
+
+def commit_draft_cache(cache, undo, pos, n_keep):
+    """Roll the draft cache back to the accept boundary.  ``undo`` is
+    :func:`repro.runtime.steps.make_draft_loop`'s fourth output: per-step
+    state snapshots for mamba, pre-write K/V rows for windowed attention.
+    Attention blocks absent from ``undo`` (full-length caches) keep the
+    loop's writes — stale rows there are masked and later overwritten."""
+    out = {}
+    for stn, stc in cache.items():
+        out[stn] = {}
+        for bn, bc in stc.items():
+            ud = undo.get(stn, {}).get(bn)
+            if "k" in bc:
+                if ud is None:
+                    out[stn][bn] = bc
+                else:
+                    out[stn][bn] = {
+                        "k": _restore_kv(bc["k"], ud["k"], pos, n_keep),
+                        "v": _restore_kv(bc["v"], ud["v"], pos, n_keep),
+                    }
+            else:
+                out[stn][bn] = {
+                    "conv": _commit_state(
+                        bc["conv"], jnp.moveaxis(ud["conv"], 0, 2), n_keep),
+                    "ssm": _commit_state(
+                        bc["ssm"], jnp.moveaxis(ud["ssm"], 0, 2), n_keep),
+                }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one fused draft → verify → accept → commit round
+# ---------------------------------------------------------------------------
+
+def _keys(seeds, idx, tag):
+    return jax.vmap(lambda s, i: request_key(s, i, tag))(seeds, idx)
+
+
+def _uniforms(seeds, gen, gamma):
+    def one(s, i):
+        return jax.random.uniform(request_key(s, i, 2), ())
+    si = jnp.repeat(seeds[:, None], gamma, axis=1)
+    gi = gen[:, None] + jnp.arange(gamma)[None, :]
+    return jax.vmap(jax.vmap(one))(si, gi)
+
+
+def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
+                    draft_lora_scale: float = 2.0, full_len: int = 0,
+                    sampling: bool = True):
+    """Build the whole-round function: (params, bank, draft_params,
+    draft_bank, cache, draft_cache, st) → (cache, draft_cache, st, info).
+    One jit, shape-stable in every argument — compiled exactly once.
+    ``full_len`` is the engine's max_seq_len; attention caches of that size
+    skip rollback bookkeeping entirely (see :func:`commit_cache`).
+    ``sampling=False`` is the all-greedy fast path: no draft distributions,
+    no target softmax, no PRNG work — acceptance is pure argmax matching."""
+    draft_loop = make_draft_loop(draft_plan, gamma,
+                                 lora_scale=draft_lora_scale,
+                                 full_len=full_len, sampling=sampling)
+    verify = make_verify_step(plan, lora_scale=lora_scale)
+
+    def round_fn(params, bank, dparams, dbank, cache, dcache, st):
+        B = st["pos"].shape[0]
+        bidx = jnp.arange(B)
+        pos, gen = st["pos"], st["gen_idx"]
+        temps, seeds = st["temps"], st["seeds"]
+        act, spec = st["active"], st["spec"]
+        temp = jnp.maximum(temps, 1e-6)
+
+        dcache, drafts_t, qs_t, undo = draft_loop(
+            dparams, dbank, dcache, st["last_tok"], pos, st["adapter_ids"],
+            temps, seeds, gen)
+        drafts = drafts_t.T                              # (B, γ): d_1..d_γ
+
+        # verify block: the already-emitted last token + the first γ-1 drafts;
+        # logits[:, i] is the target distribution that judges drafts[:, i]
+        u_tok = jnp.concatenate(
+            [st["last_tok"][:, None], drafts[:, :gamma - 1]], axis=1)
+        logits, pending = verify(params, bank, u_tok, cache, pos,
+                                 st["adapter_ids"])
+        tgt_greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        if sampling:
+            p = jax.nn.softmax(logits / temp[:, None, None], axis=-1)
+            qs = jnp.moveaxis(qs_t, 0, 1)                # (B, γ, V)
+            u = _uniforms(seeds, gen, gamma)
+            n, m, resid = speculative_accept(
+                p, qs, drafts, u, greedy_ok=drafts == tgt_greedy, temps=temps,
+                spec=spec)
+            # correction token at the first rejected position (unused when
+            # n == γ).  Plain slots sample the RAW target logits under the
+            # plain engine's exact (seed, gen_idx) key — bit-identical to
+            # non-speculative serving.
+            corr_logits = jnp.where(spec[:, None], jnp.log(resid + 1e-30),
+                                    logits[bidx, m] / temp[:, None])
+            key_corr = jnp.where(spec[:, None], _keys(seeds, gen + m, 3),
+                                 _keys(seeds, gen, None))
+            t_samp = jax.vmap(jax.random.categorical)(
+                key_corr, corr_logits).astype(jnp.int32)
+            t = jnp.where(temps > 0.0, t_samp, tgt_greedy[bidx, m])
+        else:
+            acc = (drafts == tgt_greedy) & spec[:, None]
+            n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+            m = jnp.minimum(n, gamma - 1)
+            t = tgt_greedy[bidx, m]
+        n_keep = jnp.minimum(n + 1, gamma)
+
+        last_new = jnp.where(n >= gamma, drafts[:, gamma - 1], t)
+        remaining = st["max_new"] - gen
+        e_eff = jnp.where(act, jnp.minimum(n_keep, remaining), 0)
+        keep_c = jnp.where(act, n_keep, 0)
+
+        emit = jnp.where(jnp.arange(gamma)[None, :] < n[:, None], drafts,
+                         t[:, None])
+        cols = jnp.minimum(gen[:, None] + jnp.arange(gamma)[None, :],
+                           st["out_buf"].shape[1] - 1)
+        wmask = jnp.arange(gamma)[None, :] < e_eff[:, None]
+        cur = st["out_buf"][bidx[:, None], cols]
+        out_buf = st["out_buf"].at[bidx[:, None], cols].set(
+            jnp.where(wmask, emit, cur))
+
+        cache = commit_cache(cache, pending, pos, keep_c, full_len)
+        dcache = commit_draft_cache(dcache, undo, pos, keep_c)
+
+        new_st = dict(st)
+        new_st.update(
+            last_tok=jnp.where(act, last_new, st["last_tok"]),
+            pos=pos + keep_c,
+            gen_idx=gen + e_eff,
+            out_buf=out_buf)
+        info = {
+            "emitted": e_eff,
+            "accepted": jnp.where(act & spec, n, 0),
+            "proposed": jnp.where(act & spec, gamma, 0),
+        }
+        return cache, dcache, new_st, info
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _min_attn_ring(plan, max_seq_len: int) -> int:
+    """Smallest attention cache ring in the plan (windowed layers reserve
+    only ``window`` slots)."""
+    sizes = [min(b.window, max_seq_len) if b.window else max_seq_len
+             for st in plan.stages for b in st.superblock if b.kind == "attn"]
+    return min(sizes, default=max_seq_len)
+
+
+class SpeculativeServeEngine(ContinuousServeEngine):
+    """Continuous-batching engine with a pruned-draft speculative mode.
+
+    Same submit/step/stream surface as :class:`ContinuousServeEngine`; each
+    request may opt out via ``submit(..., speculative=False)`` (such requests
+    produce bit-identical tokens to the plain engine while sharing slots with
+    speculative traffic).  The only device→host sync is the accept counts
+    the scheduler needs, read once per BATCH of rounds (see :meth:`step`).
+    """
+
+    def __init__(self, plan, params, cfg: ServeConfig,
+                 registry: Optional[AdapterRegistry] = None,
+                 draft: Optional[DraftModel] = None, *,
+                 spec: Optional[SpeculativeConfig] = None,
+                 lora_scale: float = 2.0,
+                 draft_lora_scale: Optional[float] = None, mesh=None):
+        if draft is None:
+            raise ValueError("SpeculativeServeEngine requires a DraftModel "
+                             "(see repro.serving.draft)")
+        spec = spec or SpeculativeConfig.from_serve(cfg)
+        super().__init__(plan, params, cfg, registry, lora_scale=lora_scale,
+                         mesh=mesh)
+        if draft_lora_scale is None:
+            draft_lora_scale = lora_scale
+        self.draft = draft
+        self.spec_cfg = spec
+        self.gamma = spec.gamma
+        # a round touches γ consecutive ring slots per layer; γ larger than
+        # the smallest windowed ring would alias slots ((pos+j) % window
+        # repeats) and make the commit/rollback scatters silently corrupt it
+        ring = min(_min_attn_ring(plan, cfg.max_seq_len),
+                   _min_attn_ring(draft.plan, cfg.max_seq_len))
+        if spec.gamma > ring:
+            raise ValueError(
+                f"draft_gamma={spec.gamma} exceeds the smallest attention "
+                f"cache ring ({ring}) — a speculative round may not span "
+                f"more slots than the shortest sliding window")
+        # draft_stage="base": propose with the pruned base only (one draft
+        # for every adapter stream); the bank and per-request trees are
+        # simply never consulted
+        self._draft_base_only = spec.draft_stage == "base"
+        S = cfg.max_slots
+        self.draft_cache = init_cache(draft.plan, S, cfg.max_seq_len,
+                                      jnp.dtype(cfg.kv_cache_dtype))
+        self._st.update({
+            "spec": jnp.zeros((S,), bool),
+            "max_new": jnp.zeros((S,), jnp.int32),
+        })
+        # all-greedy traffic skips draft distributions / softmax / PRNG work
+        # entirely — same split as the plain engine's greedy/sampled ticks
+        self._round_greedy, self._round_sample = (
+            jax.jit(make_spec_round(plan, draft.plan, spec.gamma,
+                                    lora_scale=lora_scale,
+                                    draft_lora_scale=draft_lora_scale,
+                                    full_len=cfg.max_seq_len,
+                                    sampling=sampling),
+                    donate_argnums=(4, 5, 6))
+            for sampling in (False, True))
+
+        # one dispatch per admission: target + draft prefill fused (a separate
+        # draft prefill call would double the admission dispatch cost, which
+        # dominates short-generation workloads)
+        tgt_prefill = make_prefill_into_slot(plan, lora_scale=lora_scale)
+        dft_prefill = make_prefill_into_slot(draft.plan,
+                                             lora_scale=draft_lora_scale)
+
+        def prefill_both(params, tree, dparams, dtree, tokens, cache, dcache,
+                         slot):
+            logits, cache = tgt_prefill(params, tree, tokens, cache, slot)
+            _, dcache = dft_prefill(dparams, dtree, tokens, dcache, slot)
+            return logits, cache, dcache
+
+        self._prefill_both = jax.jit(prefill_both, donate_argnums=(5, 6))
+
+        def admit_spec(st, slot, first, pos0, aid, temp, seed, max_new,
+                       use_spec):
+            return {
+                "last_tok": st["last_tok"].at[slot].set(first),
+                "pos": st["pos"].at[slot].set(pos0),
+                "active": st["active"].at[slot].set(True),
+                "adapter_ids": st["adapter_ids"].at[slot].set(aid),
+                "temps": st["temps"].at[slot].set(temp),
+                "seeds": st["seeds"].at[slot].set(seed),
+                "gen_idx": st["gen_idx"].at[slot].set(1),
+                "out_buf": st["out_buf"].at[slot, 0].set(first),
+                "spec": st["spec"].at[slot].set(use_spec),
+                "max_new": st["max_new"].at[slot].set(max_new),
+            }
+
+        self._admit_update_spec = jax.jit(admit_spec, donate_argnums=(0,))
+        # speculation telemetry
+        self.n_rounds = 0
+        self.n_proposed = 0
+        self.n_accepted = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted (speculative
+        traffic only)."""
+        return self.n_accepted / max(self.n_proposed, 1)
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, slot: int, req):
+        tokens = jnp.asarray(req.prompt[None])
+        tree = (None if self.registry is None
+                else self.registry.adapter_tree(req.adapter_id))
+        dtree = (None if self._draft_base_only
+                 else self.draft.adapter_tree(req.adapter_id))
+        logits, self.cache, self.draft_cache = self._prefill_both(
+            self.params, tree, self.draft.params, dtree, tokens, self.cache,
+            self.draft_cache, slot)
+        first = self._first_token(logits[0], req)
+        self._st = self._admit_update_spec(
+            self._st, slot, first, len(req.prompt), req.adapter_id,
+            req.temperature, req.seed, req.max_new_tokens, req.speculative)
+        self.n_prefill_tokens += len(req.prompt)
+
+    def step(self) -> List[RequestResult]:
+        """Admit whatever fits, run a batch of draft→verify→commit rounds,
+        return newly completed requests.  Each round advances every active
+        slot by 1..γ tokens (accepted drafts + correction)."""
+        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
+               else _null())
+        done: List[RequestResult] = []
+        with ctx:
+            while True:
+                adm = self._sched.next_admission()
+                if adm is None:
+                    break
+                self._admit(*adm)
+            for slot in self._sched.completed_slots():
+                done.append(self._finalize(slot))
+            active = self._sched.active_slots()
+            if active:
+                bank = None if self.registry is None else self.registry.bank
+                # Acceptance is only knowable on device, but a round advances
+                # each slot by AT MOST γ tokens — so while every active slot
+                # has more than γ·(k-1) tokens left, k rounds can be queued
+                # back-to-back with ONE host sync at the end.  This restores
+                # the dispatch pipelining the plain engine gets from its
+                # host-side token counting.
+                min_rem = min(self._sched.slot_steps_left(s) for s in active)
+                k = max(1, -(-min_rem // self.gamma))
+                rnd = (self._round_sample if self._n_hot
+                       else self._round_greedy)
+                dbank = None if self._draft_base_only else self.draft.bank
+                infos = []
+                for _ in range(k):
+                    self.cache, self.draft_cache, self._st, info = rnd(
+                        self.params, bank, self.draft.params, dbank,
+                        self.cache, self.draft_cache, self._st)
+                    infos.append(info)
+                self._n_ticks += k
+                self.n_rounds += k
+                for info in jax.device_get(infos):
+                    self.n_proposed += int(info["proposed"].sum())
+                    self.n_accepted += int(info["accepted"].sum())
+                    for slot in active:
+                        if (self._sched.slot_request(slot) is not None
+                                and self._sched.advance(
+                                    slot, int(info["emitted"][slot]))):
+                            done.append(self._finalize(slot))
+        return done

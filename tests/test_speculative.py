@@ -1,0 +1,337 @@
+"""Speculative decoding with the LoRAM-pruned draft:
+
+  1. acceptance-rejection math — property test that the accept/residual rule
+     preserves the TARGET distribution exactly (temperature > 0), plus
+     deterministic checks of the leading-accept count, the residual at the
+     first rejection, and the plain-slot (q ≡ 0) collapse
+  2. greedy token identity — the speculative engine emits EXACTLY the tokens
+     the non-speculative continuous engine emits, across slot eviction /
+     readmission, per-request adapter routing, and per-slot mixed
+     speculative/plain traffic (correctness must not depend on draft quality)
+  3. plain-slot sampled traffic through the speculative engine is BIT-
+     identical to the plain engine (same (seed, gen_idx) key discipline)
+  4. speculative sampling depends only on (seed, token index) — never on
+     which slots/ticks the scheduler happened to use
+  5. family sweep — SSM (state snapshots), hybrid (shared attn), sliding
+     window (ring rollback past the window), MoE (lossless verify capacity)
+  6. a compressible base (pruned channels exactly zero) makes the draft
+     computationally equivalent to the target → acceptance ≈ 100%
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import hypothesis, st
+from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_smoke
+from repro.core import loram, recovery
+from repro.core.pruning import zero_prunable_tail
+from repro.models import init_params, make_plan
+from repro.models.model import init_lora
+from repro.serving import (AdapterRegistry, ContinuousServeEngine,
+                           SpeculativeConfig, SpeculativeServeEngine,
+                           draft_from_setup, speculative_accept)
+
+RNG = jax.random.PRNGKey(0)
+LORA_CFG = LoRAConfig(rank=4)
+LORAM_CFG = LoRAMConfig(method="stru", ratio=0.5, keep_first=0, keep_last=0)
+
+
+def _serve_cfg(gamma=0, **kw):
+    base = dict(max_seq_len=64, max_slots=3, max_adapters=4,
+                max_new_tokens=16, kv_cache_dtype="float32")
+    base.update(kw)
+    return ServeConfig(draft_gamma=gamma, **base)
+
+
+# ---------------------------------------------------------------------------
+# 1. acceptance-rejection math
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_accept_rejection_preserves_target_distribution(seed):
+    """Emitting (accepted draft | residual sample) must be distributed
+    exactly as the target p, for ANY draft distribution q."""
+    V, trials = 5, 4000
+    rs = np.random.default_rng(seed)
+    p = rs.dirichlet(np.ones(V)).astype(np.float32)
+    q = rs.dirichlet(np.ones(V)).astype(np.float32)
+    drafts = rs.choice(V, size=trials, p=q).astype(np.int32)
+    u = rs.random(trials, dtype=np.float64).astype(np.float32)
+
+    pp = jnp.broadcast_to(jnp.asarray(p)[None, None], (trials, 1, V))
+    qq = jnp.broadcast_to(jnp.asarray(q)[None, None], (trials, 1, V))
+    n, m, resid = speculative_accept(pp, qq, jnp.asarray(drafts)[:, None],
+                                     jnp.asarray(u)[:, None])
+    n, resid = np.asarray(n), np.asarray(resid)
+
+    # rejected rows sample the residual (inverse-CDF with fresh uniforms)
+    r = rs.random(trials)
+    cum = np.cumsum(resid, axis=-1)
+    corr = (r[:, None] > cum).sum(axis=-1).clip(max=V - 1)
+    out = np.where(n == 1, drafts, corr)
+
+    freq = np.bincount(out, minlength=V) / trials
+    # 5σ of a binomial bin at worst-case variance
+    tol = 5 * np.sqrt(0.25 / trials)
+    assert np.abs(freq - p).max() < tol, (freq, p)
+
+
+def test_leading_accepts_residual_and_plain_collapse():
+    V, T = 4, 3
+    p = np.full((2, T, V), 0.25, np.float32)
+    q = np.zeros((2, T, V), np.float32)
+    q[:, :, 0] = 1.0                         # draft always proposes token 0
+    drafts = np.zeros((2, T), np.int32)
+    # row 0: u small → accept,accept,reject;   p(d)/q(d) = 0.25
+    u = np.array([[0.1, 0.2, 0.9], [0.1, 0.1, 0.1]], np.float32)
+    n, m, resid = speculative_accept(
+        jnp.asarray(p), jnp.asarray(q), jnp.asarray(drafts), jnp.asarray(u),
+        spec=jnp.asarray([True, False]))
+    assert np.asarray(n).tolist() == [2, 0]  # row 1: plain → rejects all
+    assert np.asarray(m).tolist() == [2, 0]
+    r = np.asarray(resid)
+    # residual = norm(max(p - q, 0)): token 0 is excluded for the spec row
+    np.testing.assert_allclose(r[0], [0, 1 / 3, 1 / 3, 1 / 3], atol=1e-6)
+    # plain row: q treated as zero → residual IS the target distribution
+    np.testing.assert_allclose(r[1], p[1, 0], atol=1e-6)
+
+
+def test_greedy_accepts_on_exact_match_only():
+    V, T = 4, 3
+    p = np.zeros((1, T, V), np.float32)
+    p[:, :, 1] = 1.0
+    q = np.full((1, T, V), 0.25, np.float32)
+    drafts = np.array([[1, 2, 1]], np.int32)          # mismatch at position 1
+    greedy_ok = jnp.asarray(drafts == 1)
+    n, m, _ = speculative_accept(
+        jnp.asarray(p), jnp.asarray(q), jnp.asarray(drafts),
+        jnp.zeros((1, T), jnp.float32), greedy_ok=greedy_ok,
+        temps=jnp.zeros((1,)))
+    assert np.asarray(n).tolist() == [1]
+    assert np.asarray(m).tolist() == [1]
+
+
+# ---------------------------------------------------------------------------
+# shared tiny model + pruned draft + two adapters
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    setup = loram.setup(plan, params, LORAM_CFG, LORA_CFG,
+                        jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup, max_adapters=4)
+
+    def mk_adapter(seed):
+        small = init_lora(setup.small_plan, LORA_CFG, jax.random.PRNGKey(seed))
+        small = jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), small)
+        full = recovery.recover_lora(small, setup.spec, plan, setup.small_plan)
+        return small, full
+
+    registry = None
+    for name, seed in [("math", 11), ("code", 22)]:
+        small, full = mk_adapter(seed)
+        if registry is None:
+            registry = AdapterRegistry(full, max_adapters=4)
+        registry.add(name, full)
+        draft.add(name, small)
+    return cfg, plan, params, registry, draft
+
+
+# ---------------------------------------------------------------------------
+# 2. greedy token identity (incl. eviction/readmission, mixed spec/plain)
+# ---------------------------------------------------------------------------
+
+def test_speculative_greedy_identical_to_plain_engine(served):
+    cfg, plan, params, registry, draft = served
+    plain = ContinuousServeEngine(plan, params, _serve_cfg(),
+                                  registry, lora_scale=LORA_CFG.scale)
+    spec = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3),
+                                  registry, draft, lora_scale=LORA_CFG.scale)
+
+    # 3 slots < 7 requests → every slot is evicted and re-admitted at least
+    # once; mixed adapters AND mixed speculative/plain slots in flight
+    rs = np.random.default_rng(0)
+    reqs = [(8, "math", 6, True), (12, "code", 4, False), (5, None, 6, True),
+            (12, "math", 3, True), (8, "code", 6, False), (5, "math", 5, True),
+            (12, None, 4, True)]
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n, _, _, _ in reqs]
+    up = [plain.submit(p, max_new_tokens=m, adapter=a)
+          for p, (_, a, m, _) in zip(prompts, reqs)]
+    us = [spec.submit(p, max_new_tokens=m, adapter=a, speculative=sp)
+          for p, (_, a, m, sp) in zip(prompts, reqs)]
+    rp, rsp = plain.run(), spec.run()
+    assert len(rsp) == len(reqs) and spec.n_completed == len(reqs)
+    for a, b, (_, adapter, m, sp) in zip(up, us, reqs):
+        assert rsp[b].tokens.shape == (m,)
+        np.testing.assert_array_equal(
+            rp[a].tokens, rsp[b].tokens,
+            err_msg=f"uid {b} (adapter={adapter}, spec={sp}) diverged")
+    # the speculative rounds really speculated (not everything via correction)
+    assert spec.n_proposed > 0 and spec.n_rounds > 0
+
+
+def test_gamma_one_and_config_validation(served):
+    cfg, plan, params, registry, draft = served
+    # γ=1 is the degenerate round: 1 proposal, length-1 verify
+    plain = ContinuousServeEngine(plan, params, _serve_cfg())
+    spec = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=1),
+                                  draft=draft)
+    p = np.arange(2, 11, dtype=np.int32)
+    a = plain.submit(p, max_new_tokens=7)
+    b = spec.submit(p, max_new_tokens=7)
+    np.testing.assert_array_equal(plain.run()[a].tokens, spec.run()[b].tokens)
+
+    with pytest.raises(ValueError):
+        SpeculativeServeEngine(plan, params, _serve_cfg(gamma=2))  # no draft
+    with pytest.raises(AssertionError):
+        SpeculativeConfig(gamma=0)
+    with pytest.raises(AssertionError):
+        SpeculativeConfig(draft_stage="merged")
+    assert SpeculativeConfig.from_serve(_serve_cfg(gamma=5)).gamma == 5
+
+    # γ may not span more ring slots than the shortest sliding window —
+    # commit/rollback scatters would alias (pos+j) % window
+    wcfg = get_smoke("gemma3-12b")                      # window = 8
+    wplan = make_plan(wcfg)
+    wparams = init_params(wplan, RNG, jnp.float32)
+    wsetup = loram.setup(wplan, wparams, LORAM_CFG, LORA_CFG,
+                         jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="ring"):
+        SpeculativeServeEngine(wplan, wparams, _serve_cfg(gamma=9),
+                               draft=draft_from_setup(wsetup))
+
+
+def test_draft_without_adapters_still_serves_adapter_traffic(served):
+    """draft_stage="base": one adapter-less draft proposes for every stream;
+    acceptance drops but output must stay exactly the target's.  Covers both
+    the config knob (ServeConfig.draft_stage) and a registry-less draft."""
+    cfg, plan, params, registry, draft = served
+    p = np.arange(2, 12, dtype=np.int32)
+    plain = ContinuousServeEngine(plan, params, _serve_cfg(),
+                                  registry, lora_scale=LORA_CFG.scale)
+    a = plain.submit(p, max_new_tokens=6, adapter="math")
+    ref = plain.run()[a].tokens
+
+    # the knob: draft has a bank, but draft_stage="base" must never read it
+    spec = SpeculativeServeEngine(
+        plan, params, _serve_cfg(gamma=2, draft_stage="base"),
+        registry, draft, lora_scale=LORA_CFG.scale)
+    b = spec.submit(p, max_new_tokens=6, adapter="math")
+    np.testing.assert_array_equal(ref, spec.run()[b].tokens)
+
+    # a draft built with no bank at all behaves the same
+    bare = dataclasses.replace(draft, registry=None)
+    spec2 = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=2),
+                                   registry, bare,
+                                   lora_scale=LORA_CFG.scale)
+    c = spec2.submit(p, max_new_tokens=6, adapter="math")
+    np.testing.assert_array_equal(ref, spec2.run()[c].tokens)
+
+
+# ---------------------------------------------------------------------------
+# 3. + 4. sampling
+# ---------------------------------------------------------------------------
+
+def test_plain_slots_sampled_bitwise_identical(served):
+    """speculative=False requests share rounds with speculative traffic yet
+    reproduce the plain engine's sampled stream bit for bit."""
+    cfg, plan, params, registry, draft = served
+    prompt = np.arange(2, 10, dtype=np.int32)
+    plain = ContinuousServeEngine(plan, params, _serve_cfg())
+    u0 = plain.submit(prompt, max_new_tokens=8, temperature=0.9, seed=7)
+    ref = plain.run()[u0].tokens
+
+    spec = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3),
+                                  draft=draft)
+    spec.submit(np.ones(5, np.int32), max_new_tokens=10)  # spec co-traffic
+    u1 = spec.submit(prompt, max_new_tokens=8, temperature=0.9, seed=7,
+                     speculative=False)
+    np.testing.assert_array_equal(ref, spec.run()[u1].tokens)
+
+
+def test_speculative_sampling_schedule_independent(served):
+    cfg, plan, params, registry, draft = served
+    prompt = np.arange(2, 10, dtype=np.int32)
+    s1 = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3),
+                                draft=draft)
+    ua = s1.submit(prompt, max_new_tokens=8, temperature=0.9, seed=5)
+    alone = s1.run()[ua].tokens
+
+    s2 = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3),
+                                draft=draft)
+    s2.submit(np.ones(4, np.int32), max_new_tokens=12)
+    s2.submit(np.ones(6, np.int32), max_new_tokens=3, temperature=0.5, seed=1)
+    ub = s2.submit(prompt, max_new_tokens=8, temperature=0.9, seed=5)
+    np.testing.assert_array_equal(alone, s2.run()[ub].tokens)
+    # and twice through the same engine → same stream (absolute-index keys)
+    uc = s2.submit(prompt, max_new_tokens=8, temperature=0.9, seed=5)
+    np.testing.assert_array_equal(alone, s2.run()[uc].tokens)
+
+
+# ---------------------------------------------------------------------------
+# 5. family sweep: SSM / hybrid / sliding-window / MoE
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,lens,news", [
+    ("mamba2-370m", (8, 12), (6, 5)),          # pure SSM: snapshot rollback
+    ("zamba2-2.7b", (8, 12), (6, 5)),          # hybrid + shared attn blocks
+    ("gemma3-12b", (10, 14), (12, 10)),        # window=8: decode past the ring
+    ("deepseek-moe-16b", (8, 12), (6, 5)),     # MoE: lossless verify capacity
+])
+def test_speculative_greedy_identity_families(arch, lens, news):
+    cfg = get_smoke(arch)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    setup = loram.setup(plan, params, LORAM_CFG, LORA_CFG,
+                        jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup)
+    sc = dict(max_slots=2, max_adapters=2)
+    plain = ContinuousServeEngine(plan, params, _serve_cfg(**sc))
+    spec = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3, **sc),
+                                  draft=draft)
+    rs = np.random.default_rng(0)
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    up = [plain.submit(p, max_new_tokens=m) for p, m in zip(prompts, news)]
+    us = [spec.submit(p, max_new_tokens=m) for p, m in zip(prompts, news)]
+    rp, rsp = plain.run(), spec.run()
+    for a, b in zip(up, us):
+        np.testing.assert_array_equal(rp[a].tokens, rsp[b].tokens,
+                                      err_msg=f"{arch}: uid {b} diverged")
+
+
+# ---------------------------------------------------------------------------
+# 6. compressible base → draft ≡ target → acceptance ≈ 1
+# ---------------------------------------------------------------------------
+
+def test_compressible_base_gives_high_acceptance():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    # zero exactly what magnitude pruning will remove → P(·) is lossless
+    params = zero_prunable_tail(params, plan, LORAM_CFG.ratio)
+    setup = loram.setup(plan, params, LORAM_CFG, LORA_CFG,
+                        jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup)
+    plain = ContinuousServeEngine(plan, params, _serve_cfg())
+    spec = SpeculativeServeEngine(plan, params, _serve_cfg(gamma=3),
+                                  draft=draft)
+    p = np.arange(2, 12, dtype=np.int32)
+    a = plain.submit(p, max_new_tokens=12)
+    b = spec.submit(p, max_new_tokens=12)
+    np.testing.assert_array_equal(plain.run()[a].tokens, spec.run()[b].tokens)
+    # the pruned draft computes the target's function → near-total acceptance
+    assert spec.acceptance_rate > 0.9, spec.acceptance_rate
+    # and the round count reflects multi-token emission, not 1/tick
+    assert spec.n_rounds < 11
