@@ -16,11 +16,21 @@ computationally equivalent to the target and the measured acceptance rate
 reflects a well-aligned draft (a trained LoRAM checkpoint behaves the same
 way by design: pruning removes what mattered least).
 
+The PAGED engine runs the same traffic against a page-pool KV cache sized
+well below the dense engine's ``max_slots × max_seq_len`` reservation
+(``--kv-pages``; the default targets > 2× fewer cache bytes) — mixed-length
+requests only ever back the tokens they actually hold, so the pool covers
+the same concurrency with less HBM.  The bench reports both engines'
+reserved KV bytes and the paged allocator's true high-water page count.
+
 Results are printed AND written to ``BENCH_serving.json`` (see ``--json``)
-so the serving-perf trajectory is tracked across PRs.
+so the serving-perf trajectory is tracked across PRs.  ``--smoke`` is the
+CI guard: a seconds-scale run of the dense + paged engines that
+schema-checks the emitted JSON.
 
   PYTHONPATH=src python benchmarks/serve_bench.py [--requests 24] [--slots 8]
   PYTHONPATH=src python benchmarks/serve_bench.py --speculative [--gamma 6]
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 """
 from __future__ import annotations
 
@@ -41,10 +51,11 @@ from repro.models import init_params, make_plan
 from repro.models.model import init_lora
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
                            ServeEngine, SpeculativeServeEngine,
-                           draft_from_setup)
+                           draft_from_setup, pages_for)
 
 PROMPT_LENS = (8, 16, 24)
 NEW_TOKENS = (24, 40, 56)   # decode-bound, like real serving
+MAX_SEQ_LEN = 128           # shared by every engine AND the pool auto-sizer
 
 
 def make_workload(n_requests, vocab, seed=0):
@@ -67,7 +78,7 @@ def run_synchronous(plan, params, adapters, work, lora_scale):
     engines = {
         name: ServeEngine(
             plan, params,
-            ServeConfig(max_seq_len=128, merge_adapters=False,
+            ServeConfig(max_seq_len=MAX_SEQ_LEN, merge_adapters=False,
                         kv_cache_dtype="float32"),
             lora=lora, lora_scale=lora_scale)
         for name, lora in adapters.items()
@@ -108,21 +119,56 @@ def _submit_and_drain(eng, work):
     return sum(r.n_generated for r in done.values())
 
 
-def run_continuous(plan, params, registry, work, slots, lora_scale):
+def run_continuous(plan, params, registry, work, slots, lora_scale,
+                   n_timed=3, **cfg_kw):
+    """One timed continuous-engine pass; ``cfg_kw`` selects the cache layout
+    (empty → dense, kv_paging=True + pool knobs → paged) so the dense/paged
+    comparison can never diverge in the shared ServeConfig."""
     eng = ContinuousServeEngine(
         plan, params,
-        ServeConfig(max_seq_len=128, max_slots=slots,
+        ServeConfig(max_seq_len=MAX_SEQ_LEN, max_slots=slots,
                     max_adapters=registry.max_adapters, max_new_tokens=64,
-                    kv_cache_dtype="float32"),
+                    kv_cache_dtype="float32", **cfg_kw),
         registry, lora_scale=lora_scale)
-    return _time_passes(lambda: _submit_and_drain(eng, work))
+    tok, s = _time_passes(lambda: _submit_and_drain(eng, work), n_timed)
+    return tok, s, eng
+
+
+REQUIRED_ENGINE_KEYS = {"tokens", "seconds", "tok_s"}
+
+
+def validate_results(results):
+    """Schema guard for BENCH_serving.json — CI runs ``--smoke`` and fails
+    the build if the trajectory file's shape silently drifts."""
+    assert results.get("bench") == "serving", results.get("bench")
+    assert isinstance(results.get("config"), dict)
+    engines = results.get("engines")
+    assert isinstance(engines, dict) and engines, "no engines recorded"
+    for name, stats in engines.items():
+        missing = REQUIRED_ENGINE_KEYS - set(stats)
+        assert not missing, f"engine {name} missing {sorted(missing)}"
+    if "paged" in engines:
+        mem = results.get("memory")
+        assert mem is not None, "paged run must report memory"
+        for key in ("dense_kv_bytes", "paged_kv_bytes", "reduction",
+                    "peak_pages_used", "pool_pages"):
+            assert key in mem, f"memory missing {key}"
+        # the >= 2x memory claim is enforced on the auto-sized CI guard run
+        # only — a user sweeping --page-size / --kv-pages may legitimately
+        # configure a smaller reduction and should still get their numbers
+        if (results["config"].get("smoke")
+                and results["config"].get("kv_pages_auto", True)):
+            assert mem["reduction"] >= 2.0, (
+                f"paged KV reservation must be >= 2x smaller than dense "
+                f"(got {mem['reduction']:.2f}x)")
+    assert isinstance(results.get("speedups"), dict)
 
 
 def run_speculative(plan, params, registry, draft, work, slots, gamma,
                     lora_scale):
     eng = SpeculativeServeEngine(
         plan, params,
-        ServeConfig(max_seq_len=128, max_slots=slots,
+        ServeConfig(max_seq_len=MAX_SEQ_LEN, max_slots=slots,
                     max_adapters=registry.max_adapters, max_new_tokens=64,
                     kv_cache_dtype="float32", draft_gamma=gamma),
         registry, draft, lora_scale=lora_scale)
@@ -141,20 +187,40 @@ def main():
                     help="draft tokens per speculative round")
     ap.add_argument("--ratio", type=float, default=0.75,
                     help="LoRAM structured pruning ratio for the draft")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged engine: tokens per KV page")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged engine: page-pool capacity (0 → auto-size "
+                         "to ~2.5x below the dense reservation)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI guard: tiny model, dense + paged "
+                         "engines only, schema-check the emitted JSON")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
     if get_smoke(args.arch).family != "dense":
         ap.error(f"--arch {args.arch}: the lossless-prune draft construction "
                  "covers dense families only (mlp + attn blocks)")
+    if args.smoke and args.speculative:
+        ap.error("--smoke is the seconds-scale dense+paged CI guard; drop "
+                 "--speculative (the full bench covers it)")
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.slots = min(args.slots, 4)
+        if args.json == "BENCH_serving.json":
+            # never let a local smoke run clobber the committed cross-PR
+            # trajectory file with tiny-model numbers
+            args.json = "BENCH_smoke.json"
 
     # compute-visible dims: big enough that weight streaming (which verify
     # amortizes over γ tokens) dominates per-dispatch overhead on CPU.
     # The lossless-prune construction below covers dense blocks only, so the
     # speculative bench (and its ~100%-acceptance claim) is dense-family.
-    cfg = dataclasses.replace(
-        get_smoke(args.arch), n_layers=4, d_model=256, n_heads=8,
-        n_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=2048)
+    dims = (dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                 head_dim=16, d_ff=128, vocab_size=512) if args.smoke else
+            dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                 head_dim=32, d_ff=1024, vocab_size=2048))
+    cfg = dataclasses.replace(get_smoke(args.arch), **dims)
     plan = make_plan(cfg)
     params = init_params(plan, jax.random.PRNGKey(0), jnp.float32)
     lora_cfg = LoRAConfig(rank=4)
@@ -192,19 +258,36 @@ def main():
           f"{sorted({len(p) for p, _, _ in work})}, new-token mix "
           f"{sorted({n for _, _, n in work})}, 2 adapters")
 
-    sync_tok, sync_s = run_synchronous(plan, params, adapters, work,
-                                       lora_cfg.scale)
-    cont_tok, cont_s = run_continuous(plan, params, registry, work,
-                                      args.slots, lora_cfg.scale)
-
-    sync_tps = sync_tok / sync_s
+    n_timed = 1 if args.smoke else 3
+    cont_tok, cont_s, cont_eng = run_continuous(
+        plan, params, registry, work, args.slots, lora_cfg.scale, n_timed)
     cont_tps = cont_tok / cont_s
-    print(f"[serve_bench] synchronous : {sync_tok:4d} tok in {sync_s:6.2f}s "
-          f"→ {sync_tps:7.1f} tok/s")
+
+    # paged pool auto-sizing: n_tbl pages back one max-length sequence; aim
+    # ~2.2x below the dense max_slots × max_seq_len reservation — above the
+    # workload's mean concurrent footprint (preemptions stay rare) but well
+    # under worst-case (floor: one max-length request + trash, or the engine
+    # refuses the pool)
+    n_tbl = pages_for(MAX_SEQ_LEN, args.page_size)
+    kv_pages = args.kv_pages or max(n_tbl + 1,
+                                    int(args.slots * n_tbl / 2.2) + 1)
+    paged_tok, paged_s, paged_eng = run_continuous(
+        plan, params, registry, work, args.slots, lora_cfg.scale, n_timed,
+        kv_paging=True, kv_page_size=args.page_size, kv_pages=kv_pages)
+    paged_tps = paged_tok / paged_s
+    dense_kv = cont_eng.kv_cache_bytes()
+    paged_kv = paged_eng.kv_cache_bytes()
+
     print(f"[serve_bench] continuous  : {cont_tok:4d} tok in {cont_s:6.2f}s "
           f"→ {cont_tps:7.1f} tok/s  ({args.slots} slots)")
-    print(f"[serve_bench] speedup: {cont_tps / sync_tps:.2f}x aggregate "
-          f"tokens/s")
+    print(f"[serve_bench] paged       : {paged_tok:4d} tok in "
+          f"{paged_s:6.2f}s → {paged_tps:7.1f} tok/s  "
+          f"({kv_pages} pages × {args.page_size} tok, "
+          f"{paged_eng.n_preemptions} preemptions)")
+    print(f"[serve_bench] KV cache HBM: dense {dense_kv / 1e6:.2f} MB → "
+          f"paged {paged_kv / 1e6:.2f} MB "
+          f"({dense_kv / paged_kv:.2f}x smaller; peak "
+          f"{paged_eng.pages.peak_in_use}/{kv_pages - 1} pages used)")
 
     results = {
         "bench": "serving",
@@ -212,19 +295,43 @@ def main():
             "arch": cfg.name, "n_layers": cfg.n_layers,
             "d_model": cfg.d_model, "d_ff": cfg.d_ff,
             "vocab_size": cfg.vocab_size, "requests": args.requests,
-            "slots": args.slots, "adapters": 2,
+            "slots": args.slots, "adapters": 2, "smoke": args.smoke,
             "prompt_lens": list(PROMPT_LENS), "new_tokens": list(NEW_TOKENS),
+            "page_size": args.page_size, "kv_pages": kv_pages,
+            "kv_pages_auto": args.kv_pages == 0,
         },
         "engines": {
-            "synchronous": {"tokens": sync_tok, "seconds": round(sync_s, 4),
-                            "tok_s": round(sync_tps, 1)},
             "continuous": {"tokens": cont_tok, "seconds": round(cont_s, 4),
                            "tok_s": round(cont_tps, 1)},
+            "paged": {"tokens": paged_tok, "seconds": round(paged_s, 4),
+                      "tok_s": round(paged_tps, 1),
+                      "preemptions": paged_eng.n_preemptions},
         },
-        "speedups": {"continuous_vs_sync": round(cont_tps / sync_tps, 3)},
+        "memory": {
+            "dense_kv_bytes": dense_kv,
+            "paged_kv_bytes": paged_kv,
+            "reduction": round(dense_kv / paged_kv, 3),
+            "peak_pages_used": paged_eng.pages.peak_in_use,
+            "pool_pages": kv_pages,
+        },
+        "speedups": {"paged_vs_continuous": round(paged_tps / cont_tps, 3)},
     }
 
-    if args.speculative:
+    if not args.smoke:
+        sync_tok, sync_s = run_synchronous(plan, params, adapters, work,
+                                           lora_cfg.scale)
+        sync_tps = sync_tok / sync_s
+        print(f"[serve_bench] synchronous : {sync_tok:4d} tok in "
+              f"{sync_s:6.2f}s → {sync_tps:7.1f} tok/s")
+        print(f"[serve_bench] speedup: {cont_tps / sync_tps:.2f}x aggregate "
+              f"tokens/s (continuous vs synchronous)")
+        results["engines"]["synchronous"] = {
+            "tokens": sync_tok, "seconds": round(sync_s, 4),
+            "tok_s": round(sync_tps, 1)}
+        results["speedups"]["continuous_vs_sync"] = round(
+            cont_tps / sync_tps, 3)
+
+    if args.speculative and not args.smoke:
         spec_tok, spec_s, eng = run_speculative(
             plan, params, registry, draft, work, args.slots, args.gamma,
             lora_cfg.scale)
@@ -246,11 +353,16 @@ def main():
         results["speedups"]["speculative_vs_continuous"] = round(
             spec_tps / cont_tps, 3)
 
+    validate_results(results)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
             f.write("\n")
-        print(f"[serve_bench] wrote {args.json}")
+        # re-read and re-validate what actually landed on disk — this is the
+        # file CI guards
+        with open(args.json) as f:
+            validate_results(json.load(f))
+        print(f"[serve_bench] wrote {args.json} (schema OK)")
 
 
 if __name__ == "__main__":

@@ -296,6 +296,15 @@ class ServeConfig:
     draft_gamma: int = 0             # draft tokens per round (0 → disabled)
     draft_stage: str = "trained"     # "trained" (pruned base + pruned LoRA)
                                      # | "base" (pruned base only)
+    gamma_autotune: bool = False     # adapt draft_gamma to measured acceptance
+    # paged KV cache (repro.serving.pages / ContinuousServeEngine):
+    kv_paging: bool = False          # page the attention K/V cache
+    kv_page_size: int = 16           # tokens per page (power of two)
+    kv_pages: int = 0                # page-pool capacity incl. the reserved
+                                     # trash page (0 → dense-equivalent pool)
+    # prompt-length bucketing: pad prompts up to power-of-two buckets so
+    # prefill compiles O(log max_seq_len) times, not once per distinct length
+    prefill_buckets: bool = True
 
 
 def round_to(x: int, mult: int) -> int:

@@ -9,4 +9,6 @@ Kernels:
   nf4_matmul      — fused NF4 dequant → MXU matmul (QLoRAM base-weight path)
   flash_attention — blocked online-softmax attention (train/prefill)
   ssd_scan        — Mamba2 state-space-duality chunked scan
+  paged_attention — paged-KV decode attention (block table as the
+                    scalar-prefetch index map; serving hot loop)
 """

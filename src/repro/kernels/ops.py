@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.nf4_matmul import nf4_matmul as _nf4_pallas
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_pallas)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 
@@ -40,6 +42,17 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
         return _flash_pallas(q, k, v, causal=causal, sm_scale=sm_scale,
                              interpret=not _on_tpu())
     return _ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+
+
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
+                           force: Optional[str] = None):
+    """Single-token attention through a paged KV cache.  q: (B, H, D);
+    pools: (n_pages, page, K, D); table: (B, R) page ids; pos: (B,)."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _paged_pallas(q, pool_k, pool_v, table, pos, window=window,
+                             interpret=not _on_tpu())
+    return _ref.paged_decode_attention_ref(q, pool_k, pool_v, table, pos,
+                                           window=window)
 
 
 def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,

@@ -1,0 +1,126 @@
+"""Paged decode attention for TPU (gather-then-flash).
+
+The serving hot loop under a paged KV cache: each slot's K/V lives in
+scattered fixed-size pages of a global pool, indexed by a per-slot block
+table.  Materializing the gather in HBM ((B, S, K, D) per layer per token)
+would double decode's cache traffic; instead the BLOCK TABLE IS THE INDEX
+MAP — the table and positions ride in as scalar-prefetch operands, and each
+grid step's page block is DMA'd straight from its pool slot into VMEM:
+
+  * grid (B, R): slot-major, the slot's R ring pages swept innermost;
+  * per page: q·Kᵀ on the MXU per KV head (GQA grouped — the query block
+    (K, G, D) contracts against the page (K, page, D) without expanding to
+    H heads), online-softmax accumulate on the VPU;
+  * position validity (ring interpretation for windowed layers, simple
+    ``slot <= pos`` for full attention) folds into the accumulate mask, so
+    trash-page garbage and not-yet-written page tails contribute exactly 0;
+  * accumulator, running max and denominator live in VMEM scratch across
+    the page sweep — one HBM write per slot at flush.
+
+VMEM per step ≈ page·K·D·2·bytes + H·D·4 — a few tens of KB at serving
+shapes; the kernel is bandwidth-bound on the page reads, which is the
+point: it reads each page exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, page: int, n_r: int, window: int, scale: float,
+            groups: int):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (H, D)
+    k = k_ref[0]                                   # (page, K, D)
+    v = v_ref[0]
+    H, D = q.shape
+    K = k.shape[1]
+    qg = q.reshape(K, groups, D)
+    kk = jnp.swapaxes(k, 0, 1)                     # (K, page, D)
+    vv = jnp.swapaxes(v, 0, 1)
+    s = lax.dot_general(
+        qg.astype(jnp.float32), kk.astype(jnp.float32),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale        # (K, G, page)
+
+    pos_b = pos_ref[b]
+    idx = r * page + lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    if window:
+        ring = n_r * page
+        kpos = pos_b - ((pos_b - idx) % ring)
+        valid = (kpos >= 0) & (kpos > pos_b - window)
+    else:
+        valid = idx <= pos_b
+
+    m_prev = m_ref[...]                            # (K, G, 1)
+    m_cur = jnp.max(jnp.where(valid, s, NEG_INF), axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # explicit zeroing (not exp of a masked -1e30) keeps fully-masked pages
+    # — trash pages, out-of-window rings — at exactly zero weight even while
+    # the running max is still NEG_INF
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (K, G, page)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = lax.dot_general(
+        p.astype(jnp.float32), vv.astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)        # (K, G, D)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(r == n_r - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).reshape(H, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
+                           interpret: bool = False):
+    """q: (B, H, D); pools: (n_pages, page, K, D); table: (B, R) int32 page
+    ids (the layer's ring pages); pos: (B,) int32.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    _, page, K, _ = pool_k.shape
+    R = table.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, R),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, r, tbl, p: (b, 0, 0)),
+            pl.BlockSpec((1, page, K, D),
+                         lambda b, r, tbl, p: (tbl[b, r], 0, 0, 0)),
+            pl.BlockSpec((1, page, K, D),
+                         lambda b, r, tbl, p: (tbl[b, r], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, r, tbl, p: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K, H // K, D), jnp.float32),
+            pltpu.VMEM((K, H // K, 1), jnp.float32),
+            pltpu.VMEM((K, H // K, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, n_r=R, window=window,
+                          scale=scale, groups=H // K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(table, pos, q, pool_k, pool_v)

@@ -48,6 +48,53 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
 
 
 # ---------------------------------------------------------------------------
+# paged_decode_attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *, window: int = 0):
+    """Single-token attention against a PAGED K/V cache (gather-then-flash).
+
+    q: (B, H, D) — the new token's roped query per slot;
+    pool_k/pool_v: (n_pages, page, K, D) — the global page pool;
+    table: (B, R) int32 — each slot's block table, already sliced to the
+    layer's ring pages (R·page == max_seq_len for full attention, a bounded
+    ring ≥ window for sliding-window layers);
+    pos: (B,) int32 — the position the new token was just written at.
+
+    The gathered virtual cache is position-linear for full attention
+    (token slot == position) and a ring of length R·page for windowed
+    layers, so validity masking matches the dense decode path exactly:
+    numerics are identical to attending a dense per-slot cache.
+    """
+    B, H, D = q.shape
+    page = pool_k.shape[1]
+    K = pool_k.shape[2]
+    S = table.shape[1] * page
+    ck = pool_k[table].reshape(B, S, K, D)
+    cv = pool_v[table].reshape(B, S, K, D)
+    karange = jnp.arange(S)
+    if window:
+        # ring semantics: each token slot holds the largest position <= pos
+        # congruent to it mod S; out-of-window survivors are masked off
+        # (the ring may be up to a page larger than the window)
+        kpos = pos[:, None] - ((pos[:, None] - karange[None, :]) % S)
+        valid = (kpos >= 0) & (kpos > pos[:, None] - window)
+    else:
+        valid = karange[None, :] <= pos[:, None]
+    gs = H // K
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, K, gs, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
 # ssd_scan (Mamba2 chunked state-space duality)
 # ---------------------------------------------------------------------------
 

@@ -48,8 +48,18 @@ def main():
                          "--continuous)")
     ap.add_argument("--gamma", type=int, default=4,
                     help="draft tokens per speculative round")
+    ap.add_argument("--gamma-autotune", action="store_true",
+                    help="adapt gamma to the measured acceptance rate")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page-pool + block table instead "
+                         "of dense per-slot max_seq_len reservation "
+                         "(implies --continuous)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page-pool capacity (0 → dense-equivalent)")
     args = ap.parse_args()
-    if args.speculative:
+    if args.speculative or args.paged:
         args.continuous = True
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -73,7 +83,10 @@ def main():
             max_seq_len=args.max_seq_len, max_slots=args.slots,
             max_adapters=registry.max_adapters,
             max_new_tokens=max(args.new_tokens, 1),
-            draft_gamma=args.gamma if args.speculative else 0)
+            draft_gamma=args.gamma if args.speculative else 0,
+            gamma_autotune=args.gamma_autotune,
+            kv_paging=args.paged, kv_page_size=args.page_size,
+            kv_pages=args.kv_pages)
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)

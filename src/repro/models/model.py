@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import BlockSpec, LoRAConfig, ModelConfig, Stage, StageDims
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.moe import moe_mlp
 from repro.models.ssm import mamba_block
@@ -266,11 +267,37 @@ def _sub(d: Optional[dict], name: str) -> Optional[dict]:
     return d.get(name)
 
 
+def ring_pages(window: int, n_tbl: int, page_size: int) -> int:
+    """Block-table entries a windowed attention layer's ring maps onto: a
+    sliding window of ``window`` tokens needs only ``ceil(window/page)``
+    pages — the ring reuses the slot's LOW table entries forever, so a
+    windowed layer's footprint stays bounded no matter how long the
+    sequence grows.  Full attention (window=0) uses the whole table."""
+    if not window:
+        return n_tbl
+    return min(-(-window // page_size), n_tbl)
+
+
+def paged_pos_to_page(block_table, pos, window: int, page_size: int):
+    """THE per-slot position → (pool page, in-page offset) map: ring index
+    ``pos % (ring_pages·page)`` looked up through the block table.  Every
+    paged single-position read/write site (decode scatter, draft-loop
+    rollback rows) derives from this one function so the ring semantics
+    can never drift apart; the multi-position commit helpers in
+    repro.serving.speculative and the validity masks in repro.kernels
+    mirror the same ``ring_pages`` sizing."""
+    n_tbl = block_table.shape[1]
+    ring_len = ring_pages(window, n_tbl, page_size) * page_size
+    ridx = pos % ring_len
+    bidx = jnp.arange(pos.shape[0])
+    return block_table[bidx, ridx // page_size], ridx % page_size
+
+
 def _attn_block(
     x, bp, blora, d: StageDims, *,
     kind: str, window: int, positions, theta: float, scale_l: float,
     enc_out=None, cache=None, pos=None, masks=None, adapter_ids=None,
-    verify: bool = False,
+    verify: bool = False, block_table=None, valid_len=None,
 ):
     B = x.shape[0]
     hd, H, K = d.head_dim, d.n_heads, d.n_kv_heads
@@ -297,7 +324,18 @@ def _attn_block(
 
     if cache is not None and kind != "cross_attn":
         # decode, speculative verify, or prefill-write
-        cache_size = cache["k"].shape[1]
+        paged = block_table is not None
+        if paged:
+            # cache holds a page POOL (n_pages, page, kv, hd); the slot's
+            # block table maps logical pages to pool pages.  The virtual
+            # dense view below has ring length R·page (== max_seq_len for
+            # full attention, a bounded ring for windowed layers).
+            page = cache["k"].shape[1]
+            n_tbl = block_table.shape[1]
+            tbl = block_table[:, :ring_pages(window, n_tbl, page)]
+            cache_size = tbl.shape[1] * page
+        else:
+            cache_size = cache["k"].shape[1]
         if verify:
             # Speculative verify: T draft tokens per slot, each slot at its own
             # depth.  The persistent cache is NOT written — the engine commits
@@ -325,7 +363,14 @@ def _attn_block(
             gs = H // K
             scale = 1.0 / (hd ** 0.5)
             qg = q.reshape(B, T, K, gs, hd).transpose(0, 2, 3, 1, 4)
-            ck, cv = cache["k"], cache["v"]
+            if paged:
+                # gather the slot's pages into the virtual dense ring; the
+                # verify pass is read-only, so no scatter-back is needed —
+                # the engine commits pending rows into pages itself
+                ck = cache["k"][tbl].reshape(B, cache_size, K, hd)
+                cv = cache["v"][tbl].reshape(B, cache_size, K, hd)
+            else:
+                ck, cv = cache["k"], cache["v"]
             kw = k.astype(ck.dtype)
             vw = v.astype(cv.dtype)
             lo = jnp.einsum("bkgtd,bskd->bkgts", qg,
@@ -343,6 +388,20 @@ def _attn_block(
             out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
             # pending writes: the engine scatters rows j < n_keep per slot
             new_cache = {"k": kw, "v": vw}
+        elif q.shape[1] == 1 and paged:  # decode step, paged pool
+            # scatter the new token's K/V into the slot's current page, then
+            # attend through the block table (gather-then-flash — the Pallas
+            # kernel on TPU, the jnp oracle everywhere else).  Free slots'
+            # table rows are all-zero, so their garbage writes land on the
+            # reserved trash page and can never corrupt a live slot.
+            pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            pg, off = paged_pos_to_page(block_table, pos_v, window, page)
+            ck = cache["k"].at[pg, off].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[pg, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            out = kops.paged_decode_attention(q[:, 0], ck, cv, tbl, pos_v,
+                                              window=window)
+            out = out[:, None]
         elif q.shape[1] == 1:  # decode step
             # pos may be a scalar (whole batch at one position — legacy
             # engine) or per-slot (B,) (continuous batching: every slot sits
@@ -372,7 +431,8 @@ def _attn_block(
             out = out.reshape(B_, 1, H, hd)
         else:  # prefill: full attention then write cache
             out, new_cache = _prefill_attn_and_cache(_shard_heads(q), k, v, cache,
-                                                     window, H // K)
+                                                     window, H // K,
+                                                     valid_len=valid_len)
     else:
         kk = _shard_heads(L.repeat_kv(k, H // K))
         vv = _shard_heads(L.repeat_kv(v, H // K))
@@ -396,7 +456,11 @@ def _attn_block(
     return (res, new_cache) if cache is not None else (res, None)
 
 
-def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
+def _prefill_attn_and_cache(q, k, v, cache, window, n_rep, valid_len=None):
+    """``valid_len`` (traced scalar) supports bucketed prefill: the prompt is
+    right-padded to a bucket length and only positions < valid_len are
+    written — padded garbage K/V must never land in the cache, because ring
+    readers infer a slot's absolute position from the write order."""
     S = q.shape[1]
     cache_size = cache["k"].shape[1]
     kk = L.repeat_kv(k, n_rep)
@@ -405,6 +469,31 @@ def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
     out = L.attention(q, kk, vv, causal=True, window=window, chunk_q=chunk_q)
     kw = k.astype(cache["k"].dtype)
     vw = v.astype(cache["v"].dtype)
+    if valid_len is not None:
+        valid_len = jnp.asarray(valid_len, jnp.int32)
+        if S >= cache_size:
+            # the ring must hold the last cache_size REAL positions, i.e.
+            # valid_len-cache_size .. valid_len-1 — slice that window out of
+            # the (padded) sequence instead of taking the padded tail
+            start = jnp.clip(valid_len - cache_size, 0, S - cache_size)
+            tail_k = lax.dynamic_slice_in_dim(kw, start, cache_size, axis=1)
+            tail_v = lax.dynamic_slice_in_dim(vw, start, cache_size, axis=1)
+            p = start + jnp.arange(cache_size)
+            keep = (p < valid_len)[None, :, None, None]
+            slots = p % cache_size
+            ck = cache["k"].at[:, slots].set(
+                jnp.where(keep, tail_k, cache["k"][:, slots]))
+            cv = cache["v"].at[:, slots].set(
+                jnp.where(keep, tail_v, cache["v"][:, slots]))
+        else:
+            keep = (jnp.arange(S) < valid_len)[None, :, None, None]
+            old = lax.dynamic_slice(cache["k"], (0, 0, 0, 0), kw.shape)
+            oldv = lax.dynamic_slice(cache["v"], (0, 0, 0, 0), vw.shape)
+            ck = lax.dynamic_update_slice(cache["k"], jnp.where(keep, kw, old),
+                                          (0, 0, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], jnp.where(keep, vw, oldv),
+                                          (0, 0, 0, 0))
+        return out, {"k": ck, "v": cv}
     if S >= cache_size:
         tail_k, tail_v = kw[:, -cache_size:], vw[:, -cache_size:]
         pos0 = S - cache_size
@@ -419,13 +508,15 @@ def _prefill_attn_and_cache(q, k, v, cache, window, n_rep):
 
 def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelConfig,
                  *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None,
-                 adapter_ids=None, verify: bool = False):
+                 adapter_ids=None, verify: bool = False, block_table=None,
+                 valid_len=None):
     new_cache = None
     if spec.kind in ("attn", "enc_attn", "cross_attn"):
         x, new_cache = _attn_block(
             x, bp, blora, d, kind=spec.kind, window=spec.window, positions=positions,
             theta=cfg.rope_theta, scale_l=scale_l, enc_out=enc_out, cache=cache, pos=pos,
-            masks=masks, adapter_ids=adapter_ids, verify=verify)
+            masks=masks, adapter_ids=adapter_ids, verify=verify,
+            block_table=block_table, valid_len=valid_len)
     elif spec.kind == "mlp":
         xn = L.rms_norm(x, bp["ln"])
         x = x + L.swiglu(xn, bp, blora, scale_l, masks,
@@ -433,7 +524,12 @@ def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelCon
     elif spec.kind == "moe":
         xn = L.rms_norm(x, bp["ln"])
         # verify batches B·T tokens: capacity must stay lossless so garbage
-        # from free slots can never displace a live request's token
+        # from free slots can never displace a live request's token.
+        # Bucketed prefill (valid_len set) needs no such protection: the
+        # expert-buffer position cumsum runs in token order and padding sits
+        # AFTER every real token, so garbage can only ever take capacity
+        # slots behind the real ones — statistical capacity (now computed on
+        # the slightly longer bucket) stays safe.
         out, a = moe_mlp(xn, bp, top_k=d.top_k, capacity_factor=capacity_factor,
                          lora=blora, lora_scale=scale_l, adapter_ids=adapter_ids,
                          lossless=verify)
@@ -441,7 +537,8 @@ def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelCon
         aux = aux + a
     elif spec.kind == "mamba":
         x, new_cache = mamba_block(x, bp, d, blora, scale_l, cache,
-                                   adapter_ids=adapter_ids, verify=verify)
+                                   adapter_ids=adapter_ids, verify=verify,
+                                   valid_len=valid_len)
     else:
         raise ValueError(spec.kind)
     return x, aux, new_cache
@@ -455,7 +552,7 @@ def run_stage(
     stage: Stage, sp: dict, slora: Optional[dict], x: Array, aux: Array, cfg: ModelConfig,
     *, positions, enc_out=None, cache: Optional[dict] = None, pos=None,
     scale_l: float = 2.0, remat: bool = False, masks: Optional[dict] = None,
-    adapter_ids=None, verify: bool = False,
+    adapter_ids=None, verify: bool = False, block_table=None, valid_len=None,
 ):
     """sp = {"stacked": {...}, "shared": {...}} with leading n_rep on stacked."""
     stacked_p = sp["stacked"]
@@ -482,7 +579,8 @@ def run_stage(
                     _spec, bp_, bl_, xx_, aa_, stage.dims, cfg,
                     positions=positions, enc_out=enc_out, cache=bc_, pos=pos,
                     scale_l=scale_l, capacity_factor=cfg.capacity_factor,
-                    masks=bm_, adapter_ids=adapter_ids, verify=verify)
+                    masks=bm_, adapter_ids=adapter_ids, verify=verify,
+                    block_table=block_table, valid_len=valid_len)
 
             # adaptive remat granularity (§Perf iters 11/13): deep superblocks
             # (gemma3's 12 blocks) checkpoint per block so the backward
@@ -645,6 +743,41 @@ def init_cache(plan: Plan, batch: int, max_len: int, dtype=jnp.bfloat16) -> PyTr
     return caches
 
 
+def init_paged_cache(plan: Plan, batch: int, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    """Paged variant of :func:`init_cache`: attention K/V live in a global
+    pool of fixed-size pages (``n_pages`` × ``page_size`` tokens per layer,
+    page 0 reserved as the trash page free slots write into), indexed through
+    a per-slot block table held by the serving engine.  Recurrent state (SSM
+    conv/ssm) is O(1) per slot and stays dense — paging it would buy nothing.
+    Cross-attention caches stay dense too (encoder length is fixed)."""
+    cfg = plan.cfg
+    caches = {}
+    for st in plan.stages:
+        d = st.dims
+        stage_cache = {}
+        for spec in st.superblock:
+            if spec.kind == "attn":
+                stage_cache[spec.name] = {
+                    "k": jnp.zeros((st.n_rep, n_pages, page_size,
+                                    d.n_kv_heads, d.head_dim), dtype),
+                    "v": jnp.zeros((st.n_rep, n_pages, page_size,
+                                    d.n_kv_heads, d.head_dim), dtype),
+                }
+            elif spec.kind == "cross_attn":
+                stage_cache[spec.name] = {
+                    "k": jnp.zeros((st.n_rep, batch, cfg.enc_len, d.n_kv_heads, d.head_dim), dtype),
+                    "v": jnp.zeros((st.n_rep, batch, cfg.enc_len, d.n_kv_heads, d.head_dim), dtype),
+                }
+            elif spec.kind == "mamba":
+                stage_cache[spec.name] = {
+                    "conv": jnp.zeros((st.n_rep, batch, d.conv_width - 1, d.d_inner + 2 * d.ssm_state), dtype),
+                    "ssm": jnp.zeros((st.n_rep, batch, d.ssm_heads, d.ssm_head_dim, d.ssm_state), jnp.float32),
+                }
+        caches[st.name] = stage_cache
+    return caches
+
+
 def _dec_cross_kv(plan, params, lora, enc_out, scale_l):
     """Precompute cross-attention K/V caches from encoder output."""
     caches = {}
@@ -676,10 +809,23 @@ def _dec_cross_kv(plan, params, lora, enc_out, scale_l):
 def prefill(
     plan: Plan, params: PyTree, tokens: Array, cache: PyTree,
     lora: Optional[PyTree] = None, *, frontend: Optional[Array] = None,
-    lora_scale: float = 2.0,
+    lora_scale: float = 2.0, valid_len=None,
 ):
     """Run the prompt through the model, filling caches.  Returns
-    (last_token_logits, cache, next_pos)."""
+    (last_token_logits, cache, next_pos).
+
+    ``valid_len`` (traced scalar) enables bucketed prefill: ``tokens`` is the
+    prompt right-padded to a bucket length, only the first ``valid_len``
+    positions are real.  Cache writes beyond ``valid_len`` are masked,
+    recurrent (SSM/conv) state freezes at the boundary, and the returned
+    logits are the ones at position ``valid_len - 1``.  Causal attention
+    makes every real position's activations independent of the padding, so
+    the result is exactly the unpadded prefill's — with one documented
+    exception: MoE expert capacity is computed on the bucket length (padding
+    cannot displace real tokens, it sorts after them in the buffer cumsum,
+    but the slightly larger capacity may RETAIN a marginal token that
+    exact-length routing would have dropped).  (Text-only: the serving
+    engines that bucket never pass a vlm frontend.)"""
     cfg = plan.cfg
     enc_out = _run_encoder(plan, params, lora, frontend, lora_scale, remat=False)
 
@@ -702,22 +848,31 @@ def prefill(
             st, params["stages"][st.name],
             None if lora is None else lora.get("stages", {}).get(st.name),
             x, aux, cfg, positions=positions, enc_out=enc_out,
-            cache=cache[st.name], pos=S - 1, scale_l=lora_scale)
+            cache=cache[st.name], pos=S - 1, scale_l=lora_scale,
+            valid_len=valid_len)
         new_cache[st.name] = st_cache
-    x = L.rms_norm(x[:, -1:], params["final_ln"])
+    if valid_len is None:
+        x = x[:, -1:]
+    else:
+        x = lax.dynamic_slice_in_dim(x, jnp.asarray(valid_len, jnp.int32) - 1,
+                                     1, axis=1)
+    x = L.rms_norm(x, params["final_ln"])
     logits = _lm_logits(cfg, params, x, lora, lora_scale)
-    return logits[:, 0], new_cache, S
+    return logits[:, 0], new_cache, (S if valid_len is None else valid_len)
 
 
 def decode_step(
     plan: Plan, params: PyTree, token: Array, cache: PyTree, pos,
     lora: Optional[PyTree] = None, *, lora_scale: float = 2.0,
-    adapter_ids: Optional[Array] = None,
+    adapter_ids: Optional[Array] = None, block_table: Optional[Array] = None,
 ):
     """One decode step.  token: (B,) int32; pos: scalar int32 (next position,
     whole batch in lockstep) or (B,) int32 (per-slot positions — continuous
     batching).  ``adapter_ids`` (B,) routes each slot through its own adapter
-    when ``lora`` is a stacked bank.  Returns (logits (B, V), new_cache)."""
+    when ``lora`` is a stacked bank.  ``block_table`` (B, n_tbl) int32 marks
+    the cache as PAGED (see :func:`init_paged_cache`): attention K/V reads
+    and the new token's write go through page indirection.  Returns
+    (logits (B, V), new_cache)."""
     cfg = plan.cfg
     x = _embed_tokens(cfg, params, token[:, None])
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
@@ -731,7 +886,7 @@ def decode_step(
             None if lora is None else lora.get("stages", {}).get(st.name),
             x, aux, cfg, positions=positions, enc_out=None,
             cache=cache[st.name], pos=pos, scale_l=lora_scale,
-            adapter_ids=adapter_ids)
+            adapter_ids=adapter_ids, block_table=block_table)
         new_cache[st.name] = st_cache
     x = L.rms_norm(x, params["final_ln"])
     logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)
@@ -741,7 +896,7 @@ def decode_step(
 def verify_step(
     plan: Plan, params: PyTree, tokens: Array, cache: PyTree, pos,
     lora: Optional[PyTree] = None, *, lora_scale: float = 2.0,
-    adapter_ids: Optional[Array] = None,
+    adapter_ids: Optional[Array] = None, block_table: Optional[Array] = None,
 ):
     """Speculative-decoding verify: score T tokens per slot in ONE forward.
 
@@ -773,7 +928,7 @@ def verify_step(
             None if lora is None else lora.get("stages", {}).get(st.name),
             x, aux, cfg, positions=positions, enc_out=None,
             cache=cache[st.name], pos=pos, scale_l=lora_scale,
-            adapter_ids=adapter_ids, verify=True)
+            adapter_ids=adapter_ids, verify=True, block_table=block_table)
         pending[st.name] = st_pend
     x = L.rms_norm(x, params["final_ln"])
     logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)

@@ -99,13 +99,23 @@ def _split_proj(zxbcdt: Array, d_inner: int, n_state: int, n_heads: int):
     return z, xc, b, c, dt  # dt: (..., H)
 
 
-def causal_conv(x: Array, w: Array, state: Optional[Array] = None):
+def causal_conv(x: Array, w: Array, state: Optional[Array] = None,
+                valid_len=None):
     """Depthwise causal conv.  x: (B, S, C); w: (K, C).  If ``state`` (B, K-1, C)
-    is given, runs in streaming mode and returns (y, new_state)."""
+    is given, runs in streaming mode and returns (y, new_state).  With
+    ``valid_len`` (bucketed prefill: positions >= valid_len are padding) the
+    returned state is the window ending at the LAST REAL position, not the
+    padded tail."""
     k = w.shape[0]
     if state is not None:
         xa = jnp.concatenate([state, x], axis=1)
-        new_state = xa[:, -(k - 1):, :]
+        if valid_len is None:
+            new_state = xa[:, -(k - 1):, :]
+        else:
+            # row for position p sits at index p + (k-1); the state after
+            # valid_len tokens is rows valid_len .. valid_len + k - 2
+            new_state = lax.dynamic_slice_in_dim(
+                xa, jnp.asarray(valid_len, jnp.int32), k - 1, axis=1)
     else:
         xa = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
         new_state = xa[:, -(k - 1):, :]
@@ -124,6 +134,7 @@ def mamba_block(
     chunk: int = DEFAULT_CHUNK,
     adapter_ids: Optional[Array] = None,
     verify: bool = False,
+    valid_len=None,
 ):
     """Returns (out, new_cache).  cache = {"conv": (B,K-1,Cc), "ssm": (B,H,P,N)}.
 
@@ -161,11 +172,20 @@ def mamba_block(
                     + jnp.arange(kw - 1)[None, :])
         conv_snaps = xa[:, snap_idx]                      # (B, S, k-1, Cc)
     else:
-        conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state)
+        conv_out, new_conv = causal_conv(conv_in, p["conv_w"], conv_state,
+                                         valid_len=valid_len)
     conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(resid_dtype)
     xc, b_mat, c_mat = jnp.split(conv_out, [di, di + N], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid_len is not None:
+        # bucketed prefill: dt = 0 at padded steps makes the recurrence an
+        # exact identity there (decay exp(0·a) = 1, input term dt·x = 0), so
+        # the final SSM state is precisely the state after the last REAL
+        # token regardless of what garbage the padding projects to.
+        real = jnp.arange(dt.shape[1])[None, :, None] < jnp.asarray(
+            valid_len, jnp.int32)
+        dt = jnp.where(real, dt, 0.0)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (H,)
 
     B, S = x.shape[:2]

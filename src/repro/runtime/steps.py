@@ -18,8 +18,8 @@ from jax import lax
 from repro.configs.base import LoRAConfig, TrainConfig
 from repro.core.objectives import sft_loss
 from repro.models.model import (Plan, decode_step as model_decode, forward,
-                                prefill as model_prefill,
-                                verify_step as model_verify)
+                                paged_pos_to_page, prefill as model_prefill,
+                                ring_pages, verify_step as model_verify)
 from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import warmup_cosine
 
@@ -121,20 +121,38 @@ def make_decode_step(plan: Plan, *, lora_scale: float = 2.0,
 # continuous-batching serve steps
 # ---------------------------------------------------------------------------
 
-def make_multi_adapter_decode_step(plan: Plan, *,
-                                   lora_scale: float = 2.0) -> Callable:
+def make_multi_adapter_decode_step(plan: Plan, *, lora_scale: float = 2.0,
+                                   paged: bool = False) -> Callable:
     """One token for every *slot*: per-slot positions (each sequence sits at
     its own depth) and per-slot ``adapter_ids`` routed through a stacked
-    adapter bank (see repro.serving.adapters)."""
+    adapter bank (see repro.serving.adapters).  ``paged=True`` builds the
+    paged-cache variant, which additionally takes the per-slot block table
+    (see repro.serving.pages)."""
 
-    def step(params, bank, token, cache, pos, adapter_ids):
-        return model_decode(plan, params, token, cache, pos, bank,
-                            lora_scale=lora_scale, adapter_ids=adapter_ids)
+    if paged:
+        def step(params, bank, token, cache, pos, adapter_ids, block_table):
+            return model_decode(plan, params, token, cache, pos, bank,
+                                lora_scale=lora_scale, adapter_ids=adapter_ids,
+                                block_table=block_table)
+    else:
+        def step(params, bank, token, cache, pos, adapter_ids):
+            return model_decode(plan, params, token, cache, pos, bank,
+                                lora_scale=lora_scale, adapter_ids=adapter_ids)
 
     return step
 
 
-def make_prefill_into_slot(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
+def _zeros_row(c):
+    return jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype)
+
+
+def _write_row(big, small, slot):
+    return lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype),
+                                           slot, axis=1)
+
+
+def make_prefill_into_slot(plan: Plan, *, lora_scale: float = 2.0,
+                           bucketed: bool = False) -> Callable:
     """Prefill ONE request directly into slot ``slot`` of a live multi-slot
     cache while other slots keep decoding unchanged.
 
@@ -142,22 +160,102 @@ def make_prefill_into_slot(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
     occupant's KV / SSM state — stale SSM state would corrupt the recurrence)
     and is written back with ``dynamic_update_slice`` along the batch axis, so
     the jitted computation is reused for every slot index.
+
+    ``bucketed=True`` adds a trailing ``valid_len`` argument: ``tokens`` is
+    the prompt right-padded to a power-of-two bucket and only the first
+    ``valid_len`` positions are real (see ``repro.serving.pages.bucket_len``)
+    — the step then compiles once per BUCKET instead of once per distinct
+    prompt length.
     """
 
-    def _zeros_row(c):
-        return jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype)
+    if bucketed:
+        def step(params, lora, tokens, big_cache, slot, valid_len):
+            row = jax.tree.map(_zeros_row, big_cache)
+            logits, row, _ = model_prefill(plan, params, tokens, row, lora,
+                                           lora_scale=lora_scale,
+                                           valid_len=valid_len)
+            new_cache = jax.tree.map(
+                lambda b, s: _write_row(b, s, slot), big_cache, row)
+            return logits, new_cache
+    else:
+        def step(params, lora, tokens, big_cache, slot):
+            # tokens: (1, S_prompt); slot: scalar int32
+            row = jax.tree.map(_zeros_row, big_cache)
+            logits, row, _ = model_prefill(plan, params, tokens, row, lora,
+                                           lora_scale=lora_scale)
+            new_cache = jax.tree.map(
+                lambda b, s: _write_row(b, s, slot), big_cache, row)
+            return logits, new_cache
 
-    def _write_row(big, small, slot):
-        return lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype),
-                                               slot, axis=1)
+    return step
 
-    def step(params, lora, tokens, big_cache, slot):
-        # tokens: (1, S_prompt); slot: scalar int32
-        row = jax.tree.map(_zeros_row, big_cache)
+
+def make_paged_prefill_into_slot(plan: Plan, bucket: int, page_size: int,
+                                 n_tbl: int, *,
+                                 lora_scale: float = 2.0) -> Callable:
+    """Prefill ONE request into the PAGED cache: run the (bucketed) prompt
+    through a dense scratch row, then scatter the row's pages into the pool
+    slots named by ``pids`` — the slot's freshly allocated block-table
+    entries.  Attention rows are sized to the bucket (windowed layers: to
+    their bounded ring), so scratch memory is O(bucket), not O(max_seq_len);
+    recurrent (SSM) state stays dense per slot and is written back with the
+    same ``dynamic_update_slice`` the dense path uses.  Compiled once per
+    bucket."""
+    assert bucket % page_size == 0, (bucket, page_size)
+    for st in plan.stages:
+        for spec in st.superblock:
+            if spec.kind == "cross_attn":
+                raise NotImplementedError(
+                    "paged serving does not cover encoder-decoder frontends")
+
+    def step(params, lora, tokens, cache, pids, slot, valid_len):
+        # tokens: (1, bucket); pids: (bucket//page_size,) pool page ids;
+        # slot, valid_len: scalars
+        row = {}
+        for st in plan.stages:
+            st_row = {}
+            for spec in st.superblock:
+                bc = cache[st.name].get(spec.name)
+                if bc is None:
+                    continue
+                if spec.kind == "attn":
+                    rowlen = min(
+                        bucket,
+                        ring_pages(spec.window, n_tbl, page_size) * page_size)
+                    st_row[spec.name] = {
+                        n: jnp.zeros((st.n_rep, 1, rowlen) + bc[n].shape[3:],
+                                     bc[n].dtype)
+                        for n in ("k", "v")
+                    }
+                else:                                  # mamba: dense per slot
+                    st_row[spec.name] = jax.tree.map(_zeros_row, bc)
+            row[st.name] = st_row
+
         logits, row, _ = model_prefill(plan, params, tokens, row, lora,
-                                       lora_scale=lora_scale)
-        new_cache = jax.tree.map(
-            lambda b, s: _write_row(b, s, slot), big_cache, row)
+                                       lora_scale=lora_scale,
+                                       valid_len=valid_len)
+
+        new_cache = {}
+        for st in plan.stages:
+            st_new = {}
+            for spec in st.superblock:
+                bc = cache[st.name].get(spec.name)
+                if bc is None:
+                    continue
+                rowc = row[st.name][spec.name]
+                if spec.kind == "attn":
+                    rown = rowc["k"].shape[2] // page_size
+                    st_new[spec.name] = {
+                        n: bc[n].at[:, pids[:rown]].set(
+                            rowc[n].reshape(
+                                (bc[n].shape[0], rown) + bc[n].shape[2:]
+                            ).astype(bc[n].dtype))
+                        for n in ("k", "v")
+                    }
+                else:
+                    st_new[spec.name] = jax.tree.map(
+                        lambda b, s: _write_row(b, s, slot), bc, rowc)
+            new_cache[st.name] = st_new
         return logits, new_cache
 
     return step
@@ -181,18 +279,36 @@ def request_key(seed, gen_idx, tag: Optional[int] = None):
     return k if tag is None else jax.random.fold_in(k, tag)
 
 
-def make_verify_step(plan: Plan, *, lora_scale: float = 2.0) -> Callable:
+def make_verify_step(plan: Plan, *, lora_scale: float = 2.0,
+                     paged: bool = False) -> Callable:
     """Length-γ target verify for speculative decoding: per-slot token blocks
     ``(B, γ)`` at per-slot positions through ONE forward.  Returns
     ``(logits (B, γ, V), pending)`` — the persistent cache is untouched;
     ``repro.serving.speculative.commit_cache`` scatters the accepted prefix
-    (see models.model.verify_step)."""
+    (see models.model.verify_step).  The paged variant reads the cache
+    through the block table; ``pending`` is identical either way (the commit
+    decides where the rows land)."""
 
-    def step(params, bank, tokens, cache, pos, adapter_ids):
-        return model_verify(plan, params, tokens, cache, pos, bank,
-                            lora_scale=lora_scale, adapter_ids=adapter_ids)
+    if paged:
+        def step(params, bank, tokens, cache, pos, adapter_ids, block_table):
+            return model_verify(plan, params, tokens, cache, pos, bank,
+                                lora_scale=lora_scale, adapter_ids=adapter_ids,
+                                block_table=block_table)
+    else:
+        def step(params, bank, tokens, cache, pos, adapter_ids):
+            return model_verify(plan, params, tokens, cache, pos, bank,
+                                lora_scale=lora_scale, adapter_ids=adapter_ids)
 
     return step
+
+
+def attn_window_map(plan: Plan) -> dict:
+    """{stage name: {block name: window}} for the plan's attention blocks —
+    the paged speculative commit/rollback helpers need to know which pooled
+    caches are bounded rings (window > 0) and which are position-linear."""
+    return {st.name: {b.name: b.window for b in st.superblock
+                      if b.kind == "attn"}
+            for st in plan.stages}
 
 
 def make_draft_loop(plan: Plan, gamma: int, *, lora_scale: float = 2.0,
@@ -222,8 +338,81 @@ def make_draft_loop(plan: Plan, gamma: int, *, lora_scale: float = 2.0,
     ``sampling=False`` builds the all-greedy variant: proposals are pure
     argmax and the per-step draft distributions are not materialized (qs is
     returned as None) — the same greedy/sampled split the plain engine's
-    decode tick uses.
+    decode tick uses.  (:func:`make_paged_draft_loop` is the paged-cache
+    sibling.)
     """
+    return _make_draft_loop(plan, gamma, lora_scale=lora_scale,
+                            full_len=full_len, sampling=sampling)
+
+
+def make_paged_draft_loop(plan: Plan, gamma: int, page_size: int, n_tbl: int,
+                          *, lora_scale: float = 2.0,
+                          sampling: bool = True) -> Callable:
+    """Paged-cache variant of :func:`make_draft_loop`: same contract, but the
+    loop takes a trailing ``block_table`` and saves rollback rows only for
+    windowed attention blocks (bounded rings wrap and can clobber rows the
+    accept boundary still needs; position-linear pooled caches never wrap
+    within a request, so their stale writes are masked and overwritten in
+    order — same argument as the dense full-length fast path)."""
+    decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale,
+                                            paged=True)
+    windows = attn_window_map(plan)
+
+    def loop(params, bank, cache, last_tok, pos, adapter_ids, temps, seeds,
+             gen_idx, block_table):
+        temp = jnp.maximum(temps, 1e-6)[:, None]
+
+        def keys_at(idx, tag):
+            return jax.vmap(lambda s, i: request_key(s, i, tag))(seeds, idx)
+
+        def body(carry, j):
+            dc, tok = carry
+            pre = {}
+            for stn, stc in dc.items():
+                for bn, bc in stc.items():
+                    if "k" in bc and windows[stn][bn]:
+                        pg, off = paged_pos_to_page(
+                            block_table, pos + j, windows[stn][bn], page_size)
+                        pre.setdefault(stn, {})[bn] = {
+                            "k": bc["k"][:, pg, off],
+                            "v": bc["v"][:, pg, off],
+                        }
+            logits, dc = decode(params, bank, tok, dc, pos + j, adapter_ids,
+                                block_table)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if sampling:
+                keys = keys_at(gen_idx + j, 1)
+                sampled = jax.vmap(jax.random.categorical)(
+                    keys, logits / temp).astype(jnp.int32)
+                nxt = jnp.where(temps > 0.0, sampled, nxt)
+            undo = {}
+            for stn, stc in dc.items():
+                undo[stn] = {}
+                for bn, bc in stc.items():
+                    if "k" in bc:
+                        if stn in pre and bn in pre[stn]:
+                            undo[stn][bn] = pre[stn][bn]
+                    else:                              # mamba: post-step state
+                        undo[stn][bn] = {"conv": bc["conv"], "ssm": bc["ssm"]}
+            if sampling:
+                q = jax.nn.softmax(logits / temp, axis=-1)
+                return (dc, nxt), (nxt, q, undo)
+            return (dc, nxt), (nxt, undo)
+
+        if sampling:
+            (cache, _), (drafts, qs, undo) = lax.scan(
+                body, (cache, last_tok), jnp.arange(gamma))
+        else:
+            (cache, _), (drafts, undo) = lax.scan(
+                body, (cache, last_tok), jnp.arange(gamma))
+            qs = None
+        return cache, drafts, qs, undo
+
+    return loop
+
+
+def _make_draft_loop(plan: Plan, gamma: int, *, lora_scale: float = 2.0,
+                     full_len: int = 0, sampling: bool = True) -> Callable:
     decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale)
 
     def loop(params, bank, cache, last_tok, pos, adapter_ids, temps, seeds,

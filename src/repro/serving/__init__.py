@@ -3,8 +3,13 @@ from repro.serving.draft import (DraftModel, build_draft,  # noqa: F401
                                  draft_from_setup)
 from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401
                                   GenerationResult, ServeEngine)
+from repro.serving.pages import (PageAllocator, PoolExhausted,  # noqa: F401
+                                 bucket_len, pages_for)
 from repro.serving.scheduler import (Request, RequestResult,  # noqa: F401
                                      Scheduler)
-from repro.serving.speculative import (SpeculativeConfig,  # noqa: F401
+from repro.serving.speculative import (GammaController,  # noqa: F401
+                                       SpeculativeConfig,
                                        SpeculativeServeEngine, commit_cache,
-                                       commit_draft_cache, speculative_accept)
+                                       commit_cache_paged, commit_draft_cache,
+                                       commit_draft_cache_paged,
+                                       speculative_accept)

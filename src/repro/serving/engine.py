@@ -20,6 +20,26 @@ Two engines:
   compiles it exactly once and never recompiles mid-flight; free slots decode
   masked garbage that nothing reads.  Generated tokens accumulate on device
   and transfer to the host once per request, at eviction.
+
+Cache layouts (``ServeConfig.kv_paging``):
+
+* dense (default): every slot reserves a ``max_seq_len`` K/V buffer per
+  attention layer — HBM scales with ``max_slots × max_seq_len`` no matter
+  how short the traffic actually is.
+* paged: attention K/V lives in a global pool of fixed-size pages indexed
+  through a per-slot block table (part of the jitted tick state — shapes
+  still never change).  Admission is gated on free PAGES, decode growth
+  allocates a page per crossed boundary, pool exhaustion preempts the
+  newest slot (requeued at the queue head — deterministic generation makes
+  the re-run emit identical tokens), and eviction returns pages to the free
+  list.  See ``repro.serving.pages``.  SSM/conv state stays dense (O(1) per
+  slot).
+
+Prompts are padded to power-of-two buckets (``ServeConfig.prefill_buckets``)
+so prefill compiles O(log max_seq_len) variants instead of one per distinct
+prompt length; masked cache writes, frozen recurrent state and lossless MoE
+routing past the real length keep bucketed output exactly equal to unpadded
+(see :func:`repro.models.model.prefill`).
 """
 from __future__ import annotations
 
@@ -34,11 +54,14 @@ import numpy as np
 from repro.configs.base import ServeConfig
 from repro.core.recovery import merge_lora
 from repro.distributed import sharding
-from repro.models.model import Plan, init_cache
+from repro.models.model import Plan, init_cache, init_paged_cache
 from repro.runtime.steps import (make_decode_step, make_multi_adapter_decode_step,
+                                 make_paged_prefill_into_slot,
                                  make_prefill_into_slot, make_prefill_step,
                                  request_key)
 from repro.serving.adapters import AdapterRegistry
+from repro.serving.pages import (PageAllocator, PoolExhausted, bucket_len,
+                                 pages_for)
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 
 
@@ -154,17 +177,46 @@ class ContinuousServeEngine:
         S = cfg.max_slots
         self._sched = Scheduler(S)
         self._n_ticks = 0
+        self._lora_scale = lora_scale
 
-        self._prefill = jax.jit(
-            make_prefill_into_slot(plan, lora_scale=lora_scale),
-            donate_argnums=(3,))
+        # ---- paged KV cache plumbing (ServeConfig.kv_paging) ----
+        self.paged = cfg.kv_paging
+        self._page = cfg.kv_page_size
+        self._n_tbl = pages_for(cfg.max_seq_len, self._page) if self.paged else 0
+        if self.paged:
+            n_pages = cfg.kv_pages or (S * self._n_tbl + 1)
+            if n_pages - 1 < self._n_tbl:
+                raise ValueError(
+                    f"kv_pages={n_pages} cannot back one max-length request "
+                    f"({self._n_tbl} pages + the trash page) — the paged "
+                    f"engine would preempt forever")
+            self.pages = PageAllocator(n_pages, self._page, self._n_tbl, S)
+            self._prefill_steps: Dict[int, Any] = {}    # bucket → jitted step
+            self._slot_pos = [0] * S        # next write position per slot
+            self._admit_seq = [-1] * S      # admission order (newest preempts)
+            self._seq_counter = 0
+            self.n_preemptions = 0
+        else:
+            self._prefill = jax.jit(
+                make_prefill_into_slot(plan, lora_scale=lora_scale,
+                                       bucketed=cfg.prefill_buckets),
+                donate_argnums=(3,))
 
-        decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale)
+        decode = make_multi_adapter_decode_step(plan, lora_scale=lora_scale,
+                                                paged=self.paged)
+        paged = self.paged
 
         def make_tick(sampling: bool):
             def tick(params_, bank, cache, st):
-                logits, cache = decode(params_, bank, st["last_tok"], cache,
-                                       st["pos"], st["adapter_ids"])
+                if paged:
+                    logits, cache = decode(params_, bank, st["last_tok"],
+                                           cache, st["pos"],
+                                           st["adapter_ids"],
+                                           st["block_table"])
+                else:
+                    logits, cache = decode(params_, bank, st["last_tok"],
+                                           cache, st["pos"],
+                                           st["adapter_ids"])
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 if sampling:
                     # key = (request seed, generation index): sampling is
@@ -183,16 +235,13 @@ class ContinuousServeEngine:
                 cur = st["out_buf"][bidx, gi]
                 out_buf = st["out_buf"].at[bidx, gi].set(
                     jnp.where(act, tok, cur))
-                new_st = {
-                    "last_tok": tok,
-                    "pos": st["pos"] + step1,
-                    "active": act,
-                    "adapter_ids": st["adapter_ids"],
-                    "temps": st["temps"],
-                    "seeds": st["seeds"],
-                    "gen_idx": st["gen_idx"] + step1,
-                    "out_buf": out_buf,
-                }
+                new_st = dict(st)       # carries block_table when paged
+                new_st.update(
+                    last_tok=tok,
+                    pos=st["pos"] + step1,
+                    gen_idx=st["gen_idx"] + step1,
+                    out_buf=out_buf,
+                )
                 return cache, new_st
 
             return jax.jit(tick, donate_argnums=(2, 3))
@@ -203,22 +252,29 @@ class ContinuousServeEngine:
         self._n_hot = 0    # in-flight/queued requests with temperature > 0
 
         def admit_update(st, slot, first, pos0, aid, temp, seed):
-            return {
-                "last_tok": st["last_tok"].at[slot].set(first),
-                "pos": st["pos"].at[slot].set(pos0),
-                "active": st["active"].at[slot].set(True),
-                "adapter_ids": st["adapter_ids"].at[slot].set(aid),
-                "temps": st["temps"].at[slot].set(temp),
-                "seeds": st["seeds"].at[slot].set(seed),
-                "gen_idx": st["gen_idx"].at[slot].set(1),
-                "out_buf": st["out_buf"].at[slot, 0].set(first),
-            }
+            out = dict(st)              # carries block_table when paged
+            out.update(
+                last_tok=st["last_tok"].at[slot].set(first),
+                pos=st["pos"].at[slot].set(pos0),
+                active=st["active"].at[slot].set(True),
+                adapter_ids=st["adapter_ids"].at[slot].set(aid),
+                temps=st["temps"].at[slot].set(temp),
+                seeds=st["seeds"].at[slot].set(seed),
+                gen_idx=st["gen_idx"].at[slot].set(1),
+                out_buf=st["out_buf"].at[slot, 0].set(first),
+            )
+            return out
 
         # one fused dispatch per admission instead of seven .at[].set calls
         self._admit_update = jax.jit(admit_update, donate_argnums=(0,))
 
-        self.cache = init_cache(plan, S, cfg.max_seq_len,
-                                jnp.dtype(cfg.kv_cache_dtype))
+        if self.paged:
+            self.cache = init_paged_cache(plan, S, self.pages.n_pages,
+                                          self._page,
+                                          jnp.dtype(cfg.kv_cache_dtype))
+        else:
+            self.cache = init_cache(plan, S, cfg.max_seq_len,
+                                    jnp.dtype(cfg.kv_cache_dtype))
         self._st: Dict[str, jax.Array] = {
             "last_tok": jnp.zeros((S,), jnp.int32),
             "pos": jnp.zeros((S,), jnp.int32),
@@ -229,6 +285,9 @@ class ContinuousServeEngine:
             "gen_idx": jnp.zeros((S,), jnp.int32),
             "out_buf": jnp.zeros((S, cfg.max_new_tokens), jnp.int32),
         }
+        if self.paged:
+            # all-zero rows route free slots' garbage writes to the trash page
+            self._st["block_table"] = jnp.zeros((S, self._n_tbl), jnp.int32)
         # aggregate counters for benchmarks / monitoring
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
@@ -275,15 +334,27 @@ class ContinuousServeEngine:
                else _null())
         done: List[RequestResult] = []
         with ctx:
+            if self.paged:
+                # grow EXISTING slots before admitting: otherwise a freshly
+                # admitted request is always the newest slot and the first
+                # preemption victim, wasting its just-run prefill
+                self._ensure_growth(lookahead=1)
             while True:
-                adm = self._sched.next_admission()
+                adm = self._sched.next_admission(
+                    gate=self._admission_gate if self.paged else None)
                 if adm is None:
                     break
                 self._admit(*adm)
             # single-token requests finish at prefill, before any tick
             for slot in self._sched.completed_slots():
                 done.append(self._finalize(slot))
-            if self._sched.active_slots():
+            if self.paged:
+                # back the next write position of every active slot —
+                # including a just-admitted slot whose prompt filled its
+                # bucket exactly — with a real page BEFORE the tick
+                self._ensure_growth(lookahead=1)
+            active = self._sched.active_slots()
+            if active:
                 tick = self._tick_sample if self._n_hot else self._tick_greedy
                 # read the bank through the registry every tick so add() /
                 # hot-swap after construction takes effect (same shapes →
@@ -292,6 +363,9 @@ class ContinuousServeEngine:
                 self.cache, self._st = tick(
                     self.params, bank, self.cache, self._st)
                 self._n_ticks += 1
+                if self.paged:
+                    for slot in active:
+                        self._slot_pos[slot] += 1
                 for slot in self._sched.tick():
                     done.append(self._finalize(slot))
         return done
@@ -314,12 +388,120 @@ class ContinuousServeEngine:
 
     # -- internals ----------------------------------------------------------
 
+    def _bucketed_prompt(self, req: Request):
+        """(tokens (1, Sb), valid_len) — the prompt right-padded to its
+        power-of-two bucket.  Paged mode always buckets (scratch prefill rows
+        scatter into whole pages); dense mode buckets when configured."""
+        n = len(req.prompt)
+        sb = bucket_len(n, self._page if self.paged else 1,
+                        self.cfg.max_seq_len)
+        padded = np.zeros(sb, np.int32)
+        padded[:n] = req.prompt
+        return jnp.asarray(padded[None]), n
+
+    def _paged_prefill_step(self, bucket: int):
+        step = self._prefill_steps.get(bucket)
+        if step is None:
+            step = jax.jit(
+                make_paged_prefill_into_slot(self.plan, bucket, self._page,
+                                             self._n_tbl,
+                                             lora_scale=self._lora_scale),
+                donate_argnums=(3,))
+            self._prefill_steps[bucket] = step
+        return step
+
+    def _admission_gate(self, req: Request) -> bool:
+        sb = bucket_len(len(req.prompt), self._page, self.cfg.max_seq_len)
+        return self.pages.can_alloc(pages_for(sb, self._page))
+
+    def _next_seq(self) -> int:
+        self._seq_counter += 1
+        return self._seq_counter
+
+    def _set_table_row(self, slot: int, ids):
+        row = np.zeros(self._n_tbl, np.int32)
+        row[:len(ids)] = ids
+        self._st["block_table"] = self._st["block_table"].at[slot].set(
+            jnp.asarray(row))
+
+    def _release_slot_pages(self, slot: int):
+        self.pages.release(slot)
+        self._st["block_table"] = self._st["block_table"].at[slot].set(0)
+        self._slot_pos[slot] = 0
+        self._admit_seq[slot] = -1
+
+    def _preempt(self, slot: int):
+        """Page-pool exhaustion: roll the slot's request back to the queue
+        head and free its pages.  Generation is deterministic per (seed,
+        generation index), so the re-run emits the same tokens."""
+        self._sched.preempt(slot)
+        self._release_slot_pages(slot)
+        self._st["active"] = self._st["active"].at[slot].set(False)
+        self.n_preemptions += 1
+
+    def _ensure_growth(self, lookahead: int):
+        """Back positions ``slot_pos .. slot_pos+lookahead-1`` of every
+        active slot with real pages, oldest slot first; preempt the NEWEST
+        active slot on exhaustion (never deadlocks: the pool holds at least
+        one max-length request, so the oldest survivor always grows)."""
+        order = sorted(self._sched.active_slots(),
+                       key=lambda s: self._admit_seq[s])
+        for slot in order:
+            if self._sched.slot_request(slot) is None:
+                continue                      # preempted below, earlier
+            need = pages_for(min(self._slot_pos[slot] + lookahead,
+                                 self.cfg.max_seq_len), self._page)
+            while True:
+                try:
+                    new = self.pages.ensure(slot, need)
+                    break
+                except PoolExhausted:
+                    victim = max(self._sched.active_slots(),
+                                 key=lambda s: self._admit_seq[s])
+                    self._preempt(victim)
+                    if victim == slot:
+                        new = []
+                        break
+            if new:
+                # one device dispatch per grown slot: re-upload the whole
+                # row from the allocator's (host-side) page list
+                self._set_table_row(slot, self.pages.slot_pages(slot))
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes reserved for attention K/V (the paged pool + block
+        table, or the dense per-slot reservation) — what the serving bench
+        compares across engines."""
+        total = 0
+        for stc in self.cache.values():
+            for bc in stc.values():
+                if "k" in bc:
+                    total += bc["k"].nbytes + bc["v"].nbytes
+        if self.paged:
+            total += self._st["block_table"].nbytes
+        return total
+
     def _admit(self, slot: int, req: Request):
-        tokens = jnp.asarray(req.prompt[None])
         tree = (None if self.registry is None
                 else self.registry.adapter_tree(req.adapter_id))
-        logits, self.cache = self._prefill(self.params, tree, tokens,
-                                           self.cache, slot)
+        if self.paged:
+            tokens, valid = self._bucketed_prompt(req)
+            sb = tokens.shape[1]
+            ids = self.pages.alloc(slot, pages_for(sb, self._page))
+            self._set_table_row(slot, ids)
+            self._slot_pos[slot] = valid
+            self._admit_seq[slot] = self._next_seq()
+            step = self._paged_prefill_step(sb)
+            logits, self.cache = step(self.params, tree, tokens, self.cache,
+                                      jnp.asarray(ids, jnp.int32), slot,
+                                      valid)
+        elif self.cfg.prefill_buckets:
+            tokens, valid = self._bucketed_prompt(req)
+            logits, self.cache = self._prefill(self.params, tree, tokens,
+                                               self.cache, slot, valid)
+        else:
+            tokens = jnp.asarray(req.prompt[None])
+            logits, self.cache = self._prefill(self.params, tree, tokens,
+                                               self.cache, slot)
         first = self._first_token(logits[0], req)
         self._st = self._admit_update(
             self._st, slot, first, len(req.prompt), req.adapter_id,
@@ -341,6 +523,8 @@ class ContinuousServeEngine:
         # the single device→host transfer for this request
         row = np.asarray(self._st["out_buf"][slot, :n])
         self._st["active"] = self._st["active"].at[slot].set(False)
+        if self.paged:
+            self._release_slot_pages(slot)
         req_evicted = self._sched.evict(slot)
         if req_evicted.temperature > 0.0:
             self._n_hot -= 1

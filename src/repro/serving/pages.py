@@ -1,0 +1,120 @@
+"""Host-side paged KV-cache memory management.
+
+The device holds a global pool of fixed-size K/V pages per attention layer
+(:func:`repro.models.model.init_paged_cache`) plus one block table mapping
+``(slot, logical page)`` → pool page (part of the jitted tick state, so the
+tick's shapes never change).  THIS module is the pure-python brain that
+decides which pool pages back which slot:
+
+  * page 0 is the reserved TRASH page — free slots' block-table rows are all
+    zeros, so the garbage their masked decode writes every tick lands there
+    and can never corrupt a live slot;
+  * admission is gated on FREE PAGES, not free slots: a request is admitted
+    only when its (bucketed) prompt fits in the free list;
+  * decode growth allocates one page each time a slot's sequence crosses a
+    page boundary; on exhaustion the engine preempts the NEWEST admitted
+    slot (its pages return to the free list, its request is requeued at the
+    queue head), so the OLDEST request always keeps its pages and the engine
+    can never deadlock;
+  * eviction returns all of a slot's pages to the free list.
+
+Separating policy from device state keeps the allocator unit-testable and
+the accounting honest: :attr:`PageAllocator.peak_in_use` is the real
+high-water HBM demand of a workload, which is what the serving benchmark
+reports against the dense engine's ``max_slots × max_seq_len`` reservation.
+"""
+from __future__ import annotations
+
+from typing import List
+
+TRASH_PAGE = 0
+
+
+class PoolExhausted(Exception):
+    """No free pages — the caller should preempt (or queue) and retry."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to back ``n_tokens`` positions."""
+    return -(-n_tokens // page_size)
+
+
+def bucket_len(n: int, page_size: int, max_seq_len: int) -> int:
+    """Prompt-length bucket: the smallest power of two >= n (and >= one
+    page), page-aligned, capped at max_seq_len.  Distinct buckets number
+    O(log max_seq_len), so prefill compiles O(log) variants instead of one
+    per distinct prompt length — and every bucket is a whole number of
+    pages, so bucketed prefill scatters into pages without partial pages."""
+    assert 1 <= n <= max_seq_len, (n, max_seq_len)
+    b = max(page_size, 1)
+    while b < n:
+        b *= 2
+    b = -(-b // max(page_size, 1)) * max(page_size, 1)   # page-align
+    return min(b, -(-max_seq_len // max(page_size, 1)) * max(page_size, 1))
+
+
+class PageAllocator:
+    """Free-list allocator over pool pages 1..n_pages-1 (0 is trash)."""
+
+    def __init__(self, n_pages: int, page_size: int, max_pages_per_slot: int,
+                 max_slots: int):
+        assert n_pages >= 2, "pool needs the trash page plus >= 1 usable page"
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        # LIFO free list: recently-freed pages are re-used first (friendlier
+        # to whatever cache locality the pool enjoys on device)
+        self._free: List[int] = list(range(n_pages - 1, TRASH_PAGE, -1))
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.peak_in_use = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slot_pages[slot])
+
+    def n_slot_pages(self, slot: int) -> int:
+        return len(self._slot_pages[slot])
+
+    # -- allocation ----------------------------------------------------------
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, slot: int, n: int) -> List[int]:
+        """Append ``n`` fresh pages to ``slot``; raises :class:`PoolExhausted`
+        if the free list is short (nothing is partially allocated)."""
+        owned = self._slot_pages[slot]
+        assert len(owned) + n <= self.max_pages_per_slot, (slot, len(owned), n)
+        if len(self._free) < n:
+            raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
+        ids = [self._free.pop() for _ in range(n)]
+        owned.extend(ids)
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return ids
+
+    def ensure(self, slot: int, n_logical: int) -> List[int]:
+        """Grow ``slot`` to at least ``n_logical`` pages; returns the NEWLY
+        allocated ids (empty if already covered)."""
+        n_logical = min(n_logical, self.max_pages_per_slot)
+        short = n_logical - len(self._slot_pages[slot])
+        if short <= 0:
+            return []
+        return self.alloc(slot, short)
+
+    def release(self, slot: int) -> int:
+        """Return all of a slot's pages to the free list (eviction or
+        preemption); returns how many were freed."""
+        owned = self._slot_pages[slot]
+        n = len(owned)
+        self._free.extend(reversed(owned))
+        owned.clear()
+        return n

@@ -79,13 +79,20 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
-    def next_admission(self) -> Optional[Tuple[int, Request]]:
+    def next_admission(self, gate=None) -> Optional[Tuple[int, Request]]:
         """Pop the next queued request and assign it the lowest free slot.
-        Returns None when the queue is empty or all slots are busy."""
+        Returns None when the queue is empty or all slots are busy.
+
+        ``gate(request) -> bool`` lets the engine veto the admission on
+        resources the scheduler can't see (free KV pages).  Admission stays
+        strictly FCFS: if the HEAD request is gated out, nothing behind it
+        is considered — skipping ahead would starve big prompts forever."""
         if not self._queue:
             return None
         for i, slot in enumerate(self._slots):
             if slot.free:
+                if gate is not None and not gate(self._queue[0]):
+                    return None
                 req = self._queue.popleft()
                 slot.request = req
                 # prefill itself yields token #1; the remaining tokens come
@@ -94,6 +101,21 @@ class Scheduler:
                 slot.steps_left = req.max_new_tokens - 1
                 return i, req
         return None
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a mid-flight request and requeue it at the HEAD of the
+        queue (paged engines preempt the newest slot on page-pool
+        exhaustion).  The request restarts from its prompt on re-admission —
+        generation is deterministic per (seed, index), so it re-produces the
+        same tokens it lost."""
+        s = self._slots[slot]
+        assert s.request is not None, f"preempting free slot {slot}"
+        req = s.request
+        s.request = None
+        s.steps_left = 0
+        s.generated = 0
+        self._queue.appendleft(req)
+        return req
 
     # -- decode ticks -------------------------------------------------------
 

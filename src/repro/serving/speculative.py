@@ -43,12 +43,16 @@ import jax.numpy as jnp
 
 from repro.configs.base import ServeConfig
 from repro.distributed import sharding
-from repro.models.model import init_cache
-from repro.runtime.steps import (make_draft_loop, make_prefill_into_slot,
-                                 make_verify_step, request_key)
+from repro.models.model import init_cache, init_paged_cache, ring_pages
+from repro.runtime.steps import (attn_window_map, make_draft_loop,
+                                 make_paged_draft_loop,
+                                 make_paged_prefill_into_slot,
+                                 make_prefill_into_slot, make_verify_step,
+                                 request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.draft import DraftModel
 from repro.serving.engine import ContinuousServeEngine, _null
+from repro.serving.pages import pages_for
 from repro.serving.scheduler import RequestResult
 
 PyTree = Any
@@ -81,6 +85,80 @@ class SpeculativeConfig:
                 "draft_gamma >= 1 (or pass an explicit SpeculativeConfig) "
                 "to use SpeculativeServeEngine")
         return cls(gamma=cfg.draft_gamma, draft_stage=cfg.draft_stage)
+
+
+# ---------------------------------------------------------------------------
+# γ auto-tuning (pure host-side math — unit-tested directly)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GammaController:
+    """Adapts the draft length γ to the MEASURED acceptance rate.
+
+    Cost model (in units of one plain decode tick): a round costs
+    ``γ·c_draft + c_verify`` and emits ``E[tokens] = (1-α^γ)/(1-α)`` tokens
+    when each proposal is accepted i.i.d. with probability α (the geometric
+    prefix-accept expectation; rounds emit accepted drafts plus one
+    correction, capped at γ).  The controller keeps an EMA of α from the
+    engine's (accepted, proposed) counters and proposes the γ maximizing
+    expected tokens/cost — with hysteresis: it only moves when the predicted
+    throughput gain exceeds ``hysteresis`` (each distinct γ compiles its own
+    round, so flapping is expensive).
+    """
+
+    gamma_min: int = 1
+    gamma_max: int = 8
+    c_draft: float = 0.3       # draft decode tick cost / plain tick cost
+    c_verify: float = 1.75     # γ-token verify cost / plain tick cost
+    ema: float = 0.8           # weight on the running estimate per update
+    hysteresis: float = 0.10   # min predicted gain before switching
+    min_samples: int = 32      # proposals before trusting the estimate
+
+    def __post_init__(self):
+        assert 1 <= self.gamma_min <= self.gamma_max
+        self._alpha = 0.75     # optimistic prior — don't collapse γ on boot
+        self._seen = 0
+
+    @property
+    def acceptance(self) -> float:
+        return self._alpha
+
+    @staticmethod
+    def expected_tokens(gamma: int, alpha: float) -> float:
+        """E[tokens emitted per round] at per-proposal acceptance alpha."""
+        if alpha >= 1.0:
+            return float(gamma)
+        return (1.0 - alpha ** gamma) / (1.0 - alpha)
+
+    def throughput(self, gamma: int, alpha: Optional[float] = None) -> float:
+        """Expected tokens per plain-tick-equivalent of compute."""
+        a = self._alpha if alpha is None else alpha
+        return (self.expected_tokens(gamma, a)
+                / (gamma * self.c_draft + self.c_verify))
+
+    def best_gamma(self, alpha: Optional[float] = None) -> int:
+        return max(range(self.gamma_min, self.gamma_max + 1),
+                   key=lambda g: self.throughput(g, alpha))
+
+    def update(self, accepted: int, proposed: int) -> None:
+        if proposed <= 0:
+            return
+        rate = accepted / proposed
+        self._alpha = self.ema * self._alpha + (1.0 - self.ema) * rate
+        self._seen += proposed
+
+    def propose(self, current: int) -> int:
+        """The γ to use next round — ``current`` unless the best γ's
+        predicted throughput beats it by more than the hysteresis margin."""
+        if self._seen < self.min_samples:
+            return current
+        best = self.best_gamma()
+        if best == current:
+            return current
+        cur_tp = self.throughput(current)
+        if self.throughput(best) > (1.0 + self.hysteresis) * cur_tp:
+            return best
+        return current
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +318,126 @@ def commit_draft_cache(cache, undo, pos, n_keep):
 
 
 # ---------------------------------------------------------------------------
+# paged cache commit / rollback (pool + block-table indirection)
+# ---------------------------------------------------------------------------
+
+def _paged_pg_off(table, pos, n_steps, window, page_size, n_tbl):
+    """(pg, off, in_ring) for positions pos..pos+n_steps-1 through the block
+    table.  Windowed rings wrap (intended); position-linear caches do NOT —
+    rows past the table's span come back with ``in_ring=False`` and a
+    CLAMPED index that is only safe to read through, never to write (a
+    clamped write would collide with the genuine last-position row and the
+    scatter winner is implementation-defined — writers must redirect
+    ``~in_ring`` rows out of bounds and use ``mode='drop'``, mirroring the
+    dense engine's :func:`_commit_kv_all`)."""
+    B = pos.shape[0]
+    bidx = jnp.arange(B)
+    idx = pos[:, None] + jnp.arange(n_steps)[None, :]           # (B, T)
+    ring_len = ring_pages(window, n_tbl, page_size) * page_size
+    if window:
+        ridx = idx % ring_len
+        in_ring = jnp.ones_like(idx, bool)
+    else:
+        in_ring = idx < ring_len
+        ridx = jnp.minimum(idx, ring_len - 1)
+    pg = table[bidx[:, None], ridx // page_size]
+    return pg, ridx % page_size, in_ring
+
+
+def _commit_kv_paged(pool, pend, pos, n_keep, table, window, page_size,
+                     n_tbl):
+    """Paged :func:`_commit_kv`: scatter pending rows j < n_keep[b] into the
+    slot's pages; rows at or beyond the accept boundary keep the pool's
+    pre-round values.  Inactive slots (n_keep == 0, all-zero table rows)
+    read-modify-write the trash page — harmless by construction (every
+    colliding writer carries the identical gathered value).  Out-of-ring
+    rows (a round straddling the last position) are redirected past the
+    pool and dropped — a clamped in-bounds write could race the genuine
+    last-position row."""
+    T = pend.shape[2]
+    pg, off, in_ring = _paged_pg_off(table, pos, T, window, page_size, n_tbl)
+    old = pool[:, pg, off]                                      # (r, B, T, ...)
+    keep = (jnp.arange(T)[None, :] < n_keep[:, None]) & in_ring
+    mixed = jnp.where(keep[None, :, :, None, None], pend.astype(pool.dtype),
+                      old)
+    pg_w = jnp.where(in_ring, pg, pool.shape[1])                # OOB → drop
+    return pool.at[:, pg_w, off].set(mixed, mode="drop")
+
+
+def _restore_kv_paged(pool, old, pos, n_keep, table, window, page_size,
+                      n_tbl):
+    """Paged :func:`_restore_kv`: roll a windowed ring's draft-loop writes at
+    rows j >= n_keep[b] back to their saved pre-write values."""
+    G = old.shape[0]
+    pg, off, _ = _paged_pg_off(table, pos, G, window, page_size, n_tbl)
+    cur = pool[:, pg, off]
+    oldt = jnp.moveaxis(old, 0, 2)                              # (r, B, γ, ...)
+    keep = jnp.arange(G)[None, :] < n_keep[:, None]
+    mixed = jnp.where(keep[None, :, :, None, None], cur, oldt.astype(pool.dtype))
+    return pool.at[:, pg, off].set(mixed)
+
+
+def commit_cache_paged(cache, pending, pos, n_keep, table, windows,
+                       page_size, n_tbl):
+    """Paged :func:`commit_cache`: pending K/V rows from the verify pass land
+    in the slot's PAGES (accepted prefix only, windowed rings at the exact
+    accept boundary); recurrent state commits identically to the dense
+    path.  ``windows`` is :func:`repro.runtime.steps.attn_window_map` of the
+    plan the cache belongs to."""
+    out = {}
+    for stn, stc in cache.items():
+        out[stn] = {}
+        for bn, bc in stc.items():
+            pend = pending[stn][bn]
+            if "k" in bc:
+                w = windows[stn][bn]
+                out[stn][bn] = {
+                    "k": _commit_kv_paged(bc["k"], pend["k"], pos, n_keep,
+                                          table, w, page_size, n_tbl),
+                    "v": _commit_kv_paged(bc["v"], pend["v"], pos, n_keep,
+                                          table, w, page_size, n_tbl),
+                }
+            else:
+                out[stn][bn] = {
+                    "conv": _commit_state(bc["conv"], pend["conv"], n_keep),
+                    "ssm": _commit_state(bc["ssm"], pend["ssm"], n_keep),
+                }
+    return out
+
+
+def commit_draft_cache_paged(cache, undo, pos, n_keep, table, windows,
+                             page_size, n_tbl):
+    """Paged :func:`commit_draft_cache`: only windowed rings carry undo rows
+    (position-linear pooled caches never wrap within a request — stale
+    writes are masked and overwritten in order, the same argument as the
+    dense full-length fast path)."""
+    out = {}
+    for stn, stc in cache.items():
+        out[stn] = {}
+        for bn, bc in stc.items():
+            ud = undo.get(stn, {}).get(bn)
+            if "k" in bc:
+                if ud is None:
+                    out[stn][bn] = bc
+                else:
+                    w = windows[stn][bn]
+                    out[stn][bn] = {
+                        "k": _restore_kv_paged(bc["k"], ud["k"], pos, n_keep,
+                                               table, w, page_size, n_tbl),
+                        "v": _restore_kv_paged(bc["v"], ud["v"], pos, n_keep,
+                                               table, w, page_size, n_tbl),
+                    }
+            else:
+                out[stn][bn] = {
+                    "conv": _commit_state(
+                        bc["conv"], jnp.moveaxis(ud["conv"], 0, 2), n_keep),
+                    "ssm": _commit_state(
+                        bc["ssm"], jnp.moveaxis(ud["ssm"], 0, 2), n_keep),
+                }
+    return out
+
+
+# ---------------------------------------------------------------------------
 # one fused draft → verify → accept → commit round
 # ---------------------------------------------------------------------------
 
@@ -257,18 +455,31 @@ def _uniforms(seeds, gen, gamma):
 
 def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
                     draft_lora_scale: float = 2.0, full_len: int = 0,
-                    sampling: bool = True):
+                    sampling: bool = True, paged: bool = False,
+                    page_size: int = 0, n_tbl: int = 0):
     """Build the whole-round function: (params, bank, draft_params,
     draft_bank, cache, draft_cache, st) → (cache, draft_cache, st, info).
     One jit, shape-stable in every argument — compiled exactly once.
     ``full_len`` is the engine's max_seq_len; attention caches of that size
     skip rollback bookkeeping entirely (see :func:`commit_cache`).
     ``sampling=False`` is the all-greedy fast path: no draft distributions,
-    no target softmax, no PRNG work — acceptance is pure argmax matching."""
-    draft_loop = make_draft_loop(draft_plan, gamma,
-                                 lora_scale=draft_lora_scale,
-                                 full_len=full_len, sampling=sampling)
-    verify = make_verify_step(plan, lora_scale=lora_scale)
+    no target softmax, no PRNG work — acceptance is pure argmax matching.
+    ``paged=True``: both models' caches are page pools sharing ONE block
+    table / page-id space (``st["block_table"]``) — the draft's pool is
+    physically smaller because its pruned pages are narrower; accepted
+    pending K/V commits into pages, windowed rings roll back exactly."""
+    if paged:
+        draft_loop = make_paged_draft_loop(draft_plan, gamma, page_size,
+                                           n_tbl,
+                                           lora_scale=draft_lora_scale,
+                                           sampling=sampling)
+    else:
+        draft_loop = make_draft_loop(draft_plan, gamma,
+                                     lora_scale=draft_lora_scale,
+                                     full_len=full_len, sampling=sampling)
+    verify = make_verify_step(plan, lora_scale=lora_scale, paged=paged)
+    windows_t = attn_window_map(plan)
+    windows_d = attn_window_map(draft_plan)
 
     def round_fn(params, bank, dparams, dbank, cache, dcache, st):
         B = st["pos"].shape[0]
@@ -278,17 +489,27 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
         act, spec = st["active"], st["spec"]
         temp = jnp.maximum(temps, 1e-6)
 
-        dcache, drafts_t, qs_t, undo = draft_loop(
-            dparams, dbank, dcache, st["last_tok"], pos, st["adapter_ids"],
-            temps, seeds, gen)
+        if paged:
+            tbl = st["block_table"]
+            dcache, drafts_t, qs_t, undo = draft_loop(
+                dparams, dbank, dcache, st["last_tok"], pos,
+                st["adapter_ids"], temps, seeds, gen, tbl)
+        else:
+            dcache, drafts_t, qs_t, undo = draft_loop(
+                dparams, dbank, dcache, st["last_tok"], pos,
+                st["adapter_ids"], temps, seeds, gen)
         drafts = drafts_t.T                              # (B, γ): d_1..d_γ
 
         # verify block: the already-emitted last token + the first γ-1 drafts;
         # logits[:, i] is the target distribution that judges drafts[:, i]
         u_tok = jnp.concatenate(
             [st["last_tok"][:, None], drafts[:, :gamma - 1]], axis=1)
-        logits, pending = verify(params, bank, u_tok, cache, pos,
-                                 st["adapter_ids"])
+        if paged:
+            logits, pending = verify(params, bank, u_tok, cache, pos,
+                                     st["adapter_ids"], tbl)
+        else:
+            logits, pending = verify(params, bank, u_tok, cache, pos,
+                                     st["adapter_ids"])
         tgt_greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         if sampling:
@@ -323,15 +544,25 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
 
         emit = jnp.where(jnp.arange(gamma)[None, :] < n[:, None], drafts,
                          t[:, None])
-        cols = jnp.minimum(gen[:, None] + jnp.arange(gamma)[None, :],
-                           st["out_buf"].shape[1] - 1)
+        # masked rows are redirected OUT OF BOUNDS and dropped — clamping
+        # them to the last column would duplicate a kept row's index in the
+        # scatter and the winner is implementation-defined (observed: a
+        # request whose final round straddles the buffer end lost its last
+        # token to the stale clamped row).  Kept rows never clamp:
+        # gen + e_eff <= max_new <= buffer width.
+        cols = gen[:, None] + jnp.arange(gamma)[None, :]
         wmask = jnp.arange(gamma)[None, :] < e_eff[:, None]
-        cur = st["out_buf"][bidx[:, None], cols]
-        out_buf = st["out_buf"].at[bidx[:, None], cols].set(
-            jnp.where(wmask, emit, cur))
+        cols = jnp.where(wmask, cols, st["out_buf"].shape[1])
+        out_buf = st["out_buf"].at[bidx[:, None], cols].set(emit, mode="drop")
 
-        cache = commit_cache(cache, pending, pos, keep_c, full_len)
-        dcache = commit_draft_cache(dcache, undo, pos, keep_c)
+        if paged:
+            cache = commit_cache_paged(cache, pending, pos, keep_c, tbl,
+                                       windows_t, page_size, n_tbl)
+            dcache = commit_draft_cache_paged(dcache, undo, pos, keep_c, tbl,
+                                              windows_d, page_size, n_tbl)
+        else:
+            cache = commit_cache(cache, pending, pos, keep_c, full_len)
+            dcache = commit_draft_cache(dcache, undo, pos, keep_c)
 
         new_st = dict(st)
         new_st.update(
@@ -341,6 +572,11 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
             out_buf=out_buf)
         info = {
             "emitted": e_eff,
+            # position advance can exceed the emit count in a request's final
+            # round (emits are capped at the remaining budget, committed
+            # cache rows are not) — the paged engine tracks write positions
+            # host-side off this
+            "kept": keep_c,
             "accepted": jnp.where(act & spec, n, 0),
             "proposed": jnp.where(act & spec, gamma, 0),
         }
@@ -402,59 +638,125 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         # for every adapter stream); the bank and per-request trees are
         # simply never consulted
         self._draft_base_only = spec.draft_stage == "base"
+        self._draft_lora_scale = draft_lora_scale
         S = cfg.max_slots
-        self.draft_cache = init_cache(draft.plan, S, cfg.max_seq_len,
-                                      jnp.dtype(cfg.kv_cache_dtype))
+        if self.paged:
+            # the draft shares the target's block table and page-id space —
+            # one allocator decision covers both pools.  The draft's pool is
+            # physically smaller anyway: its pruned pages are narrower.
+            self.draft_cache = init_paged_cache(
+                draft.plan, S, self.pages.n_pages, self._page,
+                jnp.dtype(cfg.kv_cache_dtype))
+        else:
+            self.draft_cache = init_cache(draft.plan, S, cfg.max_seq_len,
+                                          jnp.dtype(cfg.kv_cache_dtype))
         self._st.update({
             "spec": jnp.zeros((S,), bool),
             "max_new": jnp.zeros((S,), jnp.int32),
         })
-        # all-greedy traffic skips draft distributions / softmax / PRNG work
-        # entirely — same split as the plain engine's greedy/sampled ticks
-        self._round_greedy, self._round_sample = (
-            jax.jit(make_spec_round(plan, draft.plan, spec.gamma,
-                                    lora_scale=lora_scale,
-                                    draft_lora_scale=draft_lora_scale,
-                                    full_len=cfg.max_seq_len,
-                                    sampling=sampling),
-                    donate_argnums=(4, 5, 6))
-            for sampling in (False, True))
+        # each distinct γ compiles its own round pair; the autotuner walks
+        # through a handful of values and then settles
+        self._rounds = {}
+        self._round_greedy, self._round_sample = self._get_rounds(spec.gamma)
+        self._gamma_ctl = None
+        if cfg.gamma_autotune:
+            self._gamma_ctl = GammaController(gamma_max=min(8, max(ring, 1)))
 
         # one dispatch per admission: target + draft prefill fused (a separate
         # draft prefill call would double the admission dispatch cost, which
         # dominates short-generation workloads)
-        tgt_prefill = make_prefill_into_slot(plan, lora_scale=lora_scale)
-        dft_prefill = make_prefill_into_slot(draft.plan,
-                                             lora_scale=draft_lora_scale)
+        if self.paged:
+            self._prefill_pair_steps = {}     # bucket → fused paged pair
+        else:
+            bucketed = cfg.prefill_buckets
+            tgt_prefill = make_prefill_into_slot(plan, lora_scale=lora_scale,
+                                                 bucketed=bucketed)
+            dft_prefill = make_prefill_into_slot(draft.plan,
+                                                 lora_scale=draft_lora_scale,
+                                                 bucketed=bucketed)
 
-        def prefill_both(params, tree, dparams, dtree, tokens, cache, dcache,
-                         slot):
-            logits, cache = tgt_prefill(params, tree, tokens, cache, slot)
-            _, dcache = dft_prefill(dparams, dtree, tokens, dcache, slot)
-            return logits, cache, dcache
+            if bucketed:
+                def prefill_both(params, tree, dparams, dtree, tokens, cache,
+                                 dcache, slot, valid_len):
+                    logits, cache = tgt_prefill(params, tree, tokens, cache,
+                                                slot, valid_len)
+                    _, dcache = dft_prefill(dparams, dtree, tokens, dcache,
+                                            slot, valid_len)
+                    return logits, cache, dcache
+            else:
+                def prefill_both(params, tree, dparams, dtree, tokens, cache,
+                                 dcache, slot):
+                    logits, cache = tgt_prefill(params, tree, tokens, cache,
+                                                slot)
+                    _, dcache = dft_prefill(dparams, dtree, tokens, dcache,
+                                            slot)
+                    return logits, cache, dcache
 
-        self._prefill_both = jax.jit(prefill_both, donate_argnums=(5, 6))
+            self._prefill_both = jax.jit(prefill_both, donate_argnums=(5, 6))
 
         def admit_spec(st, slot, first, pos0, aid, temp, seed, max_new,
                        use_spec):
-            return {
-                "last_tok": st["last_tok"].at[slot].set(first),
-                "pos": st["pos"].at[slot].set(pos0),
-                "active": st["active"].at[slot].set(True),
-                "adapter_ids": st["adapter_ids"].at[slot].set(aid),
-                "temps": st["temps"].at[slot].set(temp),
-                "seeds": st["seeds"].at[slot].set(seed),
-                "gen_idx": st["gen_idx"].at[slot].set(1),
-                "out_buf": st["out_buf"].at[slot, 0].set(first),
-                "spec": st["spec"].at[slot].set(use_spec),
-                "max_new": st["max_new"].at[slot].set(max_new),
-            }
+            out = dict(st)              # carries block_table when paged
+            out.update(
+                last_tok=st["last_tok"].at[slot].set(first),
+                pos=st["pos"].at[slot].set(pos0),
+                active=st["active"].at[slot].set(True),
+                adapter_ids=st["adapter_ids"].at[slot].set(aid),
+                temps=st["temps"].at[slot].set(temp),
+                seeds=st["seeds"].at[slot].set(seed),
+                gen_idx=st["gen_idx"].at[slot].set(1),
+                out_buf=st["out_buf"].at[slot, 0].set(first),
+                spec=st["spec"].at[slot].set(use_spec),
+                max_new=st["max_new"].at[slot].set(max_new),
+            )
+            return out
 
         self._admit_update_spec = jax.jit(admit_spec, donate_argnums=(0,))
         # speculation telemetry
         self.n_rounds = 0
         self.n_proposed = 0
         self.n_accepted = 0
+
+    def _get_rounds(self, gamma: int):
+        """(greedy, sampled) jitted round fns for ``gamma`` — built once per
+        distinct γ.  All-greedy traffic skips draft distributions / softmax /
+        PRNG work entirely, same split as the plain engine's ticks."""
+        pair = self._rounds.get(gamma)
+        if pair is None:
+            pair = tuple(
+                jax.jit(make_spec_round(self.plan, self.draft.plan, gamma,
+                                        lora_scale=self._lora_scale,
+                                        draft_lora_scale=self._draft_lora_scale,
+                                        full_len=self.cfg.max_seq_len,
+                                        sampling=sampling, paged=self.paged,
+                                        page_size=self._page,
+                                        n_tbl=self._n_tbl),
+                        donate_argnums=(4, 5, 6))
+                for sampling in (False, True))
+            self._rounds[gamma] = pair
+        return pair
+
+    def _prefill_pair_step(self, bucket: int):
+        step = self._prefill_pair_steps.get(bucket)
+        if step is None:
+            tgt = make_paged_prefill_into_slot(
+                self.plan, bucket, self._page, self._n_tbl,
+                lora_scale=self._lora_scale)
+            dft = make_paged_prefill_into_slot(
+                self.draft.plan, bucket, self._page, self._n_tbl,
+                lora_scale=self._draft_lora_scale)
+
+            def both(params, tree, dparams, dtree, tokens, cache, dcache,
+                     pids, slot, valid_len):
+                logits, cache = tgt(params, tree, tokens, cache, pids, slot,
+                                    valid_len)
+                _, dcache = dft(dparams, dtree, tokens, dcache, pids, slot,
+                                valid_len)
+                return logits, cache, dcache
+
+            step = jax.jit(both, donate_argnums=(5, 6))
+            self._prefill_pair_steps[bucket] = step
+        return step
 
     @property
     def acceptance_rate(self) -> float:
@@ -465,14 +767,32 @@ class SpeculativeServeEngine(ContinuousServeEngine):
     # -- internals ----------------------------------------------------------
 
     def _admit(self, slot: int, req):
-        tokens = jnp.asarray(req.prompt[None])
         tree = (None if self.registry is None
                 else self.registry.adapter_tree(req.adapter_id))
         dtree = (None if self._draft_base_only
                  else self.draft.adapter_tree(req.adapter_id))
-        logits, self.cache, self.draft_cache = self._prefill_both(
-            self.params, tree, self.draft.params, dtree, tokens, self.cache,
-            self.draft_cache, slot)
+        if self.paged:
+            tokens, valid = self._bucketed_prompt(req)
+            sb = tokens.shape[1]
+            ids = self.pages.alloc(slot, pages_for(sb, self._page))
+            self._set_table_row(slot, ids)
+            self._slot_pos[slot] = valid
+            self._admit_seq[slot] = self._next_seq()
+            step = self._prefill_pair_step(sb)
+            logits, self.cache, self.draft_cache = step(
+                self.params, tree, self.draft.params, dtree, tokens,
+                self.cache, self.draft_cache, jnp.asarray(ids, jnp.int32),
+                slot, valid)
+        elif self.cfg.prefill_buckets:
+            tokens, valid = self._bucketed_prompt(req)
+            logits, self.cache, self.draft_cache = self._prefill_both(
+                self.params, tree, self.draft.params, dtree, tokens,
+                self.cache, self.draft_cache, slot, valid)
+        else:
+            tokens = jnp.asarray(req.prompt[None])
+            logits, self.cache, self.draft_cache = self._prefill_both(
+                self.params, tree, self.draft.params, dtree, tokens,
+                self.cache, self.draft_cache, slot)
         first = self._first_token(logits[0], req)
         self._st = self._admit_update_spec(
             self._st, slot, first, len(req.prompt), req.adapter_id,
@@ -487,8 +807,14 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                else _null())
         done: List[RequestResult] = []
         with ctx:
+            if self.paged:
+                # grow existing slots one round's worth before admitting, so
+                # a fresh admission isn't the first preemption victim of its
+                # own step (wasting the fused target+draft prefill)
+                self._ensure_growth(lookahead=self.gamma)
             while True:
-                adm = self._sched.next_admission()
+                adm = self._sched.next_admission(
+                    gate=self._admission_gate if self.paged else None)
                 if adm is None:
                     break
                 self._admit(*adm)
@@ -505,6 +831,14 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 # host-side token counting.
                 min_rem = min(self._sched.slot_steps_left(s) for s in active)
                 k = max(1, -(-min_rem // self.gamma))
+                if self.paged:
+                    # every committed row of the k-round batch needs a real
+                    # page behind it BEFORE the batch runs (acceptance is
+                    # unknowable on host, so back the worst case k·γ)
+                    self._ensure_growth(lookahead=k * self.gamma)
+                    active = self._sched.active_slots()
+                if not active:
+                    return done
                 rnd = (self._round_sample if self._n_hot
                        else self._round_greedy)
                 dbank = None if self._draft_base_only else self.draft.bank
@@ -516,12 +850,24 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                     infos.append(info)
                 self._n_ticks += k
                 self.n_rounds += k
+                batch_accepted = batch_proposed = 0
                 for info in jax.device_get(infos):
-                    self.n_proposed += int(info["proposed"].sum())
-                    self.n_accepted += int(info["accepted"].sum())
+                    batch_proposed += int(info["proposed"].sum())
+                    batch_accepted += int(info["accepted"].sum())
                     for slot in active:
+                        if self.paged:
+                            self._slot_pos[slot] += int(info["kept"][slot])
                         if (self._sched.slot_request(slot) is not None
                                 and self._sched.advance(
                                     slot, int(info["emitted"][slot]))):
                             done.append(self._finalize(slot))
+                self.n_proposed += batch_proposed
+                self.n_accepted += batch_accepted
+                if self._gamma_ctl is not None:
+                    self._gamma_ctl.update(batch_accepted, batch_proposed)
+                    new_gamma = self._gamma_ctl.propose(self.gamma)
+                    if new_gamma != self.gamma:
+                        self.gamma = new_gamma
+                        self._round_greedy, self._round_sample = (
+                            self._get_rounds(new_gamma))
         return done

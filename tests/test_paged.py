@@ -1,0 +1,434 @@
+"""Paged KV cache: block-table memory management through serving.
+
+  1. page allocator — free-list discipline, trash-page reservation,
+     exhaustion, release accounting
+  2. prompt bucketing — power-of-two, page-aligned, O(log) distinct buckets
+  3. scheduler preemption — requeue at the HEAD (FCFS preserved)
+  4. token identity — the paged engine produces EXACTLY the dense
+     continuous engine's tokens, across model families, including slot
+     eviction/readmission and windowed (bounded-ring) layers
+  5. pool exhaustion → preempt newest → requeue → identical completion
+  6. speculative decoding on the paged path (pending K/V commits into
+     pages for the accepted prefix only; the draft gets its own pool)
+  7. γ auto-tuning controller math
+  8. the Pallas paged-attention kernel against its jnp oracle
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_smoke
+from repro.core import loram, recovery
+from repro.core.pruning import zero_prunable_tail
+from repro.models import init_params, make_plan
+from repro.models.model import init_lora
+from repro.serving import (AdapterRegistry, ContinuousServeEngine,
+                           GammaController, PageAllocator, PoolExhausted,
+                           Request, Scheduler, SpeculativeServeEngine,
+                           bucket_len, draft_from_setup, pages_for)
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# allocator / bucketing / scheduler (pure host-side)
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_basics():
+    a = PageAllocator(n_pages=6, page_size=4, max_pages_per_slot=5,
+                      max_slots=2)
+    assert a.free_pages == 5                  # page 0 is the trash page
+    ids = a.alloc(0, 3)
+    assert len(ids) == 3 and 0 not in ids     # trash page never handed out
+    assert a.pages_in_use == 3 and a.peak_in_use == 3
+    more = a.alloc(1, 2)
+    assert not (set(ids) & set(more))         # no double allocation
+    with pytest.raises(PoolExhausted):
+        a.alloc(0, 1)
+    assert a.pages_in_use == 5                # failed alloc changed nothing
+    assert a.release(1) == 2
+    assert a.free_pages == 2
+    assert a.ensure(0, 2) == []               # already covered
+    grown = a.ensure(0, 5)
+    assert len(grown) == 2 and a.n_slot_pages(0) == 5
+    assert a.peak_in_use == 5
+
+
+def test_bucket_len_properties():
+    for page in (1, 8, 16):
+        seen = set()
+        for n in range(1, 129):
+            b = bucket_len(n, page, 128)
+            assert b >= n and b % page == 0 and b <= 128
+            seen.add(b)
+        # O(log): at most log2(128)+1 distinct buckets
+        assert len(seen) <= 8, (page, sorted(seen))
+    assert bucket_len(5, 16, 128) == 16
+    assert bucket_len(17, 16, 128) == 32
+    assert pages_for(17, 16) == 2
+
+
+def test_scheduler_preempt_requeues_head():
+    s = Scheduler(max_slots=2)
+    reqs = [Request(uid=s.new_uid(), prompt=np.ones(4, np.int32),
+                    max_new_tokens=4) for _ in range(3)]
+    for r in reqs:
+        s.submit(r)
+    slot0, _ = s.next_admission()
+    slot1, _ = s.next_admission()
+    got = s.preempt(slot1)
+    assert got.uid == reqs[1].uid
+    # preempted request is FIRST in line again — ahead of the later submit
+    slot, nxt = s.next_admission()
+    assert slot == slot1 and nxt.uid == reqs[1].uid
+    # admission gate: a vetoed head blocks everything behind it (FCFS)
+    s.evict(slot0)
+    assert s.next_admission(gate=lambda r: False) is None
+    assert s.queued == 1
+
+
+# ---------------------------------------------------------------------------
+# paged == dense, token for token
+# ---------------------------------------------------------------------------
+
+LORA_CFG = LoRAConfig(rank=4)
+
+
+def _mixed_run(plan, params, vocab, *, registry=None, adapters=(),
+               lora_scale=2.0, seqlen=64, slots=3, max_new=16,
+               lens=(8, 12, 5, 11, 7, 13), news=(6, 4, 6, 3, 6, 5),
+               **paged_kw):
+    """Submit the same mixed workload through a dense and a paged engine;
+    returns (dense results, paged engine, paged results)."""
+    base = dict(max_seq_len=seqlen, max_slots=slots, max_new_tokens=max_new,
+                kv_cache_dtype="float32", max_adapters=4)
+
+    def build(**kw):
+        reg = None
+        if registry is not None:
+            reg = AdapterRegistry(registry, max_adapters=4)
+            for name, tree in adapters:
+                reg.add(name, tree)
+        return ContinuousServeEngine(plan, params, ServeConfig(**base, **kw),
+                                     reg, lora_scale=lora_scale)
+
+    dense = build()
+    paged = build(kv_paging=True, **paged_kw)
+    rs = np.random.default_rng(0)
+    prompts = [rs.integers(2, vocab, (n,)).astype(np.int32) for n in lens]
+    names = [a for a, _ in adapters] or [None]
+    for eng in (dense, paged):
+        for i, (p, m) in enumerate(zip(prompts, news)):
+            eng.submit(p, max_new_tokens=m, adapter=names[i % len(names)])
+    return dense.run(), paged, paged.run()
+
+
+def _assert_identical(r1, r2):
+    assert sorted(r1) == sorted(r2)
+    for u in r1:
+        np.testing.assert_array_equal(r1[u].tokens, r2[u].tokens,
+                                      err_msg=f"uid {u}")
+
+
+def test_paged_matches_dense_with_eviction_and_adapters():
+    """Dense-family identity with 6 requests through 3 slots (every slot is
+    evicted and re-admitted) and per-slot adapter routing."""
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+
+    def mk(seed):
+        lora = init_lora(plan, LORA_CFG, jax.random.PRNGKey(seed))
+        return jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), lora)
+
+    adapters = [("math", mk(11)), ("code", mk(22))]
+    r1, paged, r2 = _mixed_run(plan, params, cfg.vocab_size,
+                               registry=adapters[0][1], adapters=adapters,
+                               lora_scale=LORA_CFG.scale, kv_page_size=8)
+    _assert_identical(r1, r2)
+    assert paged.pages.pages_in_use == 0      # everything released
+    assert paged.pages.peak_in_use > 0
+
+
+def test_paged_matches_dense_sliding_window():
+    """gemma3 (window=8): windowed layers map their ring onto a bounded page
+    set — page 4 → 2-page rings that wrap many times over 12 new tokens."""
+    cfg = get_smoke("gemma3-12b")
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    r1, _, r2 = _mixed_run(plan, params, cfg.vocab_size, kv_page_size=4,
+                           news=(12, 10, 12, 8, 12, 10))
+    _assert_identical(r1, r2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["deepseek-moe-16b", "zamba2-2.7b"])
+def test_paged_matches_dense_families(arch):
+    """MoE (lossless capacity under paging) and hybrid (dense SSM state
+    beside pooled attention in one cache tree)."""
+    cfg = get_smoke(arch)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    r1, _, r2 = _mixed_run(plan, params, cfg.vocab_size, kv_page_size=8)
+    _assert_identical(r1, r2)
+
+
+def test_pool_exhaustion_preempts_and_completes():
+    """A pool too small for the traffic: the engine must preempt the newest
+    slot, requeue it, and still produce exactly the dense engine's tokens."""
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    # 8 usable pages of 8 tokens vs 6 requests that each grow to ~6 pages
+    r1, paged, r2 = _mixed_run(plan, params, cfg.vocab_size, max_new=48,
+                               news=(40, 40, 40, 40, 40, 40),
+                               kv_page_size=8, kv_pages=9)
+    _assert_identical(r1, r2)
+    assert paged.n_preemptions > 0, "tiny pool must have preempted"
+    assert paged.pages.pages_in_use == 0
+
+
+def test_paged_pool_too_small_rejected():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    with pytest.raises(ValueError):
+        ContinuousServeEngine(
+            plan, params,
+            ServeConfig(max_seq_len=64, max_slots=2, kv_paging=True,
+                        kv_page_size=8, kv_pages=8))   # needs 8 + trash
+
+
+def test_paged_prefill_compiles_per_bucket_not_per_length():
+    """9 distinct prompt lengths land in <= 3 buckets → <= 3 compiled
+    prefill steps (the whole point of bucketing)."""
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=64, max_slots=2, max_new_tokens=4,
+                    kv_cache_dtype="float32", kv_paging=True, kv_page_size=8))
+    rs = np.random.default_rng(0)
+    for n in (3, 5, 7, 8, 9, 12, 15, 17, 25):
+        eng.submit(rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run()
+    assert set(eng._prefill_steps) <= {8, 16, 32}
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding on the paged path
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_setup():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    params = zero_prunable_tail(params, plan, 0.5)
+    setup = loram.setup(plan, params,
+                        LoRAMConfig(method="stru", ratio=0.5,
+                                    keep_first=0, keep_last=0),
+                        LORA_CFG, jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup, max_adapters=4)
+    small = jax.tree.map(
+        lambda x: x + 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3), x.shape, x.dtype),
+        init_lora(setup.small_plan, LORA_CFG, jax.random.PRNGKey(2)))
+    full = recovery.recover_lora(small, setup.spec, plan, setup.small_plan)
+    draft.add("t", small)
+    return cfg, plan, params, draft, full
+
+
+def test_paged_speculative_greedy_identity(spec_setup):
+    """Greedy speculative decoding through the paged engine (pending K/V
+    committed into pages for the accepted prefix only, draft pool shared
+    with the target's block table) is token-identical to the plain DENSE
+    continuous engine — including eviction/readmission (4 requests, 2
+    slots)."""
+    cfg, plan, params, draft, full = spec_setup
+    base = dict(max_seq_len=64, max_slots=2, max_adapters=4,
+                max_new_tokens=16, kv_cache_dtype="float32")
+
+    reg1 = AdapterRegistry(full, max_adapters=4)
+    reg1.add("t", full)
+    plain = ContinuousServeEngine(plan, params, ServeConfig(**base), reg1,
+                                  lora_scale=LORA_CFG.scale)
+    reg2 = AdapterRegistry(full, max_adapters=4)
+    reg2.add("t", full)
+    spec = SpeculativeServeEngine(
+        plan, params,
+        ServeConfig(**base, draft_gamma=3, kv_paging=True, kv_page_size=8),
+        reg2, draft, lora_scale=LORA_CFG.scale)
+
+    rs = np.random.default_rng(0)
+    jobs = [(9, "t", 8), (6, None, 12), (13, "t", 5), (5, "t", 10)]
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n, _, _ in jobs]
+    for eng in (plain, spec):
+        for p, (_, a, m) in zip(prompts, jobs):
+            eng.submit(p, max_new_tokens=m, adapter=a)
+    r1, r2 = plain.run(), spec.run()
+    _assert_identical(r1, r2)
+    assert spec.acceptance_rate > 0.9         # lossless-prune draft
+    assert spec.pages.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_paged_speculative_windowed_rollback():
+    """gemma3 windowed rings under paged speculation: rejected draft writes
+    roll back from saved pre-write rows inside 2-page rings that wrap."""
+    cfg = get_smoke("gemma3-12b")
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    setup = loram.setup(plan, params,
+                        LoRAMConfig(method="stru", ratio=0.5,
+                                    keep_first=0, keep_last=0),
+                        LORA_CFG, jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup, max_adapters=0)
+    base = dict(max_seq_len=64, max_slots=2, max_new_tokens=16,
+                kv_cache_dtype="float32")
+    plain = ContinuousServeEngine(plan, params, ServeConfig(**base))
+    spec = SpeculativeServeEngine(
+        plan, params,
+        ServeConfig(**base, draft_gamma=4, kv_paging=True, kv_page_size=4),
+        None, draft)
+    rs = np.random.default_rng(0)
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (9, 6, 13, 5)]
+    for eng in (plain, spec):
+        for p in prompts:
+            eng.submit(p, max_new_tokens=12)
+    _assert_identical(plain.run(), spec.run())
+
+
+@pytest.mark.parametrize("paging", [False, True],
+                         ids=["dense-spec", "paged-spec"])
+def test_speculative_round_straddles_buffer_end(spec_setup, paging):
+    """Requests that fill cache AND output buffer to the brim: the final
+    speculative round's writes straddle max_seq_len / max_new_tokens, and
+    every straddling scatter row must be DROPPED, never clamped — a clamped
+    index duplicates a kept row's index in the same scatter and the winner
+    is implementation-defined (observed: the request's last token lost to
+    the stale clamped row, on the dense engine too).  Identity with the
+    plain engine over full-to-capacity sequences proves the drop paths."""
+    cfg, plan, params, draft, full = spec_setup
+    base = dict(max_seq_len=32, max_slots=2, max_adapters=4,
+                max_new_tokens=24, kv_cache_dtype="float32")
+    reg1 = AdapterRegistry(full, max_adapters=4)
+    reg1.add("t", full)
+    plain = ContinuousServeEngine(plan, params, ServeConfig(**base), reg1,
+                                  lora_scale=LORA_CFG.scale)
+    reg2 = AdapterRegistry(full, max_adapters=4)
+    reg2.add("t", full)
+    paged_kw = dict(kv_paging=True, kv_page_size=8) if paging else {}
+    spec = SpeculativeServeEngine(
+        plan, params,
+        ServeConfig(**base, draft_gamma=4, **paged_kw),
+        reg2, draft, lora_scale=LORA_CFG.scale)
+    rs = np.random.default_rng(2)
+    # prompt + max_new == max_seq_len exactly, max_new == buffer width
+    jobs = [(9, 23), (10, 22), (8, 24)]
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n, _ in jobs]
+    for eng in (plain, spec):
+        for p, (_, m) in zip(prompts, jobs):
+            eng.submit(p, max_new_tokens=m, adapter="t")
+    _assert_identical(plain.run(), spec.run())
+
+
+# ---------------------------------------------------------------------------
+# γ auto-tuning controller
+# ---------------------------------------------------------------------------
+
+def test_gamma_controller_math():
+    ctl = GammaController(gamma_max=8, c_draft=0.3, c_verify=1.75)
+    # closed form matches brute force at every alpha
+    for alpha in (0.0, 0.3, 0.6, 0.9, 1.0):
+        for g in range(1, 9):
+            brute = sum(alpha ** i for i in range(g))
+            assert ctl.expected_tokens(g, alpha) == pytest.approx(brute)
+        best = max(range(1, 9), key=lambda g: ctl.throughput(g, alpha))
+        assert ctl.best_gamma(alpha) == best
+    # alpha=0: every round emits exactly 1 token → shortest draft wins
+    assert ctl.best_gamma(0.0) == 1
+    # near-perfect drafts want the longest allowed draft
+    assert ctl.best_gamma(1.0) == 8
+
+
+def test_gamma_controller_adapts_and_hysteresis():
+    ctl = GammaController(gamma_max=8, min_samples=16)
+    # warm-up: no switching before the estimate has seen enough proposals
+    assert ctl.propose(4) == 4
+    for _ in range(16):
+        ctl.update(accepted=0, proposed=8)    # terrible draft
+    assert ctl.acceptance < 0.1
+    assert ctl.propose(6) == 1                # collapse to gamma=1
+    for _ in range(40):
+        ctl.update(accepted=8, proposed=8)    # perfect draft
+    assert ctl.propose(1) == 8                # stretch back out
+    # hysteresis: tiny predicted gains do not move gamma
+    g = ctl.best_gamma()
+    assert ctl.propose(g) == g
+
+
+def test_gamma_autotune_in_engine(spec_setup):
+    """End-to-end: with gamma_autotune on and a lossless draft (acceptance
+    ~1), the engine should grow gamma from 1 — and stay token-identical."""
+    cfg, plan, params, draft, full = spec_setup
+    base = dict(max_seq_len=64, max_slots=2, max_adapters=4,
+                max_new_tokens=32, kv_cache_dtype="float32")
+    reg1 = AdapterRegistry(full, max_adapters=4)
+    reg1.add("t", full)
+    plain = ContinuousServeEngine(plan, params, ServeConfig(**base), reg1,
+                                  lora_scale=LORA_CFG.scale)
+    reg2 = AdapterRegistry(full, max_adapters=4)
+    reg2.add("t", full)
+    spec = SpeculativeServeEngine(
+        plan, params,
+        ServeConfig(**base, draft_gamma=1, gamma_autotune=True), reg2, draft,
+        lora_scale=LORA_CFG.scale)
+    rs = np.random.default_rng(1)
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (9, 6, 13, 5, 8, 7)]
+    for eng in (plain, spec):
+        for p in prompts:
+            eng.submit(p, max_new_tokens=30, adapter="t")
+    r1, r2 = plain.run(), spec.run()
+    _assert_identical(r1, r2)
+    assert spec.gamma > 1, "acceptance ~1 should have grown gamma"
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    # (B, H, K, D, page, R, window)
+    (4, 8, 4, 32, 16, 4, 0),       # full attention, GQA 2:1
+    (3, 4, 2, 16, 8, 2, 12),       # bounded ring, window inside 2 pages
+    (2, 4, 4, 32, 8, 3, 20),       # MHA, ring > window
+])
+def test_paged_decode_kernel_matches_ref(shape):
+    from repro.kernels import ops
+    from repro.kernels.ref import paged_decode_attention_ref
+    B, H, K, D, page, R, window = shape
+    rng = np.random.default_rng(0)
+    n_pages = B * R + 1
+    q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+    pk = jnp.asarray(rng.normal(size=(n_pages, page, K, D)).astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=(n_pages, page, K, D)).astype(np.float32))
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages))[:B * R]
+        .reshape(B, R).astype(np.int32))
+    pos = jnp.asarray(rng.integers(0, R * page, size=(B,)).astype(np.int32))
+    ref = paged_decode_attention_ref(q, pk, pv, table, pos, window=window)
+    pal = ops.paged_decode_attention(q, pk, pv, table, pos, window=window,
+                                     force="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5)
