@@ -23,10 +23,20 @@ requests only ever back the tokens they actually hold, so the pool covers
 the same concurrency with less HBM.  The bench reports both engines'
 reserved KV bytes and the paged allocator's true high-water page count.
 
+Two tail-latency sections ride along: a LONG-PROMPT MIXED workload measured
+per request (submit → first token → eviction, one device sync per step)
+with ``prefill_chunk`` off vs on — the monolithic engine stalls every
+in-flight decode for a long prefill, the chunked engine interleaves, and
+p99 TTFT shows it — and a SHARED-PREFIX workload (K adapter-routed requests
+over one system prompt) reporting prefill tokens and KV pages saved by
+copy-on-write prefix sharing, with token identity asserted against the
+unshared run.
+
 Results are printed AND written to ``BENCH_serving.json`` (see ``--json``)
 so the serving-perf trajectory is tracked across PRs.  ``--smoke`` is the
-CI guard: a seconds-scale run of the dense + paged engines that
-schema-checks the emitted JSON.
+CI guard: a seconds-scale run of the dense + paged engines (plus the
+latency and prefix workloads) that schema-checks the emitted JSON — incl.
+the per-request TTFT fields, so a future PR can't silently drop them.
 
   PYTHONPATH=src python benchmarks/serve_bench.py [--requests 24] [--slots 8]
   PYTHONPATH=src python benchmarks/serve_bench.py --speculative [--gamma 6]
@@ -51,7 +61,7 @@ from repro.models import init_params, make_plan
 from repro.models.model import init_lora
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
                            ServeEngine, SpeculativeServeEngine,
-                           draft_from_setup, pages_for)
+                           auto_pool_pages, draft_from_setup)
 
 PROMPT_LENS = (8, 16, 24)
 NEW_TOKENS = (24, 40, 56)   # decode-bound, like real serving
@@ -113,10 +123,31 @@ def _time_passes(one_pass, n_timed=3):
 
 
 def _submit_and_drain(eng, work):
+    """Submit + drain; returns (token count, {uid: RequestResult})."""
     for prompt, adapter, n_new in work:
         eng.submit(prompt, max_new_tokens=n_new, adapter=adapter)
     done = eng.run()
-    return sum(r.n_generated for r in done.values())
+    return sum(r.n_generated for r in done.values()), done
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _tail_ms(ttfts, e2es, suffix=""):
+    """{ttft,e2e}_{p50,p99}[suffix]_ms over per-request seconds."""
+    return {
+        f"ttft_p50{suffix}_ms": round(_pct(ttfts, 50) * 1e3, 3),
+        f"ttft_p99{suffix}_ms": round(_pct(ttfts, 99) * 1e3, 3),
+        f"e2e_p50{suffix}_ms": round(_pct(e2es, 50) * 1e3, 3),
+        f"e2e_p99{suffix}_ms": round(_pct(e2es, 99) * 1e3, 3),
+    }
+
+
+def latency_stats(results):
+    """p50/p99 TTFT and end-to-end latency (ms) over a results dict."""
+    return _tail_ms([r.ttft_s for r in results.values()],
+                    [r.latency_s for r in results.values()])
 
 
 def run_continuous(plan, params, registry, work, slots, lora_scale,
@@ -130,22 +161,41 @@ def run_continuous(plan, params, registry, work, slots, lora_scale,
                     max_adapters=registry.max_adapters, max_new_tokens=64,
                     kv_cache_dtype="float32", **cfg_kw),
         registry, lora_scale=lora_scale)
-    tok, s = _time_passes(lambda: _submit_and_drain(eng, work), n_timed)
-    return tok, s, eng
+    last = {}
+
+    def one_pass():
+        # keep only the final pass's per-request latencies — the warm-up
+        # pass carries JIT-compile stalls that would swamp the percentiles
+        tok, res = _submit_and_drain(eng, work)
+        last.clear()
+        last.update(res)
+        return tok
+
+    tok, s = _time_passes(one_pass, n_timed)
+    return tok, s, eng, last
 
 
-REQUIRED_ENGINE_KEYS = {"tokens", "seconds", "tok_s"}
+REQUIRED_ENGINE_KEYS = {"tokens", "seconds", "tok_s", "ttft_p50_ms",
+                        "ttft_p99_ms", "e2e_p50_ms", "e2e_p99_ms"}
+REQUIRED_LATENCY_KEYS = {"ttft_p50_ms", "ttft_p99_ms", "e2e_p50_ms",
+                         "e2e_p99_ms"}
 
 
 def validate_results(results):
     """Schema guard for BENCH_serving.json — CI runs ``--smoke`` and fails
-    the build if the trajectory file's shape silently drifts."""
+    the build if the trajectory file's shape silently drifts (e.g. a future
+    PR dropping the per-request TTFT fields)."""
     assert results.get("bench") == "serving", results.get("bench")
     assert isinstance(results.get("config"), dict)
     engines = results.get("engines")
     assert isinstance(engines, dict) and engines, "no engines recorded"
     for name, stats in engines.items():
-        missing = REQUIRED_ENGINE_KEYS - set(stats)
+        required = set(REQUIRED_ENGINE_KEYS)
+        if name == "synchronous":
+            # the lock-step batch engine has no per-request admission —
+            # only aggregate throughput is meaningful there
+            required -= REQUIRED_LATENCY_KEYS
+        missing = required - set(stats)
         assert not missing, f"engine {name} missing {sorted(missing)}"
     if "paged" in engines:
         mem = results.get("memory")
@@ -161,7 +211,159 @@ def validate_results(results):
             assert mem["reduction"] >= 2.0, (
                 f"paged KV reservation must be >= 2x smaller than dense "
                 f"(got {mem['reduction']:.2f}x)")
+    # chunked-prefill tail-latency comparison (long-prompt mixed traffic)
+    lat = results.get("latency")
+    assert isinstance(lat, dict), "latency section missing"
+    for mode in ("monolithic", "chunked"):
+        assert mode in lat, f"latency missing {mode}"
+        missing = (REQUIRED_LATENCY_KEYS
+                   | {"ttft_p50_short_ms", "ttft_p99_short_ms"}) - set(
+                       lat[mode])
+        assert not missing, f"latency[{mode}] missing {sorted(missing)}"
+    for key in ("prefill_chunks", "ticks_during_prefill"):
+        assert key in lat["chunked"], f"latency.chunked missing {key}"
+    assert "ttft_p99_ratio" in lat
+    # prefix-sharing savings (>= 2 requests per shared prefix)
+    pfx = results.get("prefix")
+    assert isinstance(pfx, dict), "prefix section missing"
+    for mode in ("unshared", "shared"):
+        assert mode in pfx, f"prefix missing {mode}"
+        for key in ("prefill_tokens", "peak_pages"):
+            assert key in pfx[mode], f"prefix[{mode}] missing {key}"
+    for key in ("prefix_hits", "prefill_tokens_saved", "pages_shared"):
+        assert key in pfx["shared"], f"prefix.shared missing {key}"
     assert isinstance(results.get("speedups"), dict)
+
+
+# ---------------------------------------------------------------------------
+# tail-latency workload: long prompts mixed into short decode traffic
+# ---------------------------------------------------------------------------
+
+# full-bench latency workload: genuinely long-context jobs, where the
+# monolithic prefill's quadratic attention makes the stall measurable; the
+# smoke run shrinks everything (schema guard only — CPU dispatch overhead
+# drowns the effect at toy scale)
+LAT_FULL = dict(max_seq_len=1024, long_prompt=768, short_prompt=8, chunk=64)
+LAT_SMOKE = dict(max_seq_len=256, long_prompt=160, short_prompt=8, chunk=32)
+LAT_BURST = 6               # 1 long-context job + 5 interactive shorts
+
+
+def make_latency_workload(n_requests, vocab, lat, seed=7):
+    """Bursts of one LONG-context job followed by interactive shorts — the
+    canonical chunked-prefill scenario: the shorts arrive together with the
+    long job, and under the monolithic engine their first tokens wait
+    behind its entire prefill dispatch; the chunked engine bounds every
+    step, so the shorts admit and decode between the long job's chunks."""
+    rs = np.random.default_rng(seed)
+    work = []
+    for i in range(n_requests):
+        n_prompt = (lat["long_prompt"] if i % LAT_BURST == 0
+                    else lat["short_prompt"])
+        work.append((rs.integers(2, vocab, (n_prompt,)).astype(np.int32),
+                     str(rs.choice(["math", "code"])), 12))
+    return work
+
+
+def run_latency(plan, params, registry, work, slots, lora_scale, lat,
+                chunk, interval=None):
+    """Open-loop tail-latency harness: requests ARRIVE on a wall-clock
+    schedule (one every ``interval`` seconds — calibrated to the engine's
+    full-throughput service rate, same schedule for both modes) while the
+    engine is mid-flight, and every step ends in a device sync so TTFT is
+    measured at honest step granularity.  This is the scenario chunked
+    prefill exists for: a short interactive request that arrives while a
+    long prompt is prefilling waits, under the monolithic engine, for the
+    WHOLE prefill dispatch before the engine reaches its admission — the
+    chunked engine bounds every step.  Returns
+    (ttft_by_uid, is_long_by_uid, e2e_by_uid, engine, interval)."""
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=lat["max_seq_len"], max_slots=slots,
+                    max_adapters=registry.max_adapters, max_new_tokens=64,
+                    kv_cache_dtype="float32", kv_paging=True,
+                    kv_page_size=16, prefill_chunk=chunk),
+        registry, lora_scale=lora_scale)
+    # warm-up: compiles every prefill/chunk/tick variant AND calibrates the
+    # arrival rate to ~the closed-loop per-request service time
+    t0 = time.perf_counter()
+    _submit_and_drain(eng, work)
+    if interval is None:
+        interval = (time.perf_counter() - t0) / len(work)
+    # the warm-up drained the whole workload once — zero the telemetry so
+    # the reported counters describe the measured open-loop run only
+    eng.n_prefill_chunks = 0
+    eng.n_ticks_during_prefill = 0
+    eng.n_prefill_tokens = 0
+
+    # burst arrivals: each long job and the shorts behind it arrive
+    # together; bursts are spaced so the previous one has mostly drained
+    arrivals = [(i // LAT_BURST) * LAT_BURST * interval
+                for i in range(len(work))]
+    submit_t, first_t, end_t, is_long = {}, {}, {}, {}
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(work) or eng.pending:
+        now = time.perf_counter() - t0
+        while i < len(work) and arrivals[i] <= now:
+            prompt, adapter, n_new = work[i]
+            uid = eng.submit(prompt, max_new_tokens=n_new, adapter=adapter)
+            submit_t[uid] = arrivals[i]
+            is_long[uid] = len(prompt) >= lat["long_prompt"]
+            i += 1
+        if not eng.pending:
+            time.sleep(max(arrivals[i] - now, 0.0))
+            continue
+        done = eng.step()
+        jax.block_until_ready(eng._st["out_buf"])
+        now = time.perf_counter() - t0
+        # stamp at the barrier: a first token "exists" for the user only
+        # once the step's device work finished
+        for uid in eng._t_first:
+            if uid in submit_t and uid not in first_t:
+                first_t[uid] = now
+        for r in done:
+            end_t[r.uid] = now
+            first_t.setdefault(r.uid, now)
+    ttft = {u: first_t[u] - submit_t[u] for u in submit_t}
+    e2e = {u: end_t[u] - submit_t[u] for u in submit_t}
+    return ttft, is_long, e2e, eng, interval
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix workload: K adapter-routed requests over one system prompt
+# ---------------------------------------------------------------------------
+
+PREFIX_LEN = 40
+
+
+def make_prefix_workload(n_requests, vocab, seed=11):
+    rs = np.random.default_rng(seed)
+    prefix = rs.integers(2, vocab, (PREFIX_LEN,)).astype(np.int32)
+    work = []
+    for _ in range(n_requests):
+        suffix = rs.integers(2, vocab, (int(rs.integers(4, 12)),)).astype(
+            np.int32)
+        work.append((np.concatenate([prefix, suffix]),
+                     str(rs.choice(["math", "code"])), 16))
+    return work
+
+
+def run_prefix(plan, params, registry, work, slots, lora_scale, shared):
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=MAX_SEQ_LEN, max_slots=slots,
+                    max_adapters=registry.max_adapters, max_new_tokens=64,
+                    kv_cache_dtype="float32", kv_paging=True,
+                    kv_page_size=16, prefix_sharing=shared),
+        registry, lora_scale=lora_scale)
+    results = {}
+    for prompt, adapter, n_new in work:
+        kw = (dict(prefix_id="system", prefix_len=PREFIX_LEN) if shared
+              else {})
+        eng.submit(prompt, max_new_tokens=n_new, adapter=adapter, **kw)
+    for r in eng.stream():
+        results[r.uid] = r
+    return results, eng
 
 
 def run_speculative(plan, params, registry, draft, work, slots, gamma,
@@ -172,8 +374,16 @@ def run_speculative(plan, params, registry, draft, work, slots, gamma,
                     max_adapters=registry.max_adapters, max_new_tokens=64,
                     kv_cache_dtype="float32", draft_gamma=gamma),
         registry, draft, lora_scale=lora_scale)
-    tok, s = _time_passes(lambda: _submit_and_drain(eng, work))
-    return tok, s, eng
+    last = {}
+
+    def one_pass():
+        tok, res = _submit_and_drain(eng, work)
+        last.clear()
+        last.update(res)
+        return tok
+
+    tok, s = _time_passes(one_pass)
+    return tok, s, eng, last
 
 
 def main():
@@ -259,19 +469,17 @@ def main():
           f"{sorted({n for _, _, n in work})}, 2 adapters")
 
     n_timed = 1 if args.smoke else 3
-    cont_tok, cont_s, cont_eng = run_continuous(
+    cont_tok, cont_s, cont_eng, cont_res = run_continuous(
         plan, params, registry, work, args.slots, lora_cfg.scale, n_timed)
     cont_tps = cont_tok / cont_s
 
-    # paged pool auto-sizing: n_tbl pages back one max-length sequence; aim
-    # ~2.2x below the dense max_slots × max_seq_len reservation — above the
-    # workload's mean concurrent footprint (preemptions stay rare) but well
-    # under worst-case (floor: one max-length request + trash, or the engine
-    # refuses the pool)
-    n_tbl = pages_for(MAX_SEQ_LEN, args.page_size)
-    kv_pages = args.kv_pages or max(n_tbl + 1,
-                                    int(args.slots * n_tbl / 2.2) + 1)
-    paged_tok, paged_s, paged_eng = run_continuous(
+    # paged pool auto-sizing (pages.auto_pool_pages): aim ~2.2x below the
+    # dense max_slots × max_seq_len reservation — above the workload's mean
+    # concurrent footprint (preemptions stay rare) but well under worst-case
+    # (floor: one max-length request + trash, or the engine refuses the pool)
+    kv_pages = args.kv_pages or auto_pool_pages(args.slots, MAX_SEQ_LEN,
+                                                args.page_size)
+    paged_tok, paged_s, paged_eng, paged_res = run_continuous(
         plan, params, registry, work, args.slots, lora_cfg.scale, n_timed,
         kv_paging=True, kv_page_size=args.page_size, kv_pages=kv_pages)
     paged_tps = paged_tok / paged_s
@@ -289,6 +497,63 @@ def main():
           f"({dense_kv / paged_kv:.2f}x smaller; peak "
           f"{paged_eng.pages.peak_in_use}/{kv_pages - 1} pages used)")
 
+    # ---- chunked-prefill tail latency (long-prompt mixed traffic) ----
+    # open-loop arrivals: the tail that matters is the SHORT interactive
+    # requests arriving while a long prompt prefills — under the monolithic
+    # engine they wait for the whole prefill dispatch, under the chunked
+    # engine every step is bounded.  (The long requests' own TTFT rises
+    # with chunking by design — their prefill yields to decode — so the
+    # headline ratio is the short-request p99.)
+    lat = LAT_SMOKE if args.smoke else LAT_FULL
+    lat_work = make_latency_workload(
+        max(args.requests, 24) if not args.smoke else 18, cfg.vocab_size,
+        lat)
+    mono_ttft, mono_long, mono_e2e, _, interval = run_latency(
+        plan, params, registry, lat_work, args.slots, lora_cfg.scale, lat,
+        chunk=0)
+    chk_ttft, chk_long, chk_e2e, chunk_eng, _ = run_latency(
+        plan, params, registry, lat_work, args.slots, lora_cfg.scale, lat,
+        chunk=lat["chunk"], interval=interval)
+
+    def tail(ttft, e2e, is_long):
+        short = [u for u in ttft if not is_long[u]]
+        stats = _tail_ms([ttft[u] for u in ttft], [e2e[u] for u in e2e])
+        short_stats = _tail_ms([ttft[u] for u in short],
+                               [e2e[u] for u in short], suffix="_short")
+        return {**stats,
+                "ttft_p50_short_ms": short_stats["ttft_p50_short_ms"],
+                "ttft_p99_short_ms": short_stats["ttft_p99_short_ms"]}
+
+    mono_lat = tail(mono_ttft, mono_e2e, mono_long)
+    chunk_lat = tail(chk_ttft, chk_e2e, chk_long)
+    ratio = (chunk_lat["ttft_p99_short_ms"]
+             / max(mono_lat["ttft_p99_short_ms"], 1e-9))
+    print(f"[serve_bench] TTFT p99, short requests (long-prompt mix, "
+          f"open-loop arrivals every {interval * 1e3:.0f} ms): monolithic "
+          f"{mono_lat['ttft_p99_short_ms']:.1f} ms → chunked "
+          f"{chunk_lat['ttft_p99_short_ms']:.1f} ms "
+          f"({1 / max(ratio, 1e-9):.2f}x better; "
+          f"{chunk_eng.n_prefill_chunks} chunks, "
+          f"{chunk_eng.n_ticks_during_prefill} decode ticks ran during "
+          f"prefill)")
+
+    # ---- shared-prefix savings (>= 2 requests per shared prefix) ----
+    pfx_work = make_prefix_workload(
+        max(args.requests // 2, 8) if not args.smoke else 8, cfg.vocab_size)
+    base_res, base_eng = run_prefix(plan, params, registry, pfx_work,
+                                    args.slots, lora_cfg.scale, shared=False)
+    shr_res, shr_eng = run_prefix(plan, params, registry, pfx_work,
+                                  args.slots, lora_cfg.scale, shared=True)
+    assert sorted(base_res) == sorted(shr_res) and all(
+        np.array_equal(base_res[u].tokens, shr_res[u].tokens)
+        for u in base_res), "shared-prefix output diverged from unshared"
+    print(f"[serve_bench] shared prefix ({len(pfx_work)} req × "
+          f"{PREFIX_LEN}-token system prompt): prefill tokens "
+          f"{base_eng.n_prefill_tokens} → {shr_eng.n_prefill_tokens} "
+          f"({shr_eng.n_prefix_tokens_saved} saved, "
+          f"{shr_eng.n_prefix_hits} hits); peak pages "
+          f"{base_eng.pages.peak_in_use} → {shr_eng.pages.peak_in_use}")
+
     results = {
         "bench": "serving",
         "config": {
@@ -302,10 +567,12 @@ def main():
         },
         "engines": {
             "continuous": {"tokens": cont_tok, "seconds": round(cont_s, 4),
-                           "tok_s": round(cont_tps, 1)},
+                           "tok_s": round(cont_tps, 1),
+                           **latency_stats(cont_res)},
             "paged": {"tokens": paged_tok, "seconds": round(paged_s, 4),
                       "tok_s": round(paged_tps, 1),
-                      "preemptions": paged_eng.n_preemptions},
+                      "preemptions": paged_eng.n_preemptions,
+                      **latency_stats(paged_res)},
         },
         "memory": {
             "dense_kv_bytes": dense_kv,
@@ -313,6 +580,30 @@ def main():
             "reduction": round(dense_kv / paged_kv, 3),
             "peak_pages_used": paged_eng.pages.peak_in_use,
             "pool_pages": kv_pages,
+        },
+        "latency": {
+            "workload": {"requests": len(lat_work), **lat,
+                         "burst": LAT_BURST, "open_loop": True},
+            "monolithic": mono_lat,
+            "chunked": {**chunk_lat,
+                        "prefill_chunks": chunk_eng.n_prefill_chunks,
+                        "ticks_during_prefill":
+                            chunk_eng.n_ticks_during_prefill},
+            # headline: short-request (stall-victim) p99 TTFT, chunked/mono
+            "ttft_p99_ratio": round(ratio, 4),
+            "arrival_interval_ms": round(interval * 1e3, 3),
+        },
+        "prefix": {
+            "requests": len(pfx_work),
+            "prefix_len": PREFIX_LEN,
+            "unshared": {"prefill_tokens": base_eng.n_prefill_tokens,
+                         "peak_pages": base_eng.pages.peak_in_use},
+            "shared": {"prefill_tokens": shr_eng.n_prefill_tokens,
+                       "peak_pages": shr_eng.pages.peak_in_use,
+                       "prefix_hits": shr_eng.n_prefix_hits,
+                       "prefill_tokens_saved":
+                           shr_eng.n_prefix_tokens_saved,
+                       "pages_shared": shr_eng.n_prefix_pages_shared},
         },
         "speedups": {"paged_vs_continuous": round(paged_tps / cont_tps, 3)},
     }
@@ -332,7 +623,7 @@ def main():
             cont_tps / sync_tps, 3)
 
     if args.speculative and not args.smoke:
-        spec_tok, spec_s, eng = run_speculative(
+        spec_tok, spec_s, eng, spec_res = run_speculative(
             plan, params, registry, draft, work, args.slots, args.gamma,
             lora_cfg.scale)
         spec_tps = spec_tok / spec_s
@@ -349,6 +640,7 @@ def main():
             "tokens": spec_tok, "seconds": round(spec_s, 4),
             "tok_s": round(spec_tps, 1), "acceptance_rate": round(acc, 4),
             "gamma": args.gamma, "rounds": eng.n_rounds,
+            **latency_stats(spec_res),
         }
         results["speedups"]["speculative_vs_continuous"] = round(
             spec_tps / cont_tps, 3)

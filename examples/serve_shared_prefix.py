@@ -1,0 +1,99 @@
+"""Copy-on-write prefix sharing: K adapter-routed requests, ONE system prompt.
+
+The dominant multi-adapter serving pattern sends every request through the
+same system-prompt + adapter template.  Without sharing, each of the K
+requests recomputes the prefix's prefill FLOPs and stores an identical copy
+of its K/V.  With ``ServeConfig.prefix_sharing`` the first request under a
+``prefix_id`` prefills the prefix once; every later request maps those pages
+READ-ONLY into its block table (refcounted — eviction decrements instead of
+freeing) and prefills only its suffix.  The partially-filled boundary page
+forks copy-on-write the moment a request's suffix diverges into it, so
+sharing is invisible to the output: tokens are asserted identical to a
+fully unshared run below.
+
+``ServeConfig.prefill_chunk`` composes: long prompts stream in page-aligned
+chunks interleaved with decode ticks, so a new request's system prompt
+never stalls in-flight traffic.
+
+  PYTHONPATH=src python examples/serve_shared_prefix.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LoRAConfig, ServeConfig, get_smoke
+from repro.models import init_params, make_plan
+from repro.models.model import init_lora
+from repro.serving import AdapterRegistry, ContinuousServeEngine
+
+PREFIX_LEN = 40       # the shared system prompt
+N_REQUESTS = 8
+PAGE = 16
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, jax.random.PRNGKey(0), jnp.float32)
+    lora_cfg = LoRAConfig(rank=4)
+
+    def mk_adapter(seed):
+        lora = init_lora(plan, lora_cfg, jax.random.PRNGKey(seed))
+        return jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), lora)
+
+    def build(shared: bool):
+        registry = AdapterRegistry(mk_adapter(11), max_adapters=4)
+        registry.add("math", mk_adapter(11))
+        registry.add("code", mk_adapter(22))
+        return ContinuousServeEngine(
+            plan, params,
+            ServeConfig(max_seq_len=128, max_slots=4, max_adapters=4,
+                        max_new_tokens=32, kv_cache_dtype="float32",
+                        kv_paging=True, kv_page_size=PAGE,
+                        prefill_chunk=PAGE if shared else 0,
+                        prefix_sharing=shared),
+            registry, lora_scale=lora_cfg.scale)
+
+    rs = np.random.default_rng(0)
+    system = rs.integers(2, cfg.vocab_size, (PREFIX_LEN,)).astype(np.int32)
+    jobs = [(rs.integers(2, cfg.vocab_size,
+                         (int(rs.integers(4, 12)),)).astype(np.int32),
+             ["math", "code"][i % 2]) for i in range(N_REQUESTS)]
+
+    unshared, shared = build(False), build(True)
+    for suffix, adapter in jobs:
+        prompt = np.concatenate([system, suffix])
+        unshared.submit(prompt, max_new_tokens=12, adapter=adapter)
+        shared.submit(prompt, max_new_tokens=12, adapter=adapter,
+                      prefix_id="system", prefix_len=PREFIX_LEN)
+    r_un, r_sh = unshared.run(), shared.run()
+
+    for uid in sorted(r_un):
+        np.testing.assert_array_equal(
+            r_un[uid].tokens, r_sh[uid].tokens,
+            err_msg=f"uid {uid}: shared-prefix output diverged")
+    print(f"[shared_prefix] {N_REQUESTS} requests x {PREFIX_LEN}-token "
+          f"system prompt, 2 adapters — token-identical to unshared runs")
+    saved_tok = unshared.n_prefill_tokens - shared.n_prefill_tokens
+    print(f"[shared_prefix] prefill compute: {unshared.n_prefill_tokens} → "
+          f"{shared.n_prefill_tokens} tokens "
+          f"({saved_tok} saved = {saved_tok / unshared.n_prefill_tokens:.0%};"
+          f" {shared.n_prefix_hits} prefix hits)")
+    print(f"[shared_prefix] KV pages: peak {unshared.pages.peak_in_use} → "
+          f"{shared.pages.peak_in_use} "
+          f"({shared.n_prefix_pages_shared} page-mappings served from "
+          f"shared pages)")
+    print(f"[shared_prefix] knobs: ServeConfig.prefix_sharing=True + "
+          f"submit(prefix_id=..., prefix_len=...); "
+          f"ServeConfig.prefill_chunk={PAGE} streams long prompts between "
+          f"decode ticks ({shared.n_prefill_chunks} chunks, "
+          f"{shared.n_ticks_during_prefill} ticks ran during prefill)")
+    assert saved_tok >= (N_REQUESTS - 2 - 1) * PREFIX_LEN  # ≥ hits per adapter
+
+
+if __name__ == "__main__":
+    main()

@@ -305,6 +305,16 @@ class ServeConfig:
     # prompt-length bucketing: pad prompts up to power-of-two buckets so
     # prefill compiles O(log max_seq_len) times, not once per distinct length
     prefill_buckets: bool = True
+    # chunked prefill (paged engines only): admit long prompts in fixed
+    # page-aligned chunks interleaved with decode ticks instead of one
+    # monolithic prefill dispatch — decode never stalls behind a long prompt
+    prefill_chunk: int = 0           # tokens per chunk (0 → monolithic);
+                                     # must be a multiple of kv_page_size
+    # copy-on-write prefix sharing (paged engines only): requests submitted
+    # with a prefix_id map the shared prefix's pages read-only into their
+    # block tables; the partially-filled boundary page forks on the first
+    # divergent write, eviction decrements refcounts instead of freeing
+    prefix_sharing: bool = False
 
 
 def round_to(x: int, mult: int) -> int:

@@ -18,6 +18,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.nf4_matmul import nf4_matmul as _nf4_pallas
 from repro.kernels.paged_attention import (
+    paged_chunk_attention as _paged_chunk_pallas,
     paged_decode_attention as _paged_pallas)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -53,6 +54,20 @@ def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
                              interpret=not _on_tpu())
     return _ref.paged_decode_attention_ref(q, pool_k, pool_v, table, pos,
                                            window=window)
+
+
+def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
+                          window: int = 0, force: Optional[str] = None):
+    """Chunk-query attention through a paged KV cache (chunked prefill):
+    q: (B, C, H, D) at positions pos..pos+C-1; k_new/v_new: (B, C, K, D)
+    the chunk's own keys/values; pools: (n_pages, page, K, D); table:
+    (B, R) page ids; pos: (B,)."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _paged_chunk_pallas(q, k_new, v_new, pool_k, pool_v, table,
+                                   pos, window=window,
+                                   interpret=not _on_tpu())
+    return _ref.paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v,
+                                          table, pos, window=window)
 
 
 def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,

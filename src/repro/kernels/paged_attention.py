@@ -90,6 +90,146 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         o_ref[0] = (acc_ref[...] / denom).reshape(H, D).astype(o_ref.dtype)
 
 
+def _chunk_kernel(tbl_ref, pos_ref, q_ref, kc_ref, vc_ref, k_ref, v_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, page: int, n_r: int,
+                  chunk: int, window: int, scale: float, groups: int):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (C, H, D)
+    C, H, D = q.shape
+    K = k_ref.shape[2]
+    qg = q.reshape(C, K, groups, D).transpose(1, 2, 0, 3)   # (K, G, C, D)
+    pos_b = pos_ref[b]
+    qpos = pos_b + lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+
+    def accumulate(s, valid):
+        """One online-softmax update; s, valid: (K, G, C, L)."""
+        m_prev = m_ref[...]                        # (K, G, C, 1)
+        m_cur = jnp.max(jnp.where(valid, s, NEG_INF), axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # explicit zeroing (not exp of a masked -1e30) keeps fully-masked
+        # pages — trash pages, positions ahead of the chunk — at exactly
+        # zero weight even while the running max is still NEG_INF
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        return p, alpha
+
+    @pl.when(r < n_r)
+    def _pool_page():
+        k = k_ref[0]                               # (page, K, D)
+        v = v_ref[0]
+        kk = jnp.swapaxes(k, 0, 1)                 # (K, page, D)
+        vv = jnp.swapaxes(v, 0, 1)
+        s = lax.dot_general(
+            qg.reshape(K, groups * chunk, D).astype(jnp.float32),
+            kk.astype(jnp.float32),
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(
+                K, groups, chunk, page) * scale
+        idx = r * page + lax.broadcasted_iota(jnp.int32, (chunk, page), 1)
+        if window:
+            # ring interpretation: slot idx holds the largest committed
+            # position <= pos_b-1 congruent to it mod the ring length
+            ring = n_r * page
+            kpos = (pos_b - 1) - ((pos_b - 1 - idx) % ring)
+            valid = (kpos >= 0) & (kpos > qpos - window)
+        else:
+            valid = idx < pos_b
+        p, alpha = accumulate(s, valid[None, None])
+        pv = lax.dot_general(
+            p.reshape(K, groups * chunk, page).astype(jnp.float32),
+            vv.astype(jnp.float32),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(
+                K, groups, chunk, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(r == n_r)
+    def _in_chunk():
+        k = kc_ref[0]                              # (C, K, D)
+        v = vc_ref[0]
+        kk = jnp.swapaxes(k, 0, 1)                 # (K, C, D)
+        vv = jnp.swapaxes(v, 0, 1)
+        s = lax.dot_general(
+            qg.reshape(K, groups * chunk, D).astype(jnp.float32),
+            kk.astype(jnp.float32),
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(
+                K, groups, chunk, chunk) * scale
+        ci = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        cj = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        blk = cj <= ci
+        if window:
+            blk = blk & (cj > ci - window)
+        p, alpha = accumulate(s, blk[None, None])
+        pv = lax.dot_general(
+            p.reshape(K, groups * chunk, chunk).astype(jnp.float32),
+            vv.astype(jnp.float32),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(
+                K, groups, chunk, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = ((acc_ref[...] / denom)
+                    .transpose(2, 0, 1, 3).reshape(C, H, D)
+                    .astype(o_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
+                          window: int = 0, interpret: bool = False):
+    """Chunk-query variant for chunked prefill: q (B, C, H, D) at positions
+    ``pos .. pos+C-1`` attends the slot's committed pages (the same block
+    table / online-softmax sweep as the decode kernel, swept per page) plus
+    the chunk's own K/V ``(B, C, K, D)`` causally within the chunk — the
+    final grid step.  Returns (B, C, H, D); the caller scatters the chunk
+    K/V into pages afterwards."""
+    B, C, H, D = q.shape
+    _, page, K, _ = pool_k.shape
+    R = table.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, R + 1),
+        in_specs=[
+            pl.BlockSpec((1, C, H, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+            pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+            pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+            # the final grid step re-DMAs the last page (its index map must
+            # stay in range); the kernel never reads it there
+            pl.BlockSpec((1, page, K, D),
+                         lambda b, r, tbl, p: (tbl[b, jnp.minimum(r, R - 1)],
+                                               0, 0, 0)),
+            pl.BlockSpec((1, page, K, D),
+                         lambda b, r, tbl, p: (tbl[b, jnp.minimum(r, R - 1)],
+                                               0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K, H // K, C, D), jnp.float32),
+            pltpu.VMEM((K, H // K, C, 1), jnp.float32),
+            pltpu.VMEM((K, H // K, C, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, page=page, n_r=R, chunk=C,
+                          window=window, scale=scale, groups=H // K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        interpret=interpret,
+    )(table, pos, q, k_new, v_new, pool_k, pool_v)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
                            interpret: bool = False):

@@ -94,6 +94,62 @@ def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *, window: int = 0
     return out.reshape(B, H, D)
 
 
+def paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v, table, pos, *,
+                              window: int = 0):
+    """Chunk-query attention against a PAGED K/V cache (chunked prefill).
+
+    q: (B, C, H, D) — the chunk's roped queries at absolute positions
+    ``pos .. pos+C-1`` per slot;
+    k_new/v_new: (B, C, K, D) — the chunk's own K/V (NOT yet in the pool;
+    the caller scatters them into pages after the call);
+    pool_k/pool_v: (n_pages, page, K, D) — the global page pool holding the
+    slot's ALREADY-COMMITTED positions ``< pos``;
+    table: (B, R) int32 — each slot's block table, already sliced to the
+    layer's ring pages;
+    pos: (B,) int32 — the absolute position of the chunk's first token.
+
+    Each query attends (a) the committed pages through the block table,
+    masked exactly like the decode path (ring interpretation for windowed
+    layers — only positions the slot actually wrote are ever valid, so
+    stale pool garbage in freshly-allocated pages contributes nothing), and
+    (b) the chunk's own keys causally (within the sliding window when set).
+    """
+    B, C, H, D = q.shape
+    page = pool_k.shape[1]
+    K = pool_k.shape[2]
+    S = table.shape[1] * page
+    ck = pool_k[table].reshape(B, S, K, D)
+    cv = pool_v[table].reshape(B, S, K, D)
+    karange = jnp.arange(S)
+    qpos = pos[:, None] + jnp.arange(C)[None, :]                   # (B, C)
+    # absolute position held by each ring slot before this chunk ran
+    last = pos[:, None] - 1
+    slot_pos = last - ((last - karange[None, :]) % S)              # (B, S)
+    valid_old = jnp.broadcast_to((slot_pos >= 0)[:, None, :], (B, C, S))
+    if window:
+        valid_old = valid_old & (slot_pos[:, None, :]
+                                 > qpos[:, :, None] - window)
+    cidx = jnp.arange(C)
+    blk = cidx[None, :] <= cidx[:, None]                           # (Cq, Ck)
+    if window:
+        blk = blk & (cidx[None, :] > cidx[:, None] - window)
+    gs = H // K
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, C, K, gs, D).transpose(0, 2, 3, 1, 4)        # (B,K,G,C,D)
+    lo = jnp.einsum("bkgcd,bskd->bkgcs", qg,
+                    ck.astype(qg.dtype)).astype(jnp.float32) * scale
+    lb = jnp.einsum("bkgcd,bjkd->bkgcj", qg,
+                    k_new.astype(qg.dtype)).astype(jnp.float32) * scale
+    lo = jnp.where(valid_old[:, None, None], lo, NEG_INF)
+    lb = jnp.where(blk[None, None, None], lb, NEG_INF)
+    probs = jax.nn.softmax(jnp.concatenate([lo, lb], axis=-1), axis=-1)
+    po = probs[..., :S].astype(cv.dtype)
+    pb = probs[..., S:].astype(v_new.dtype)
+    out = (jnp.einsum("bkgcs,bskd->bkgcd", po, cv)
+           + jnp.einsum("bkgcj,bjkd->bkgcd", pb, v_new))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # ssd_scan (Mamba2 chunked state-space duality)
 # ---------------------------------------------------------------------------

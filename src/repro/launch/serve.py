@@ -58,7 +58,19 @@ def main():
                     help="tokens per KV page (with --paged)")
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="page-pool capacity (0 → dense-equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: admit prompts in page-aligned "
+                         "chunks of this many tokens interleaved with "
+                         "decode ticks (implies --paged; 0 → monolithic)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="share the batch's common prompt prefix across "
+                         "slots via copy-on-write pages (implies --paged)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix length in tokens (with "
+                         "--prefix-sharing; 0 → half the prompt)")
     args = ap.parse_args()
+    if args.prefill_chunk or args.prefix_sharing:
+        args.paged = True
     if args.speculative or args.paged:
         args.continuous = True
 
@@ -86,7 +98,8 @@ def main():
             draft_gamma=args.gamma if args.speculative else 0,
             gamma_autotune=args.gamma_autotune,
             kv_paging=args.paged, kv_page_size=args.page_size,
-            kv_pages=args.kv_pages)
+            kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.prefix_sharing)
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)
@@ -96,9 +109,20 @@ def main():
         else:
             eng = ContinuousServeEngine(plan, params, serve_cfg, registry)
         t0 = time.perf_counter()
+        prefix_kw = {}
+        if args.prefix_sharing:
+            if args.prompt_len < 2:
+                ap.error("--prefix-sharing needs --prompt-len >= 2 (the "
+                         "suffix must keep at least one real token)")
+            # the demo batch genuinely shares its head: overwrite every
+            # prompt's first prefix_len tokens with the first prompt's
+            n_p = args.prefix_len or max(args.prompt_len // 2, 1)
+            n_p = min(n_p, args.prompt_len - 1)
+            prompts[:, :n_p] = prompts[0, :n_p]
+            prefix_kw = dict(prefix_id="system", prefix_len=n_p)
         for row in prompts:
             eng.submit(row, max_new_tokens=args.new_tokens, adapter="task",
-                       temperature=args.temperature)
+                       temperature=args.temperature, **prefix_kw)
         results = eng.run()
         dt = time.perf_counter() - t0
         n_tok = sum(r.n_generated for r in results.values())
@@ -109,6 +133,14 @@ def main():
         if args.speculative:
             print(f"[serve] γ={args.gamma}, acceptance "
                   f"{eng.acceptance_rate:.1%}, {eng.n_rounds} rounds")
+        if args.prefill_chunk:
+            print(f"[serve] chunked prefill: {eng.n_prefill_chunks} chunks, "
+                  f"{eng.n_ticks_during_prefill} decode ticks ran during "
+                  f"prefill")
+        if args.prefix_sharing:
+            print(f"[serve] prefix sharing: {eng.n_prefix_hits} hits, "
+                  f"{eng.n_prefix_tokens_saved} prefill tokens saved, "
+                  f"{eng.n_prefix_pages_shared} shared page mappings")
         for uid in sorted(results)[:4]:
             print(f"  uid={uid} tokens={results[uid].tokens[:12]}")
         return

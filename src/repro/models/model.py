@@ -297,7 +297,8 @@ def _attn_block(
     x, bp, blora, d: StageDims, *,
     kind: str, window: int, positions, theta: float, scale_l: float,
     enc_out=None, cache=None, pos=None, masks=None, adapter_ids=None,
-    verify: bool = False, block_table=None, valid_len=None,
+    verify: bool = False, chunk: bool = False, block_table=None,
+    valid_len=None,
 ):
     B = x.shape[0]
     hd, H, K = d.head_dim, d.n_heads, d.n_kv_heads
@@ -388,6 +389,22 @@ def _attn_block(
             out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
             # pending writes: the engine scatters rows j < n_keep per slot
             new_cache = {"k": kw, "v": vw}
+        elif chunk:
+            # chunked prefill: C queries at positions pos..pos+C-1 attend the
+            # slot's already-committed pages through the block table plus the
+            # chunk's own keys causally (kernels.paged_chunk_attention — the
+            # Pallas page sweep on TPU, the jnp oracle elsewhere).  The
+            # persistent pool is NOT written here: the chunk's K/V comes back
+            # as pending rows and repro.runtime.steps.make_paged_prefill_chunk
+            # scatters the valid ones into the slot's pages (per-layer ring
+            # mapping, last-writer-wins inside a wrapped windowed ring).
+            assert paged, "chunked prefill requires a paged cache"
+            pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            out = kops.paged_chunk_attention(
+                q, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype),
+                cache["k"], cache["v"], tbl, pos_v, window=window)
+            new_cache = {"k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
         elif q.shape[1] == 1 and paged:  # decode step, paged pool
             # scatter the new token's K/V into the slot's current page, then
             # attend through the block table (gather-then-flash — the Pallas
@@ -508,14 +525,14 @@ def _prefill_attn_and_cache(q, k, v, cache, window, n_rep, valid_len=None):
 
 def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelConfig,
                  *, positions, enc_out, cache, pos, scale_l, capacity_factor, masks=None,
-                 adapter_ids=None, verify: bool = False, block_table=None,
-                 valid_len=None):
+                 adapter_ids=None, verify: bool = False, chunk: bool = False,
+                 block_table=None, valid_len=None):
     new_cache = None
     if spec.kind in ("attn", "enc_attn", "cross_attn"):
         x, new_cache = _attn_block(
             x, bp, blora, d, kind=spec.kind, window=spec.window, positions=positions,
             theta=cfg.rope_theta, scale_l=scale_l, enc_out=enc_out, cache=cache, pos=pos,
-            masks=masks, adapter_ids=adapter_ids, verify=verify,
+            masks=masks, adapter_ids=adapter_ids, verify=verify, chunk=chunk,
             block_table=block_table, valid_len=valid_len)
     elif spec.kind == "mlp":
         xn = L.rms_norm(x, bp["ln"])
@@ -529,10 +546,15 @@ def _apply_block(spec: BlockSpec, bp, blora, x, aux, d: StageDims, cfg: ModelCon
         # expert-buffer position cumsum runs in token order and padding sits
         # AFTER every real token, so garbage can only ever take capacity
         # slots behind the real ones — statistical capacity (now computed on
-        # the slightly longer bucket) stays safe.
+        # the slightly longer bucket) stays safe.  Chunked prefill routes
+        # lossless too: per-chunk statistical capacity would make routing
+        # depend on where the chunk boundaries fell — lossless keeps chunked
+        # output equal to monolithic whenever monolithic dropped nothing
+        # (the same documented exception as bucketing's slightly-larger
+        # capacity).
         out, a = moe_mlp(xn, bp, top_k=d.top_k, capacity_factor=capacity_factor,
                          lora=blora, lora_scale=scale_l, adapter_ids=adapter_ids,
-                         lossless=verify)
+                         lossless=verify or chunk)
         x = x + out.astype(x.dtype)
         aux = aux + a
     elif spec.kind == "mamba":
@@ -552,7 +574,8 @@ def run_stage(
     stage: Stage, sp: dict, slora: Optional[dict], x: Array, aux: Array, cfg: ModelConfig,
     *, positions, enc_out=None, cache: Optional[dict] = None, pos=None,
     scale_l: float = 2.0, remat: bool = False, masks: Optional[dict] = None,
-    adapter_ids=None, verify: bool = False, block_table=None, valid_len=None,
+    adapter_ids=None, verify: bool = False, chunk: bool = False,
+    block_table=None, valid_len=None,
 ):
     """sp = {"stacked": {...}, "shared": {...}} with leading n_rep on stacked."""
     stacked_p = sp["stacked"]
@@ -580,7 +603,7 @@ def run_stage(
                     positions=positions, enc_out=enc_out, cache=bc_, pos=pos,
                     scale_l=scale_l, capacity_factor=cfg.capacity_factor,
                     masks=bm_, adapter_ids=adapter_ids, verify=verify,
-                    block_table=block_table, valid_len=valid_len)
+                    chunk=chunk, block_table=block_table, valid_len=valid_len)
 
             # adaptive remat granularity (§Perf iters 11/13): deep superblocks
             # (gemma3's 12 blocks) checkpoint per block so the backward
@@ -890,6 +913,56 @@ def decode_step(
         new_cache[st.name] = st_cache
     x = L.rms_norm(x, params["final_ln"])
     logits = _lm_logits(cfg, params, x, lora, lora_scale, adapter_ids)
+    return logits[:, 0], new_cache
+
+
+def prefill_chunk(
+    plan: Plan, params: PyTree, tokens: Array, cache: PyTree, pos,
+    block_table: Array, lora: Optional[PyTree] = None, *,
+    lora_scale: float = 2.0, valid_len=None,
+):
+    """One chunk of a chunked prefill: score ``tokens`` (B, C) at absolute
+    positions ``pos .. pos+C-1`` against a PAGED cache whose pages already
+    hold the slot's positions ``< pos``.
+
+    Attention reads the committed pages through ``block_table`` plus the
+    chunk's own keys causally (:func:`repro.kernels.ops.paged_chunk_attention`)
+    and returns its K/V as PENDING rows — the caller scatters the first
+    ``valid_len`` of them into the slot's pages
+    (:func:`repro.runtime.steps.make_paged_prefill_chunk`).  Recurrent
+    (SSM/conv) state continues from the cached state and freezes at
+    ``valid_len`` exactly like bucketed prefill (``dt = 0`` past the real
+    length); MoE routes lossless so chunk boundaries can never change which
+    tokens fit an expert's capacity.  Returns ``(logits, new_cache)`` with
+    logits (B, V) taken at the chunk's LAST REAL position — only the final
+    chunk's logits feed sampling, the engine discards the rest.
+    """
+    cfg = plan.cfg
+    if plan.enc_stages:
+        raise NotImplementedError(
+            "chunked prefill does not cover encoder-decoder frontends")
+    B, C = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(C)[None, :]
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for st in plan.stages:
+        x, aux, st_cache = run_stage(
+            st, params["stages"][st.name],
+            None if lora is None else lora.get("stages", {}).get(st.name),
+            x, aux, cfg, positions=positions, enc_out=None,
+            cache=cache[st.name], pos=pos, scale_l=lora_scale,
+            chunk=True, block_table=block_table, valid_len=valid_len)
+        new_cache[st.name] = st_cache
+    if valid_len is None:
+        x = x[:, -1:]
+    else:
+        x = lax.dynamic_slice_in_dim(x, jnp.asarray(valid_len, jnp.int32) - 1,
+                                     1, axis=1)
+    x = L.rms_norm(x, params["final_ln"])
+    logits = _lm_logits(cfg, params, x, lora, lora_scale)
     return logits[:, 0], new_cache
 
 

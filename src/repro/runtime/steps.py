@@ -19,6 +19,7 @@ from repro.configs.base import LoRAConfig, TrainConfig
 from repro.core.objectives import sft_loss
 from repro.models.model import (Plan, decode_step as model_decode, forward,
                                 paged_pos_to_page, prefill as model_prefill,
+                                prefill_chunk as model_prefill_chunk,
                                 ring_pages, verify_step as model_verify)
 from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import warmup_cosine
@@ -259,6 +260,150 @@ def make_paged_prefill_into_slot(plan: Plan, bucket: int, page_size: int,
         return logits, new_cache
 
     return step
+
+
+def make_paged_prefill_chunk(plan: Plan, chunk_len: int, page_size: int,
+                             n_tbl: int, *, lora_scale: float = 2.0) -> Callable:
+    """Prefill ONE chunk of one request's prompt into the PAGED cache:
+    ``tokens`` (1, chunk_len) at absolute positions ``pos0 .. pos0+valid-1``
+    run through :func:`repro.models.model.prefill_chunk` — attention reads
+    the slot's already-committed pages via ``table_row``, the chunk's
+    pending K/V rows scatter into the pages backing those positions
+    (per-layer ring mapping for windowed blocks, last-writer-wins when a
+    chunk wraps a bounded ring).  Compiled once per chunk length; a fixed
+    ``prefill_chunk`` therefore compiles exactly ONE prefill variant no
+    matter the prompt-length mix.
+
+    Recurrent (SSM/conv) state rides OUTSIDE the engine's big cache while
+    a prompt is streaming in: the decode tick (and the speculative draft
+    loop) advances every slot's dense state each step — free and
+    prefilling slots included — so a half-prefilled slot's row in the
+    shared cache would be garbage by its next chunk.  ``state`` (this
+    slot's rows, zeros before the first chunk) is an explicit operand and
+    the updated rows come back as the third result; the engine keeps them
+    aside and writes them into the cache only at activation
+    (:func:`make_state_ops`' restore).  Attention needs no such shield: a
+    prefilling slot's device block-table row stays all-zero, so tick
+    garbage lands on the trash page while the chunk dispatches carry the
+    real row as an operand."""
+    for st in plan.stages:
+        for spec in st.superblock:
+            if spec.kind == "cross_attn":
+                raise NotImplementedError(
+                    "paged serving does not cover encoder-decoder frontends")
+    windows = attn_window_map(plan)
+
+    def step(params, lora, tokens, cache, state, table_row, pos0, valid):
+        # tokens: (1, chunk_len); state: {stage: {block: {conv, ssm}}} rows
+        # (empty for attention-only plans); table_row: (1, n_tbl) int32
+        # pool page ids; pos0 / valid: scalars
+        view = {}
+        for st in plan.stages:
+            st_view = {}
+            for spec in st.superblock:
+                bc = cache[st.name].get(spec.name)
+                if bc is None:
+                    continue
+                if spec.kind == "attn":
+                    st_view[spec.name] = bc        # pool, read via the table
+                else:                              # mamba: side-channel rows
+                    st_view[spec.name] = state[st.name][spec.name]
+            view[st.name] = st_view
+
+        logits, out = model_prefill_chunk(
+            plan, params, tokens, view, pos0, table_row, lora,
+            lora_scale=lora_scale, valid_len=valid)
+
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        valid = jnp.asarray(valid, jnp.int32)
+        j = jnp.arange(chunk_len)
+        new_cache = {}
+        new_state = {}
+        for st in plan.stages:
+            st_new = {}
+            for spec in st.superblock:
+                bc = cache[st.name].get(spec.name)
+                if bc is None:
+                    continue
+                oc = out[st.name][spec.name]
+                if spec.kind == "attn":
+                    ring_len = ring_pages(spec.window, n_tbl,
+                                          page_size) * page_size
+                    ridx = (pos0 + j) % ring_len
+                    keep = j < valid
+                    if spec.window:
+                        # a chunk longer than a bounded ring writes some ring
+                        # slots more than once — keep only the LAST writer
+                        # per slot (scatter winners are implementation-
+                        # defined otherwise)
+                        keep = keep & (j >= valid - ring_len)
+                    pg = table_row[0, ridx // page_size]
+                    off = ridx % page_size
+                    # masked rows go OUT OF BOUNDS and drop — same scatter
+                    # discipline as the speculative paged commit
+                    pg_w = jnp.where(keep, pg, bc["k"].shape[1])
+                    st_new[spec.name] = {
+                        n: bc[n].at[:, pg_w, off].set(
+                            oc[n][:, 0].astype(bc[n].dtype), mode="drop")
+                        for n in ("k", "v")
+                    }
+                else:
+                    # recurrent rows stay in the side channel until the
+                    # engine activates the slot
+                    st_new[spec.name] = bc
+                    new_state.setdefault(st.name, {})[spec.name] = oc
+            new_cache[st.name] = st_new
+        return logits, new_cache, new_state
+
+    return step
+
+
+def make_state_ops(plan: Plan):
+    """(capture, restore) jitted ops over a slot's dense recurrent rows —
+    what a shared-prefix cache entry snapshots at the prefix boundary and
+    clones into every sharer's slot at admission.  Returns (None, None) for
+    plans with no recurrent blocks (attention needs no state beyond its
+    pages)."""
+    specs = [(st.name, spec.name) for st in plan.stages
+             for spec in st.superblock if spec.kind == "mamba"]
+    if not specs:
+        return None, None
+
+    def capture(cache, slot):
+        return {stn: {bn: {n: lax.dynamic_slice_in_dim(
+                               cache[stn][bn][n], slot, 1, axis=1)
+                           for n in ("conv", "ssm")}
+                      for s2, bn in specs if s2 == stn}
+                for stn in {s for s, _ in specs}}
+
+    def restore(cache, state, slot):
+        new = {stn: dict(stc) for stn, stc in cache.items()}
+        for stn, bn in specs:
+            new[stn][bn] = {
+                n: _write_row(cache[stn][bn][n], state[stn][bn][n], slot)
+                for n in ("conv", "ssm")
+            }
+        return new
+
+    return jax.jit(capture), jax.jit(restore, donate_argnums=(0,))
+
+
+def make_copy_page(plan: Plan) -> Callable:
+    """Jitted copy-on-write page fork: clone pool page ``src`` into ``dst``
+    across every attention layer's K/V pools (one block table serves all
+    layers, so a forked page id must be backed in each of them)."""
+    attn = [(st.name, spec.name) for st in plan.stages
+            for spec in st.superblock if spec.kind == "attn"]
+
+    def copy(cache, src, dst):
+        new = {stn: dict(stc) for stn, stc in cache.items()}
+        for stn, bn in attn:
+            bc = cache[stn][bn]
+            new[stn][bn] = {n: bc[n].at[:, dst].set(bc[n][:, src])
+                            for n in ("k", "v")}
+        return new
+
+    return jax.jit(copy, donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------

@@ -2,9 +2,9 @@ from repro.serving.adapters import AdapterRegistry  # noqa: F401
 from repro.serving.draft import (DraftModel, build_draft,  # noqa: F401
                                  draft_from_setup)
 from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401
-                                  GenerationResult, ServeEngine)
+                                  GenerationResult, PrefixEntry, ServeEngine)
 from repro.serving.pages import (PageAllocator, PoolExhausted,  # noqa: F401
-                                 bucket_len, pages_for)
+                                 auto_pool_pages, bucket_len, pages_for)
 from repro.serving.scheduler import (Request, RequestResult,  # noqa: F401
                                      Scheduler)
 from repro.serving.speculative import (GammaController,  # noqa: F401

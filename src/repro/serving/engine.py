@@ -40,6 +40,24 @@ so prefill compiles O(log max_seq_len) variants instead of one per distinct
 prompt length; masked cache writes, frozen recurrent state and lossless MoE
 routing past the real length keep bucketed output exactly equal to unpadded
 (see :func:`repro.models.model.prefill`).
+
+Two paged-only optimizations (PR 4):
+
+* chunked prefill (``ServeConfig.prefill_chunk``): long prompts stream into
+  their slot one fixed page-aligned chunk per engine step, interleaved with
+  decode ticks — in-flight traffic never stalls behind a monolithic prefill
+  dispatch.  Chunk attention reads the slot's committed pages through the
+  block table (:func:`repro.kernels.ops.paged_chunk_attention`); recurrent
+  state streams outside the cache until activation (the tick garbage-
+  advances every slot's dense rows).
+* copy-on-write prefix sharing (``ServeConfig.prefix_sharing``):
+  ``submit(prefix_id=..., prefix_len=...)`` prefills a shared prompt head
+  once per (prefix_id, adapter) and maps its refcounted pages read-only
+  into every later sharer's block table; a host-side COW sweep forks any
+  shared page a write would touch (the partially-filled boundary page, and
+  windowed rings wrapping onto prefix pages), so output stays
+  token-identical to unshared serving while prefill FLOPs and KV pages
+  scale with the UNIQUE tokens only.
 """
 from __future__ import annotations
 
@@ -54,15 +72,38 @@ import numpy as np
 from repro.configs.base import ServeConfig
 from repro.core.recovery import merge_lora
 from repro.distributed import sharding
-from repro.models.model import Plan, init_cache, init_paged_cache
-from repro.runtime.steps import (make_decode_step, make_multi_adapter_decode_step,
+from repro.models.model import (Plan, init_cache, init_paged_cache,
+                                ring_pages)
+from repro.runtime.steps import (attn_window_map, make_copy_page,
+                                 make_decode_step,
+                                 make_multi_adapter_decode_step,
+                                 make_paged_prefill_chunk,
                                  make_paged_prefill_into_slot,
                                  make_prefill_into_slot, make_prefill_step,
-                                 request_key)
+                                 make_state_ops, request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.pages import (PageAllocator, PoolExhausted, bucket_len,
                                  pages_for)
 from repro.serving.scheduler import Request, RequestResult, Scheduler
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """A cached shared prefix: the pages holding its K/V (refcount-retained
+    so they survive every sharer's eviction), the recurrent-state snapshot
+    at its boundary, and how many live slots currently map it.
+
+    Entries are keyed by ``(prefix_id, adapter_id)``: the prefix K/V runs
+    through the slot's LoRA adapter (wk/wv deltas), so one system prompt
+    served under two adapters is two distinct caches — exactly the
+    "system-prompt + adapter template" unit the multi-adapter pattern
+    shares."""
+
+    tokens: np.ndarray            # (n_tokens,) int32 — for submit validation
+    n_tokens: int
+    pages: list                   # pool page ids covering positions [0, n)
+    state: Any = None             # dense SSM/conv rows at the boundary
+    active: int = 0               # slots currently mapping the prefix
 
 
 @dataclasses.dataclass
@@ -183,6 +224,17 @@ class ContinuousServeEngine:
         self.paged = cfg.kv_paging
         self._page = cfg.kv_page_size
         self._n_tbl = pages_for(cfg.max_seq_len, self._page) if self.paged else 0
+        # chunked prefill + COW prefix sharing ride on the paged cache
+        self._chunking = cfg.prefill_chunk > 0
+        self._sharing = cfg.prefix_sharing
+        if (self._chunking or self._sharing) and not self.paged:
+            raise ValueError(
+                "prefill_chunk / prefix_sharing require kv_paging=True — "
+                "both work through the block table")
+        if self._chunking and cfg.prefill_chunk % max(self._page, 1):
+            raise ValueError(
+                f"prefill_chunk={cfg.prefill_chunk} must be a multiple of "
+                f"kv_page_size={self._page} (chunks are page-aligned)")
         if self.paged:
             n_pages = cfg.kv_pages or (S * self._n_tbl + 1)
             if n_pages - 1 < self._n_tbl:
@@ -192,10 +244,30 @@ class ContinuousServeEngine:
                     f"engine would preempt forever")
             self.pages = PageAllocator(n_pages, self._page, self._n_tbl, S)
             self._prefill_steps: Dict[int, Any] = {}    # bucket → jitted step
+            self._chunk_steps: Dict[int, Any] = {}      # chunk len → jitted
             self._slot_pos = [0] * S        # next write position per slot
             self._admit_seq = [-1] * S      # admission order (newest preempts)
             self._seq_counter = 0
             self.n_preemptions = 0
+            # chunked-prefill progress (slot → host-side context)
+            self._prefill_ctx: Dict[int, Dict[str, Any]] = {}
+            # prefix registry: (prefix_id, adapter_id) → PrefixEntry,
+            # plus keys currently mid-construction and the per-id token
+            # declaration used for submit-time validation
+            self._prefix: Dict[Any, PrefixEntry] = {}
+            self._prefix_pending: set = set()
+            self._slot_prefix: Dict[int, Any] = {}
+            self._prefix_tokens: Dict[str, np.ndarray] = {}
+            # every distinct attention write pattern (full + each window)
+            # for the pre-write COW sweep
+            wmap = attn_window_map(plan)
+            self._write_windows = sorted(
+                {w for stw in wmap.values() for w in stw.values()})
+            self._copy_page_fn = make_copy_page(plan) if self._sharing else None
+            self._cap_fn, self._res_fn = (
+                make_state_ops(plan) if (self._chunking or self._sharing)
+                else (None, None))
+            self._zero_state = None     # built lazily (cache exists later)
         else:
             self._prefill = jax.jit(
                 make_prefill_into_slot(plan, lora_scale=lora_scale,
@@ -292,17 +364,41 @@ class ContinuousServeEngine:
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
         self.n_completed = 0
+        # chunked-prefill / prefix-sharing telemetry
+        self.n_prefill_chunks = 0          # chunk dispatches run
+        self.n_ticks_during_prefill = 0    # decode ticks that ran while a
+                                           # prompt was still streaming in —
+                                           # the no-stall proof
+        self.n_prefix_hits = 0
+        self.n_prefix_tokens_saved = 0     # prompt tokens NOT recomputed
+        self.n_prefix_pages_shared = 0
+        # per-request wall-clock (submit → first token → eviction); results
+        # carry ttft_s / latency_s computed from these.  First-token stamps
+        # are taken at DISPATCH return — the engine never blocks its hot
+        # loop — so they measure host-side scheduling; a latency harness
+        # that wants device-complete timing must sync per step and re-stamp
+        # at the barrier (benchmarks/serve_bench.run_latency does)
+        self._t_submit: Dict[int, float] = {}
+        self._t_first: Dict[int, float] = {}
 
     # -- intake -------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 32,
                adapter: Union[str, int, None] = None,
                temperature: float = 0.0, seed: int = 0,
-               speculative: bool = True) -> int:
+               speculative: bool = True,
+               prefix_id: Optional[str] = None, prefix_len: int = 0) -> int:
         """Enqueue one request; returns its uid.  Non-blocking — call
         :meth:`step` (or :meth:`run` / :meth:`stream`) to make progress.
         ``speculative`` is honored by :class:`SpeculativeServeEngine` only
-        (per-request opt-out of draft-then-verify); this engine ignores it."""
+        (per-request opt-out of draft-then-verify); this engine ignores it.
+
+        ``prefix_id`` (requires ``ServeConfig.prefix_sharing``) marks the
+        first ``prefix_len`` prompt tokens as a SHARED prefix: the first
+        request under an id prefills it once, every later request with the
+        same id maps those pages read-only into its block table and
+        prefills only its suffix.  All requests under one id must carry
+        byte-identical prefix tokens."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1 or max_new_tokens > self.cfg.max_new_tokens:
             raise ValueError(
@@ -311,6 +407,24 @@ class ContinuousServeEngine:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq_len={self.cfg.max_seq_len}")
+        if prefix_id is not None:
+            if not (self.paged and self._sharing):
+                raise ValueError(
+                    "prefix_id requires ServeConfig.prefix_sharing=True on "
+                    "a paged engine (kv_paging=True)")
+            if not 0 < prefix_len < len(prompt):
+                raise ValueError(
+                    f"prefix_len must be in (0, len(prompt)) — the suffix "
+                    f"needs at least one real token (got {prefix_len} of "
+                    f"{len(prompt)})")
+            known = self._prefix_tokens.get(prefix_id)
+            if known is None:
+                self._prefix_tokens[prefix_id] = prompt[:prefix_len].copy()
+            elif (prefix_len != len(known)
+                    or not np.array_equal(prompt[:prefix_len], known)):
+                raise ValueError(
+                    f"prefix_id {prefix_id!r} is already registered with "
+                    f"different tokens — shared prefixes must be identical")
         aid = 0
         if self.registry is not None:
             aid = self.registry.resolve(adapter)
@@ -320,19 +434,23 @@ class ContinuousServeEngine:
                       max_new_tokens=max_new_tokens, adapter=adapter
                       if isinstance(adapter, str) else None,
                       adapter_id=aid, temperature=temperature, seed=seed,
-                      speculative=speculative)
+                      speculative=speculative, prefix_id=prefix_id,
+                      prefix_len=prefix_len)
         if temperature > 0.0:
             self._n_hot += 1
+        self._t_submit[req.uid] = time.perf_counter()
         return self._sched.submit(req)
 
     # -- progress -----------------------------------------------------------
 
     def step(self) -> List[RequestResult]:
-        """Admit whatever fits, run one decode tick, return newly completed
+        """Admit whatever fits, stream at most one prefill chunk per
+        still-prefilling slot, run one decode tick, return newly completed
         requests (empty list if nothing finished this tick)."""
         ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
                else _null())
         done: List[RequestResult] = []
+        progressive = self.paged and (self._chunking or self._sharing)
         with ctx:
             if self.paged:
                 # grow EXISTING slots before admitting: otherwise a freshly
@@ -341,10 +459,20 @@ class ContinuousServeEngine:
                 self._ensure_growth(lookahead=1)
             while True:
                 adm = self._sched.next_admission(
-                    gate=self._admission_gate if self.paged else None)
+                    gate=self._admission_gate if self.paged else None,
+                    prefill=self._chunked_path if progressive else None)
                 if adm is None:
                     break
-                self._admit(*adm)
+                slot, req = adm
+                if progressive and self._chunked_path(req):
+                    self._admit_chunked(slot, req)
+                else:
+                    self._admit(slot, req)
+            if progressive:
+                # one bounded chunk per prefilling slot, oldest first — the
+                # decode tick below runs regardless, so a long prompt never
+                # stalls in-flight traffic
+                self._prefill_tick()
             # single-token requests finish at prefill, before any tick
             for slot in self._sched.completed_slots():
                 done.append(self._finalize(slot))
@@ -353,6 +481,16 @@ class ContinuousServeEngine:
                 # including a just-admitted slot whose prompt filled its
                 # bucket exactly — with a real page BEFORE the tick
                 self._ensure_growth(lookahead=1)
+            if self._sharing:
+                # decode writes (incl. windowed ring wraps) must never land
+                # on a shared page — fork any such entry first.  Only slots
+                # that mapped a prefix can hold shared pages, so plain
+                # traffic skips the sweep entirely
+                for slot in self._sched.active_slots():
+                    if (slot in self._slot_prefix
+                            and self._sched.slot_request(slot) is not None):
+                        self._cow_range(slot, self._slot_pos[slot],
+                                        self._slot_pos[slot] + 1)
             active = self._sched.active_slots()
             if active:
                 tick = self._tick_sample if self._n_hot else self._tick_greedy
@@ -363,6 +501,8 @@ class ContinuousServeEngine:
                 self.cache, self._st = tick(
                     self.params, bank, self.cache, self._st)
                 self._n_ticks += 1
+                if self._sched.prefilling_slots():
+                    self.n_ticks_during_prefill += 1
                 if self.paged:
                     for slot in active:
                         self._slot_pos[slot] += 1
@@ -384,7 +524,7 @@ class ContinuousServeEngine:
 
     @property
     def pending(self) -> int:
-        return self._sched.queued + len(self._sched.active_slots())
+        return self._sched.queued + len(self._sched.occupied_slots())
 
     # -- internals ----------------------------------------------------------
 
@@ -410,7 +550,322 @@ class ContinuousServeEngine:
             self._prefill_steps[bucket] = step
         return step
 
+    # -- chunked prefill ----------------------------------------------------
+
+    def _chunked_path(self, req: Request) -> bool:
+        """Does this request stream in via prefill chunks?  Shared-prefix
+        requests always do (the suffix is a continuation at pos > 0);
+        otherwise only prompts longer than one chunk — short prompts keep
+        the monolithic single-dispatch path."""
+        if not self.paged:
+            return False
+        if self._sharing and req.prefix_id is not None:
+            return True
+        return self._chunking and bucket_len(
+            len(req.prompt), self._page,
+            self.cfg.max_seq_len) > self.cfg.prefill_chunk
+
+    def _admit_chunked(self, slot: int, req: Request) -> None:
+        """Claim the slot but run NO model work yet: the prompt streams in
+        one chunk per engine step (:meth:`_prefill_tick`).  The slot's
+        device-side block-table row stays ZERO until activation — the row
+        rides into each chunk dispatch as an explicit operand instead, so
+        the masked decode tick's garbage writes for this (still inactive)
+        slot keep landing on the trash page and can never corrupt the
+        half-prefilled pages."""
+        self._admit_seq[slot] = self._next_seq()
+        self._slot_pos[slot] = 0
+        # the prefix cache unit is (prompt prefix, adapter): K/V runs
+        # through the slot's LoRA wk/wv deltas, so each adapter stream
+        # shares its own entry
+        pid = ((req.prefix_id, req.adapter_id)
+               if self._sharing and req.prefix_id is not None else None)
+        ctx = {"req": req, "prefix": pid, "mapped": False,
+               "capture_at": None, "building": None,
+               # recurrent state rides host-side between chunks — the
+               # decode tick garbage-advances every slot's dense rows, so
+               # the shared cache can't hold a half-prefilled recurrence
+               "state": self._init_chunk_state()}
+        if pid is not None and pid not in self._prefix:
+            # first request under this id builds the prefix; later submits
+            # are gated out until the entry exists
+            ctx["capture_at"] = req.prefix_len
+            ctx["building"] = pid
+            self._prefix_pending.add(pid)
+        self._prefill_ctx[slot] = ctx
+
+    def _prefill_tick(self) -> None:
+        """Run one bounded prefill chunk for every still-prefilling slot,
+        oldest first (FCFS progress under preemption pressure)."""
+        for slot in sorted(self._sched.prefilling_slots(),
+                           key=lambda s: self._admit_seq[s]):
+            if self._sched.slot_request(slot) is None:
+                continue          # preempted by an earlier slot's growth
+            self._run_chunk(slot)
+
+    def _chunk_step(self, chunk_len: int):
+        step = self._chunk_steps.get(chunk_len)
+        if step is None:
+            step = jax.jit(
+                make_paged_prefill_chunk(self.plan, chunk_len, self._page,
+                                         self._n_tbl,
+                                         lora_scale=self._lora_scale),
+                donate_argnums=(3,))
+            self._chunk_steps[chunk_len] = step
+        return step
+
+    def _init_chunk_state(self):
+        """Zero recurrent rows for a fresh chunked admission (None for
+        attention-only plans).  Overridden by the speculative engine to
+        carry the draft's rows too."""
+        if self._cap_fn is None:
+            return None
+        if self._zero_state is None:
+            self._zero_state = jax.tree.map(jnp.zeros_like,
+                                            self._cap_fn(self.cache, 0))
+        return self._zero_state
+
+    def _chunk_dispatch(self, req: Request, slot: int, tokens, row, pos0,
+                        valid, state):
+        """One jitted chunk dispatch; returns (logits, new recurrent
+        state).  Overridden by the speculative engine to prefill the draft
+        cache in the same fused call."""
+        tree = (None if self.registry is None
+                else self.registry.adapter_tree(req.adapter_id))
+        step = self._chunk_step(tokens.shape[1])
+        logits, self.cache, new_state = step(
+            self.params, tree, tokens, self.cache,
+            {} if state is None else state, row, pos0, valid)
+        return logits, new_state or None
+
+    def _activate(self, slot: int, req: Request, first) -> None:
+        """Flip a fully-prefilled slot live in the jitted tick state
+        (overridden by the speculative engine for its extra fields)."""
+        self._st = self._admit_update(
+            self._st, slot, first, len(req.prompt), req.adapter_id,
+            req.temperature, req.seed)
+
+    def _run_chunk(self, slot: int) -> None:
+        ctx = self._prefill_ctx[slot]
+        req = ctx["req"]
+        total = len(req.prompt)
+        # map an existing shared prefix before the first chunk: share its
+        # pages, clone its recurrent state, skip its prompt tokens entirely
+        if (ctx["prefix"] is not None and not ctx["mapped"]
+                and self._sched.slot_prefill_pos(slot) == 0
+                and ctx["prefix"] in self._prefix):
+            entry_state = self._map_prefix(slot, ctx["prefix"])
+            if entry_state is not None:
+                ctx["state"] = entry_state
+            ctx["mapped"] = True
+        pos0 = self._sched.slot_prefill_pos(slot)
+        cap_at = ctx["capture_at"]
+        if self._chunking:
+            chunk_len = self.cfg.prefill_chunk
+        else:
+            # prefix sharing without chunking: one bucket-sized span per
+            # call (compiled O(log) times, like monolithic prefill)
+            span_end = cap_at if (cap_at is not None and pos0 < cap_at) \
+                else total
+            chunk_len = bucket_len(span_end - pos0, self._page,
+                                   self.cfg.max_seq_len)
+        end = min(pos0 + chunk_len, total)
+        if cap_at is not None and pos0 < cap_at:
+            # stop EXACTLY at the prefix boundary so the captured pages and
+            # state hold the prefix alone — the boundary page is still
+            # untouched by this request's suffix
+            end = min(end, cap_at)
+        valid = end - pos0
+        if not self._grow_for_prefill(slot, end):
+            return                # slot preempted under pool pressure
+        self._cow_range(slot, pos0, end)
+        if self._sched.slot_request(slot) is None:
+            return                # a COW fork's allocation preempted us
+        tokens = np.zeros(chunk_len, np.int32)
+        tokens[:valid] = req.prompt[pos0:end]
+        row = np.zeros(self._n_tbl, np.int32)
+        owned = self.pages.slot_pages(slot)
+        row[:len(owned)] = owned
+        logits, ctx["state"] = self._chunk_dispatch(
+            req, slot, jnp.asarray(tokens[None]), jnp.asarray(row[None]),
+            pos0, valid, ctx["state"])
+        self._slot_pos[slot] = end
+        self.n_prefill_tokens += valid
+        self.n_prefill_chunks += 1
+        self._sched.advance_prefill(slot, valid)
+        if cap_at is not None and end == cap_at:
+            self._capture_prefix(slot, ctx)
+        if end == total:
+            first = self._first_token(logits[0], req)
+            # the streamed recurrent state finally lands in the big cache —
+            # from here the decode tick owns it
+            self._state_restore(slot, ctx["state"])
+            self._activate(slot, req, first)
+            self._set_table_row(slot, self.pages.slot_pages(slot))
+            self._sched.start_decode(slot)
+            self._t_first[req.uid] = time.perf_counter()
+            del self._prefill_ctx[slot]
+
+    def _grow_for_prefill(self, slot: int, end: int) -> bool:
+        """Back positions [0, end) with pages before a chunk dispatch;
+        reclaims (idle prefixes first, then newest slots) on exhaustion.
+        Returns False if this slot itself was preempted."""
+        need = pages_for(end, self._page)
+        while True:
+            try:
+                self.pages.ensure(slot, need)
+                return True
+            except PoolExhausted:
+                self._reclaim()
+                if self._sched.slot_request(slot) is None:
+                    return False
+
+    # -- prefix sharing -----------------------------------------------------
+
+    def _map_prefix(self, slot: int, pid):
+        """Share the entry's pages into the slot and hand back its
+        recurrent-state snapshot (which becomes the slot's streaming
+        state — NOT written to the cache until activation)."""
+        entry = self._prefix[pid]
+        self.pages.share(slot, entry.pages)
+        entry.active += 1
+        self._slot_prefix[slot] = pid
+        self._slot_pos[slot] = entry.n_tokens
+        self._sched.advance_prefill(slot, entry.n_tokens)
+        self.n_prefix_hits += 1
+        self.n_prefix_tokens_saved += entry.n_tokens
+        self.n_prefix_pages_shared += len(entry.pages)
+        return entry.state
+
+    def _capture_prefix(self, slot: int, ctx: Dict[str, Any]) -> None:
+        """The builder slot just committed exactly the prefix: retain its
+        pages under the registry entry and snapshot the recurrent state at
+        the boundary."""
+        req = ctx["req"]
+        pid = ctx["building"]
+        n_p = req.prefix_len
+        pages = self.pages.slot_pages(slot)[:pages_for(n_p, self._page)]
+        self.pages.retain(pages)
+        entry = PrefixEntry(tokens=np.asarray(req.prompt[:n_p]),
+                            n_tokens=n_p, pages=list(pages),
+                            state=ctx["state"], active=1)
+        self._prefix[pid] = entry
+        self._prefix_pending.discard(pid)
+        self._slot_prefix[slot] = pid
+        ctx["capture_at"] = None
+        ctx["building"] = None
+        ctx["mapped"] = True      # the builder holds its own prefix already
+
+    def _state_restore(self, slot: int, state) -> None:
+        if state is not None:
+            self.cache = self._res_fn(self.cache, state, slot)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        self.cache = self._copy_page_fn(self.cache,
+                                        jnp.int32(src), jnp.int32(dst))
+
+    def _write_entries(self, lo: int, hi: int):
+        """Logical block-table entries ANY attention layer writes for
+        positions [lo, hi) — full-attention layers write position-linear,
+        each windowed layer writes its bounded ring's low entries."""
+        ents = set()
+        for w in self._write_windows:
+            ring = ring_pages(w, self._n_tbl, self._page) * self._page
+            for p in range(max(lo, hi - ring), hi):
+                ents.add((p % ring) // self._page)
+        return ents
+
+    def _cow_range(self, slot: int, lo: int, hi: int) -> None:
+        """Copy-on-write sweep: before any dispatch that writes positions
+        [lo, hi) for ``slot``, fork every shared (refcount > 1) page one of
+        those writes would land on — sharers keep the original, this slot
+        gets a private device-copied clone."""
+        if not self._sharing or lo >= hi:
+            return
+        changed = False
+        owned = self.pages.slot_pages(slot)
+        for e in sorted(self._write_entries(lo, hi)):
+            if e >= len(owned):
+                continue   # unbacked entry → trash-page write (garbage
+                           # past the request's final length, never read)
+            if self.pages.refcount(owned[e]) <= 1:
+                continue
+            while True:
+                try:
+                    old, new = self.pages.fork(slot, e)
+                    break
+                except PoolExhausted:
+                    self._reclaim()
+                    if self._sched.slot_request(slot) is None:
+                        return
+            self._copy_page(old, new)
+            changed = True
+            owned = self.pages.slot_pages(slot)
+        if changed and slot not in self._prefill_ctx:
+            # prefilling slots keep their device row zero (the chunk
+            # dispatch carries the row explicitly); live slots re-upload
+            self._set_table_row(slot, self.pages.slot_pages(slot))
+
+    def release_prefix(self, prefix_id: str) -> bool:
+        """Drop a cached prefix — every adapter variant under the id (pages
+        return to the free list once no slot maps them).  Refuses while a
+        live slot still shares any of them."""
+        if not (self.paged and self._sharing):
+            return False
+        keys = [k for k in self._prefix if k[0] == prefix_id]
+        if not keys:
+            return False
+        for k in keys:
+            if self._prefix[k].active > 0:
+                raise ValueError(
+                    f"prefix {prefix_id!r} is mapped by "
+                    f"{self._prefix[k].active} live slot(s) — drain them "
+                    f"first")
+        for k in keys:
+            self.pages.release_ids(self._prefix[k].pages)
+            del self._prefix[k]
+        self._prefix_tokens.pop(prefix_id, None)
+        return True
+
+    def _reclaim(self) -> None:
+        """Free pages under pool pressure: drop an idle prefix entry first
+        (no live sharers — all its pages come straight back), else preempt
+        the NEWEST occupied slot.  Strictly decreases entries + occupied
+        slots, so exhaustion handling always terminates."""
+        for pid in list(self._prefix):
+            entry = self._prefix[pid]
+            if entry.active == 0:
+                self.pages.release_ids(entry.pages)
+                del self._prefix[pid]
+                return
+        victims = self._sched.occupied_slots()
+        assert victims, "pool exhausted with no occupied slots"
+        self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
+
+    # -- admission ----------------------------------------------------------
+
     def _admission_gate(self, req: Request) -> bool:
+        if self.paged and self._chunked_path(req):
+            pid = ((req.prefix_id, req.adapter_id)
+                   if self._sharing and req.prefix_id is not None else None)
+            if pid is not None and pid in self._prefix_pending:
+                # the prefix is mid-construction in another slot: admitting
+                # now would rebuild it — wait (FCFS holds; the builder
+                # either captures within a few steps or frees the id)
+                return False
+            start = 0
+            if pid is not None and pid in self._prefix:
+                start = self._prefix[pid].n_tokens
+            total = len(req.prompt)
+            first_end = min(start + (self.cfg.prefill_chunk
+                                     if self._chunking else total), total)
+            if req.prefix_len and start == 0:
+                first_end = min(first_end, req.prefix_len)
+            # fresh pages for the first chunk + one fork margin for a
+            # shared boundary page
+            need = pages_for(first_end, self._page) - pages_for(
+                start, self._page) + (1 if start else 0)
+            return self.pages.can_alloc(max(need, 0))
         sb = bucket_len(len(req.prompt), self._page, self.cfg.max_seq_len)
         return self.pages.can_alloc(pages_for(sb, self._page))
 
@@ -426,6 +881,14 @@ class ContinuousServeEngine:
 
     def _release_slot_pages(self, slot: int):
         self.pages.release(slot)
+        pid = self._slot_prefix.pop(slot, None)
+        if pid is not None and pid in self._prefix:
+            self._prefix[pid].active -= 1
+        ctx = self._prefill_ctx.pop(slot, None)
+        if ctx is not None and ctx.get("building"):
+            # the builder lost its slot before capturing — free the id so
+            # the (requeued-at-head) request can rebuild on re-admission
+            self._prefix_pending.discard(ctx["building"])
         self._st["block_table"] = self._st["block_table"].at[slot].set(0)
         self._slot_pos[slot] = 0
         self._admit_seq[slot] = -1
@@ -441,25 +904,36 @@ class ContinuousServeEngine:
 
     def _ensure_growth(self, lookahead: int):
         """Back positions ``slot_pos .. slot_pos+lookahead-1`` of every
-        active slot with real pages, oldest slot first; preempt the NEWEST
-        active slot on exhaustion (never deadlocks: the pool holds at least
-        one max-length request, so the oldest survivor always grows)."""
+        active slot with real pages, oldest slot first; reclaim (idle
+        prefix entries first, then the NEWEST occupied slot) on exhaustion
+        — never deadlocks: the pool holds at least one max-length request,
+        so the oldest survivor always grows.
+
+        The per-slot reservation is capped at the request's FINAL length
+        ``prompt + max_new_tokens``: a speculative k-round batch's lookahead
+        (k·γ) can overshoot a nearly-finished request's real footprint, and
+        rows committed past its end land on the trash page through the
+        block table's all-zero tail anyway (never read — the slot emits
+        nothing after its budget).  Without the cap an autosized pool at
+        full occupancy preempts live traffic to back garbage
+        (regression-tested in tests/test_prefix.py)."""
         order = sorted(self._sched.active_slots(),
                        key=lambda s: self._admit_seq[s])
         for slot in order:
-            if self._sched.slot_request(slot) is None:
+            req = self._sched.slot_request(slot)
+            if req is None:
                 continue                      # preempted below, earlier
-            need = pages_for(min(self._slot_pos[slot] + lookahead,
-                                 self.cfg.max_seq_len), self._page)
+            limit = min(len(req.prompt) + req.max_new_tokens,
+                        self.cfg.max_seq_len)
+            need = pages_for(min(self._slot_pos[slot] + lookahead, limit),
+                             self._page)
             while True:
                 try:
                     new = self.pages.ensure(slot, need)
                     break
                 except PoolExhausted:
-                    victim = max(self._sched.active_slots(),
-                                 key=lambda s: self._admit_seq[s])
-                    self._preempt(victim)
-                    if victim == slot:
+                    self._reclaim()
+                    if self._sched.slot_request(slot) is None:
                         new = []
                         break
             if new:
@@ -507,6 +981,7 @@ class ContinuousServeEngine:
             self._st, slot, first, len(req.prompt), req.adapter_id,
             req.temperature, req.seed)
         self.n_prefill_tokens += len(req.prompt)
+        self._t_first[req.uid] = time.perf_counter()
 
     @staticmethod
     def _first_token(logits, req: Request):
@@ -532,8 +1007,13 @@ class ContinuousServeEngine:
         self.n_completed += 1
         name = (self.registry.name_of(req.adapter_id)
                 if self.registry is not None else None)
+        t_end = time.perf_counter()
+        t_sub = self._t_submit.pop(req.uid, t_end)
+        t_first = self._t_first.pop(req.uid, t_end)
         return RequestResult(uid=req.uid, tokens=row, adapter=name,
-                             prompt_len=len(req.prompt), n_generated=n)
+                             prompt_len=len(req.prompt), n_generated=n,
+                             ttft_s=max(t_first - t_sub, 0.0),
+                             latency_s=max(t_end - t_sub, 0.0))
 
 
 def _sample(logits, temperature, top_p, rng):

@@ -18,14 +18,24 @@ decides which pool pages back which slot:
     can never deadlock;
   * eviction returns all of a slot's pages to the free list.
 
+Every page carries a REFCOUNT so pages can be shared copy-on-write across
+slots (system-prompt prefix sharing): :meth:`PageAllocator.share` maps an
+existing page into another slot's table (refcount + 1, zero new pages),
+:meth:`PageAllocator.retain` lets a non-slot owner (a prefix cache entry)
+keep pages alive across evictions, and :meth:`PageAllocator.fork` backs a
+slot's logical entry with a fresh private copy before a divergent write.
+A page returns to the free list only when its refcount reaches zero, so a
+shared prefix survives every sharer's eviction.
+
 Separating policy from device state keeps the allocator unit-testable and
 the accounting honest: :attr:`PageAllocator.peak_in_use` is the real
-high-water HBM demand of a workload, which is what the serving benchmark
-reports against the dense engine's ``max_slots × max_seq_len`` reservation.
+high-water HBM demand of a workload (shared pages count ONCE — that is the
+prefix-sharing saving), which is what the serving benchmark reports against
+the dense engine's ``max_slots × max_seq_len`` reservation.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Iterable, List, Tuple
 
 TRASH_PAGE = 0
 
@@ -53,8 +63,27 @@ def bucket_len(n: int, page_size: int, max_seq_len: int) -> int:
     return min(b, -(-max_seq_len // max(page_size, 1)) * max(page_size, 1))
 
 
+def auto_pool_pages(max_slots: int, max_seq_len: int, page_size: int,
+                    reduction: float = 2.2) -> int:
+    """Auto-size a page pool ``reduction``× below the dense engine's
+    ``max_slots × max_seq_len`` reservation.  The floor is one max-length
+    request plus the trash page — below that the engine would preempt
+    forever.
+
+    γ-lookahead audit (speculative serving): the pool needs NO extra margin
+    for speculative rounds.  A round's committed rows past a request's final
+    ``prompt + max_new_tokens`` land on the trash page through the block
+    table's all-zero tail, so the engine's growth pass caps its per-slot
+    reservation at that limit (see ``ContinuousServeEngine._ensure_growth``)
+    — a pool that fits the workload's true footprint never preempts
+    mid-round, which ``tests/test_prefix.py`` regression-checks."""
+    n_tbl = pages_for(max_seq_len, page_size)
+    return max(n_tbl + 1, int(max_slots * n_tbl / reduction) + 1)
+
+
 class PageAllocator:
-    """Free-list allocator over pool pages 1..n_pages-1 (0 is trash)."""
+    """Refcounting free-list allocator over pool pages 1..n_pages-1 (0 is
+    the trash page, never handed out and never freed)."""
 
     def __init__(self, n_pages: int, page_size: int, max_pages_per_slot: int,
                  max_slots: int):
@@ -65,6 +94,7 @@ class PageAllocator:
         # LIFO free list: recently-freed pages are re-used first (friendlier
         # to whatever cache locality the pool enjoys on device)
         self._free: List[int] = list(range(n_pages - 1, TRASH_PAGE, -1))
+        self._ref: List[int] = [0] * n_pages
         self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
         self.peak_in_use = 0
 
@@ -84,10 +114,24 @@ class PageAllocator:
     def n_slot_pages(self, slot: int) -> int:
         return len(self._slot_pages[slot])
 
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
     # -- allocation ----------------------------------------------------------
 
     def can_alloc(self, n: int) -> bool:
         return len(self._free) >= n
+
+    def _take(self) -> int:
+        if not self._free:
+            raise PoolExhausted("no free pages")
+        pid = self._free.pop()
+        assert self._ref[pid] == 0, (pid, self._ref[pid])
+        self._ref[pid] = 1
+        return pid
+
+    def _bump_peak(self):
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
 
     def alloc(self, slot: int, n: int) -> List[int]:
         """Append ``n`` fresh pages to ``slot``; raises :class:`PoolExhausted`
@@ -96,9 +140,9 @@ class PageAllocator:
         assert len(owned) + n <= self.max_pages_per_slot, (slot, len(owned), n)
         if len(self._free) < n:
             raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
-        ids = [self._free.pop() for _ in range(n)]
+        ids = [self._take() for _ in range(n)]
         owned.extend(ids)
-        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        self._bump_peak()
         return ids
 
     def ensure(self, slot: int, n_logical: int) -> List[int]:
@@ -110,11 +154,62 @@ class PageAllocator:
             return []
         return self.alloc(slot, short)
 
-    def release(self, slot: int) -> int:
-        """Return all of a slot's pages to the free list (eviction or
-        preemption); returns how many were freed."""
+    # -- sharing / copy-on-write ---------------------------------------------
+
+    def share(self, slot: int, ids: Iterable[int]) -> None:
+        """Map already-allocated pages into ``slot``'s logical table (appended
+        in order) WITHOUT copying: each page's refcount rises by one.  The
+        caller must treat shared pages (refcount > 1) as read-only and
+        :meth:`fork` before any divergent write."""
+        ids = list(ids)
         owned = self._slot_pages[slot]
-        n = len(owned)
-        self._free.extend(reversed(owned))
+        assert len(owned) + len(ids) <= self.max_pages_per_slot
+        for pid in ids:
+            assert pid != TRASH_PAGE and self._ref[pid] >= 1, (pid, self._ref[pid])
+            self._ref[pid] += 1
+        owned.extend(ids)
+
+    def retain(self, ids: Iterable[int]) -> None:
+        """Take a non-slot reference on pages (a prefix cache entry keeping
+        its pages alive across sharer evictions)."""
+        for pid in ids:
+            assert pid != TRASH_PAGE and self._ref[pid] >= 1, (pid, self._ref[pid])
+            self._ref[pid] += 1
+
+    def release_ids(self, ids: Iterable[int]) -> int:
+        """Drop one reference per page (the inverse of :meth:`retain`);
+        pages reaching refcount zero return to the free list.  Returns how
+        many were actually freed."""
+        freed = 0
+        for pid in ids:
+            assert self._ref[pid] >= 1, (pid, self._ref[pid])
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+                freed += 1
+        return freed
+
+    def fork(self, slot: int, logical: int) -> Tuple[int, int]:
+        """Copy-on-write: back ``slot``'s ``logical`` table entry with a fresh
+        private page.  The old page loses one reference (it stays alive for
+        its other sharers); the caller must device-copy old → new before the
+        divergent write lands.  Returns ``(old_id, new_id)``."""
+        owned = self._slot_pages[slot]
+        old = owned[logical]
+        assert self._ref[old] >= 2, (slot, logical, old, self._ref[old])
+        new = self._take()
+        self._ref[old] -= 1
+        owned[logical] = new
+        self._bump_peak()
+        return old, new
+
+    # -- release -------------------------------------------------------------
+
+    def release(self, slot: int) -> int:
+        """Drop the slot's reference on all its pages (eviction or
+        preemption); pages reaching refcount zero return to the free list.
+        Returns how many were freed."""
+        owned = self._slot_pages[slot]
+        freed = self.release_ids(reversed(owned))
         owned.clear()
-        return n
+        return freed

@@ -11,6 +11,12 @@ Policy (vLLM-style admit-on-free-slot, FCFS):
   * Before every decode tick the engine drains ``next_admission()`` — one
     (slot, request) pair per free slot — and prefetches each request's prompt
     directly into its slot's cache row while the other slots are untouched.
+  * A slot may be admitted in PREFILLING state (chunked prefill: long
+    prompts stream into the cache one page-aligned chunk per engine step,
+    interleaved with decode ticks).  A prefilling slot occupies its slot and
+    tracks ``prefill_pos`` (prompt tokens committed so far) but neither
+    ticks nor counts as decodable until the engine calls
+    :meth:`start_decode` after the final chunk produced token #1.
   * A slot is evicted the moment its request has produced all its tokens;
     the freed slot is eligible for admission before the very next tick.
 
@@ -23,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,6 +44,8 @@ class Request:
     temperature: float = 0.0
     seed: int = 0
     speculative: bool = True           # opt-out honored by the spec engine
+    prefix_id: Optional[str] = None    # shared-prefix handle (COW paging)
+    prefix_len: int = 0                # prompt tokens covered by the prefix
 
 
 @dataclasses.dataclass
@@ -47,6 +55,9 @@ class RequestResult:
     adapter: Optional[str]
     prompt_len: int
     n_generated: int
+    ttft_s: float = 0.0                # submit → first-token DISPATCH (host
+                                       # wall time; the engine never syncs)
+    latency_s: float = 0.0             # submit → eviction (host wall time)
 
 
 @dataclasses.dataclass
@@ -54,6 +65,8 @@ class _Slot:
     request: Optional[Request] = None
     steps_left: int = 0                # decode ticks until completion
     generated: int = 0                 # tokens produced so far (incl. prefill's)
+    prefilling: bool = False           # chunked prefill still streaming
+    prefill_pos: int = 0               # prompt tokens committed so far
 
     @property
     def free(self) -> bool:
@@ -79,14 +92,22 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
-    def next_admission(self, gate=None) -> Optional[Tuple[int, Request]]:
+    def next_admission(
+        self, gate=None,
+        prefill: Optional[Callable[[Request], bool]] = None,
+    ) -> Optional[Tuple[int, Request]]:
         """Pop the next queued request and assign it the lowest free slot.
         Returns None when the queue is empty or all slots are busy.
 
         ``gate(request) -> bool`` lets the engine veto the admission on
         resources the scheduler can't see (free KV pages).  Admission stays
         strictly FCFS: if the HEAD request is gated out, nothing behind it
-        is considered — skipping ahead would starve big prompts forever."""
+        is considered — skipping ahead would starve big prompts forever.
+
+        ``prefill(request) -> bool`` marks the slot PREFILLING instead of
+        decodable (chunked prefill): the engine streams the prompt in via
+        :meth:`advance_prefill` and flips the slot live with
+        :meth:`start_decode` once the final chunk produced token #1."""
         if not self._queue:
             return None
         for i, slot in enumerate(self._slots):
@@ -95,10 +116,17 @@ class Scheduler:
                     return None
                 req = self._queue.popleft()
                 slot.request = req
-                # prefill itself yields token #1; the remaining tokens come
-                # one per decode tick
-                slot.generated = 1
-                slot.steps_left = req.max_new_tokens - 1
+                slot.prefill_pos = 0
+                if prefill is not None and prefill(req):
+                    slot.prefilling = True
+                    slot.generated = 0
+                    slot.steps_left = req.max_new_tokens
+                else:
+                    # prefill itself yields token #1; the remaining tokens
+                    # come one per decode tick
+                    slot.prefilling = False
+                    slot.generated = 1
+                    slot.steps_left = req.max_new_tokens - 1
                 return i, req
         return None
 
@@ -114,24 +142,60 @@ class Scheduler:
         s.request = None
         s.steps_left = 0
         s.generated = 0
+        s.prefilling = False
+        s.prefill_pos = 0
         self._queue.appendleft(req)
         return req
 
+    # -- chunked prefill ----------------------------------------------------
+
+    def advance_prefill(self, slot: int, n: int) -> None:
+        """Account ``n`` prompt tokens committed into the slot's cache by a
+        prefill chunk (or mapped from a shared prefix)."""
+        s = self._slots[slot]
+        assert s.request is not None and s.prefilling, slot
+        s.prefill_pos += n
+
+    def start_decode(self, slot: int) -> None:
+        """Flip a PREFILLING slot live: the final chunk just produced token
+        #1, decode ticks take it from here."""
+        s = self._slots[slot]
+        assert s.request is not None and s.prefilling, slot
+        assert s.prefill_pos == len(s.request.prompt), (
+            slot, s.prefill_pos, len(s.request.prompt))
+        s.prefilling = False
+        s.generated = 1
+        s.steps_left = s.request.max_new_tokens - 1
+
+    def slot_prefill_pos(self, slot: int) -> int:
+        return self._slots[slot].prefill_pos
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots)
+                if not s.free and s.prefilling]
+
     # -- decode ticks -------------------------------------------------------
 
-    def active_slots(self) -> List[int]:
+    def occupied_slots(self) -> List[int]:
+        """Slots holding a request — decodable OR still prefilling (the
+        preemption victim pool)."""
         return [i for i, s in enumerate(self._slots) if not s.free]
+
+    def active_slots(self) -> List[int]:
+        """Decodable slots (occupied and past prefill)."""
+        return [i for i, s in enumerate(self._slots)
+                if not s.free and not s.prefilling]
 
     def completed_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots)
-                if not s.free and s.steps_left <= 0]
+                if not s.free and not s.prefilling and s.steps_left <= 0]
 
     def tick(self) -> List[int]:
         """Account one decode step for every active slot; returns the slots
         that just finished (ready for eviction)."""
         done = []
         for i, s in enumerate(self._slots):
-            if s.free or s.steps_left <= 0:
+            if s.free or s.prefilling or s.steps_left <= 0:
                 continue
             s.steps_left -= 1
             s.generated += 1
@@ -157,6 +221,8 @@ class Scheduler:
         s.request = None
         s.steps_left = 0
         s.generated = 0
+        s.prefilling = False
+        s.prefill_pos = 0
         return req
 
     # -- introspection ------------------------------------------------------
@@ -169,6 +235,9 @@ class Scheduler:
 
     def slot_request(self, slot: int) -> Optional[Request]:
         return self._slots[slot].request
+
+    def slot_prefilling(self, slot: int) -> bool:
+        return self._slots[slot].prefilling
 
     @property
     def queued(self) -> int:

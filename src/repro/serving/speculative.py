@@ -36,7 +36,8 @@ plain traffic through this engine is bit-identical to
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,11 +45,12 @@ import jax.numpy as jnp
 from repro.configs.base import ServeConfig
 from repro.distributed import sharding
 from repro.models.model import init_cache, init_paged_cache, ring_pages
-from repro.runtime.steps import (attn_window_map, make_draft_loop,
-                                 make_paged_draft_loop,
+from repro.runtime.steps import (attn_window_map, make_copy_page,
+                                 make_draft_loop, make_paged_draft_loop,
+                                 make_paged_prefill_chunk,
                                  make_paged_prefill_into_slot,
-                                 make_prefill_into_slot, make_verify_step,
-                                 request_key)
+                                 make_prefill_into_slot, make_state_ops,
+                                 make_verify_step, request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.draft import DraftModel
 from repro.serving.engine import ContinuousServeEngine, _null
@@ -647,6 +649,20 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             self.draft_cache = init_paged_cache(
                 draft.plan, S, self.pages.n_pages, self._page,
                 jnp.dtype(cfg.kv_cache_dtype))
+            # the draft loop writes through the SAME block table — its ring
+            # patterns join the pre-write COW sweep, and a forked page id
+            # must be cloned in the draft's pools too
+            wmap_d = attn_window_map(draft.plan)
+            self._write_windows = sorted(
+                set(self._write_windows)
+                | {w for stw in wmap_d.values() for w in stw.values()})
+            if self._sharing:
+                self._copy_page_fn_d = make_copy_page(draft.plan)
+            if self._sharing or self._chunking:
+                self._cap_fn_d, self._res_fn_d = make_state_ops(draft.plan)
+            else:
+                self._cap_fn_d = self._res_fn_d = None
+            self._chunk_pair_steps: Dict[int, Any] = {}
         else:
             self.draft_cache = init_cache(draft.plan, S, cfg.max_seq_len,
                                           jnp.dtype(cfg.kv_cache_dtype))
@@ -758,6 +774,80 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             self._prefill_pair_steps[bucket] = step
         return step
 
+    def _chunk_pair_step(self, chunk_len: int):
+        """Fused target + draft chunk prefill (one dispatch per chunk, same
+        economics as the fused admission prefill)."""
+        step = self._chunk_pair_steps.get(chunk_len)
+        if step is None:
+            tgt = make_paged_prefill_chunk(self.plan, chunk_len, self._page,
+                                           self._n_tbl,
+                                           lora_scale=self._lora_scale)
+            dft = make_paged_prefill_chunk(self.draft.plan, chunk_len,
+                                           self._page, self._n_tbl,
+                                           lora_scale=self._draft_lora_scale)
+
+            def both(params, tree, dparams, dtree, tokens, cache, dcache,
+                     state_t, state_d, row, pos0, valid):
+                logits, cache, ns_t = tgt(params, tree, tokens, cache,
+                                          state_t, row, pos0, valid)
+                _, dcache, ns_d = dft(dparams, dtree, tokens, dcache,
+                                      state_d, row, pos0, valid)
+                return logits, cache, dcache, ns_t, ns_d
+
+            step = jax.jit(both, donate_argnums=(5, 6))
+            self._chunk_pair_steps[chunk_len] = step
+        return step
+
+    # -- chunked prefill / prefix sharing hooks (draft cache rides along) ----
+
+    def _init_chunk_state(self):
+        zt = super()._init_chunk_state()
+        zd = None
+        if self._cap_fn_d is not None:
+            if getattr(self, "_zero_state_d", None) is None:
+                self._zero_state_d = jax.tree.map(
+                    jnp.zeros_like, self._cap_fn_d(self.draft_cache, 0))
+            zd = self._zero_state_d
+        if zt is None and zd is None:
+            return None
+        return {"t": zt, "d": zd}
+
+    def _chunk_dispatch(self, req, slot, tokens, row, pos0, valid, state):
+        tree = (None if self.registry is None
+                else self.registry.adapter_tree(req.adapter_id))
+        dtree = (None if self._draft_base_only
+                 else self.draft.adapter_tree(req.adapter_id))
+        state = state or {"t": None, "d": None}
+        step = self._chunk_pair_step(tokens.shape[1])
+        logits, self.cache, self.draft_cache, ns_t, ns_d = step(
+            self.params, tree, self.draft.params, dtree, tokens, self.cache,
+            self.draft_cache, state["t"] or {}, state["d"] or {},
+            row, pos0, valid)
+        if not ns_t and not ns_d:
+            return logits, None
+        return logits, {"t": ns_t or None, "d": ns_d or None}
+
+    def _activate(self, slot, req, first):
+        self._st = self._admit_update_spec(
+            self._st, slot, first, len(req.prompt), req.adapter_id,
+            req.temperature, req.seed, req.max_new_tokens, req.speculative)
+
+    def _state_restore(self, slot, state):
+        if state is None:
+            return
+        if state["t"] is not None:
+            self.cache = self._res_fn(self.cache, state["t"], slot)
+        if state["d"] is not None:
+            self.draft_cache = self._res_fn_d(self.draft_cache, state["d"],
+                                              slot)
+
+    def _copy_page(self, src, dst):
+        self.cache = self._copy_page_fn(self.cache, jnp.int32(src),
+                                        jnp.int32(dst))
+        self.draft_cache = self._copy_page_fn_d(self.draft_cache,
+                                                jnp.int32(src),
+                                                jnp.int32(dst))
+
     @property
     def acceptance_rate(self) -> float:
         """Fraction of draft proposals the target accepted (speculative
@@ -798,6 +888,7 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             self._st, slot, first, len(req.prompt), req.adapter_id,
             req.temperature, req.seed, req.max_new_tokens, req.speculative)
         self.n_prefill_tokens += len(req.prompt)
+        self._t_first[req.uid] = time.perf_counter()
 
     def step(self) -> List[RequestResult]:
         """Admit whatever fits, run a batch of draft→verify→commit rounds,
@@ -806,6 +897,7 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
                else _null())
         done: List[RequestResult] = []
+        progressive = self.paged and (self._chunking or self._sharing)
         with ctx:
             if self.paged:
                 # grow existing slots one round's worth before admitting, so
@@ -814,10 +906,19 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 self._ensure_growth(lookahead=self.gamma)
             while True:
                 adm = self._sched.next_admission(
-                    gate=self._admission_gate if self.paged else None)
+                    gate=self._admission_gate if self.paged else None,
+                    prefill=self._chunked_path if progressive else None)
                 if adm is None:
                     break
-                self._admit(*adm)
+                slot, req = adm
+                if progressive and self._chunked_path(req):
+                    self._admit_chunked(slot, req)
+                else:
+                    self._admit(slot, req)
+            if progressive:
+                # one bounded prefill chunk per streaming slot between
+                # speculative rounds — rounds never stall behind a prompt
+                self._prefill_tick()
             for slot in self._sched.completed_slots():
                 done.append(self._finalize(slot))
             active = self._sched.active_slots()
@@ -834,8 +935,19 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 if self.paged:
                     # every committed row of the k-round batch needs a real
                     # page behind it BEFORE the batch runs (acceptance is
-                    # unknowable on host, so back the worst case k·γ)
+                    # unknowable on host, so back the worst case k·γ,
+                    # capped per slot at its final length)
                     self._ensure_growth(lookahead=k * self.gamma)
+                    active = self._sched.active_slots()
+                if self._sharing:
+                    # verify commits and draft-loop writes must never land
+                    # on a shared page — fork every shared entry the batch's
+                    # worst-case k·γ positions (incl. windowed rings) touch
+                    for slot in list(active):
+                        if self._sched.slot_request(slot) is not None:
+                            self._cow_range(
+                                slot, self._slot_pos[slot],
+                                self._slot_pos[slot] + k * self.gamma)
                     active = self._sched.active_slots()
                 if not active:
                     return done
@@ -850,6 +962,8 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                     infos.append(info)
                 self._n_ticks += k
                 self.n_rounds += k
+                if self._sched.prefilling_slots():
+                    self.n_ticks_during_prefill += k
                 batch_accepted = batch_proposed = 0
                 for info in jax.device_get(infos):
                     batch_proposed += int(info["proposed"].sum())
