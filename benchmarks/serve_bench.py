@@ -130,6 +130,26 @@ def _submit_and_drain(eng, work):
     return sum(r.n_generated for r in done.values()), done
 
 
+def _logical_bytes(tree):
+    """Bytes of the pytree's GLOBAL (logical) arrays — what one device
+    would hold if everything were replicated/unsharded."""
+    return sum(a.nbytes for a in jax.tree.leaves(tree)
+               if hasattr(a, "nbytes"))
+
+
+def _per_device_bytes(tree):
+    """Bytes actually RESIDENT per device: the largest addressable shard
+    of each array.  Equals :func:`_logical_bytes` for replicated arrays;
+    smaller by the shard factor for mesh-sharded ones."""
+    total = 0
+    for a in jax.tree.leaves(tree):
+        if hasattr(a, "addressable_shards"):
+            total += max(s.data.nbytes for s in a.addressable_shards)
+        elif hasattr(a, "nbytes"):
+            total += a.nbytes
+    return total
+
+
 def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q))
 
@@ -187,6 +207,17 @@ def validate_results(results):
     PR dropping the per-request TTFT fields)."""
     assert results.get("bench") == "serving", results.get("bench")
     assert isinstance(results.get("config"), dict)
+    mesh = results.get("mesh")
+    assert isinstance(mesh, dict), "mesh section missing"
+    for key in ("mesh_shape", "devices", "tok_s_aggregate",
+                "tok_s_per_device", "hbm_bytes_replicated",
+                "hbm_bytes_per_device"):
+        assert key in mesh, f"mesh missing {key}"
+    assert (isinstance(mesh["mesh_shape"], list)
+            and len(mesh["mesh_shape"]) == 2), mesh["mesh_shape"]
+    assert mesh["devices"] == mesh["mesh_shape"][0] * mesh["mesh_shape"][1]
+    # sharding can only ever REDUCE per-device residency
+    assert mesh["hbm_bytes_per_device"] <= mesh["hbm_bytes_replicated"]
     engines = results.get("engines")
     assert isinstance(engines, dict) and engines, "no engines recorded"
     for name, stats in engines.items():
@@ -314,7 +345,7 @@ def run_latency(plan, params, registry, work, slots, lora_scale, lat,
             time.sleep(max(arrivals[i] - now, 0.0))
             continue
         done = eng.step()
-        jax.block_until_ready(eng._st["out_buf"])
+        jax.block_until_ready(eng._st.out_buf)
         now = time.perf_counter() - t0
         # stamp at the barrier: a first token "exists" for the user only
         # once the step's device work finished
@@ -405,9 +436,17 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI guard: tiny model, dense + paged "
                          "engines only, schema-check the emitted JSON")
+    ap.add_argument("--mesh", type=str, default="1,1", metavar="DATA,MODEL",
+                    help="serve the continuous/paged engines over a "
+                         "DATAxMODEL device mesh (see launch/serve.py); "
+                         "1,1 = single-device")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
+    try:
+        mesh_data, mesh_model = (int(v) for v in args.mesh.split(","))
+    except ValueError:
+        ap.error("--mesh wants two comma-separated ints, e.g. --mesh 1,2")
     if get_smoke(args.arch).family != "dense":
         ap.error(f"--arch {args.arch}: the lossless-prune draft construction "
                  "covers dense families only (mlp + attn blocks)")
@@ -469,8 +508,10 @@ def main():
           f"{sorted({n for _, _, n in work})}, 2 adapters")
 
     n_timed = 1 if args.smoke else 3
+    mesh_kw = dict(mesh_data=mesh_data, mesh_model=mesh_model)
     cont_tok, cont_s, cont_eng, cont_res = run_continuous(
-        plan, params, registry, work, args.slots, lora_cfg.scale, n_timed)
+        plan, params, registry, work, args.slots, lora_cfg.scale, n_timed,
+        **mesh_kw)
     cont_tps = cont_tok / cont_s
 
     # paged pool auto-sizing (pages.auto_pool_pages): aim ~2.2x below the
@@ -481,7 +522,8 @@ def main():
                                                 args.page_size)
     paged_tok, paged_s, paged_eng, paged_res = run_continuous(
         plan, params, registry, work, args.slots, lora_cfg.scale, n_timed,
-        kv_paging=True, kv_page_size=args.page_size, kv_pages=kv_pages)
+        kv_paging=True, kv_page_size=args.page_size, kv_pages=kv_pages,
+        **mesh_kw)
     paged_tps = paged_tok / paged_s
     dense_kv = cont_eng.kv_cache_bytes()
     paged_kv = paged_eng.kv_cache_bytes()
@@ -496,6 +538,29 @@ def main():
           f"paged {paged_kv / 1e6:.2f} MB "
           f"({dense_kv / paged_kv:.2f}x smaller; peak "
           f"{paged_eng.pages.peak_in_use}/{kv_pages - 1} pages used)")
+
+    # ---- mesh accounting (single-device: shape 1x1, both byte columns
+    # equal, per-device == aggregate tok/s) ----
+    n_dev = mesh_data * mesh_model
+    state = {"params": paged_eng.params, "cache": paged_eng.cache}
+    repl_b = _logical_bytes(state)
+    shard_b = _per_device_bytes(state)
+    mesh_stats = {
+        "mesh_shape": [mesh_data, mesh_model],
+        "devices": n_dev,
+        "tok_s_aggregate": round(paged_tps, 1),
+        "tok_s_per_device": round(paged_tps / n_dev, 1),
+        # weights + paged KV pools as one device would hold them fully
+        # replicated, vs the largest shard actually resident per device
+        "hbm_bytes_replicated": repl_b,
+        "hbm_bytes_per_device": shard_b,
+    }
+    if n_dev > 1:
+        print(f"[serve_bench] mesh {mesh_data}x{mesh_model}: "
+              f"{paged_tps / n_dev:7.1f} tok/s/device "
+              f"({paged_tps:.1f} aggregate); HBM/device "
+              f"{shard_b / 1e6:.2f} MB vs {repl_b / 1e6:.2f} MB replicated "
+              f"({repl_b / max(shard_b, 1):.2f}x smaller)")
 
     # ---- chunked-prefill tail latency (long-prompt mixed traffic) ----
     # open-loop arrivals: the tail that matters is the SHORT interactive
@@ -565,6 +630,7 @@ def main():
             "page_size": args.page_size, "kv_pages": kv_pages,
             "kv_pages_auto": args.kv_pages == 0,
         },
+        "mesh": mesh_stats,
         "engines": {
             "continuous": {"tokens": cont_tok, "seconds": round(cont_s, 4),
                            "tok_s": round(cont_tps, 1),

@@ -315,6 +315,13 @@ class ServeConfig:
     # block tables; the partially-filled boundary page forks on the first
     # divergent write, eviction decrements refcounts instead of freeing
     prefix_sharing: bool = False
+    # serving mesh (repro.serving.engine / launch/serve.py --mesh):
+    # data × model device grid the engine builds when no explicit Mesh is
+    # passed.  1 × 1 (default) means no mesh at all — single-device serving,
+    # the whole sharding path compiles away.  See the TickState sharding
+    # table in repro/serving/engine.py for what lands on which axis.
+    mesh_data: int = 1               # pure DP (dense slot axis, activations)
+    mesh_model: int = 1              # tensor/expert parallel (heads, FFN, EP)
 
 
 def round_to(x: int, mult: int) -> int:

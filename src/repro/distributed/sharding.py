@@ -25,6 +25,7 @@ shapes whose widths changed:
 from __future__ import annotations
 
 import contextlib
+import threading
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -36,22 +37,45 @@ from repro.quant.nf4 import QTensor
 # ---------------------------------------------------------------------------
 # Current-mesh context (lets model code apply constraints without plumbing)
 # ---------------------------------------------------------------------------
+# THREAD-LOCAL: a serving engine's host loop and a bench warmup (or a second
+# engine on another thread) can interleave ``use_mesh`` scopes; a module-
+# global dict would let one thread's __exit__ clobber the other's mesh
+# mid-trace.  Each thread gets its own context, seeded from the defaults —
+# entering a scope on thread A is invisible on thread B (regression-tested
+# in tests/test_mesh_serving.py).
 
-_CURRENT: dict = {"mesh": None, "seq_shard": False}
+_DEFAULTS = {"mesh": None, "seq_shard": False, "head_shard": False}
+_TLS = threading.local()
+
+
+def _ctx() -> dict:
+    state = getattr(_TLS, "state", None)
+    if state is None:
+        state = dict(_DEFAULTS)
+        _TLS.state = state
+    return state
 
 
 @contextlib.contextmanager
-def use_mesh(mesh: Optional[Mesh], seq_shard: bool = False):
-    prev = dict(_CURRENT)
-    _CURRENT.update(mesh=mesh, seq_shard=seq_shard)
+def use_mesh(mesh: Optional[Mesh], seq_shard: bool = False,
+             head_shard: bool = False):
+    """Scope the current thread's mesh context.  ``seq_shard`` turns on
+    sequence sharding of the residual stream between blocks; ``head_shard``
+    turns on head-axis (tensor-parallel) activation constraints — training
+    leaves it off by default (measured slightly negative on yi-34b train_4k,
+    see §Perf iter 3), serving engines turn it on for decode/verify/chunk."""
+    state = _ctx()
+    prev = dict(state)
+    state.update(mesh=mesh, seq_shard=seq_shard, head_shard=head_shard)
     try:
         yield
     finally:
-        _CURRENT.update(prev)
+        state.clear()
+        state.update(prev)
 
 
 def current_mesh() -> Optional[Mesh]:
-    return _CURRENT["mesh"]
+    return _ctx()["mesh"]
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -68,23 +92,28 @@ def dp_size(mesh: Mesh) -> int:
 
 def residual_constraint(x):
     """Applied between scanned blocks (wired into repro.models.model)."""
-    mesh = _CURRENT["mesh"]
+    ctx = _ctx()
+    mesh = ctx["mesh"]
     if mesh is None or x.ndim != 3:
         return x
     b, s, d = x.shape
     spec = [None, None, None]
     if b % dp_size(mesh) == 0:
         spec[0] = dp_axes(mesh)
-    if _CURRENT["seq_shard"] and s % model_size(mesh) == 0 and s > 1:
+    if ctx["seq_shard"] and s % model_size(mesh) == 0 and s > 1:
         spec[1] = "model"
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
 
 
 def head_constraint(x):
     """(B, S, H, D) attention activations: heads → model (GSPMD pads when the
-    head count doesn't divide, e.g. yi-34b's 56 heads on a 16-way axis)."""
-    mesh = _CURRENT["mesh"]
-    if mesh is None or x.ndim != 4 or model_size(mesh) == 1:
+    head count doesn't divide, e.g. yi-34b's 56 heads on a 16-way axis).
+    Gated on the ``head_shard`` context flag — training leaves it off by
+    default, serving turns it on (tensor-parallel decode/verify/chunk)."""
+    ctx = _ctx()
+    mesh = ctx["mesh"]
+    if (mesh is None or not ctx["head_shard"] or x.ndim != 4
+            or model_size(mesh) == 1):
         return x
     spec = [None, None, "model", None]
     if x.shape[0] % dp_size(mesh) == 0:
@@ -92,9 +121,22 @@ def head_constraint(x):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
 
 
+def expert_constraint(x):
+    """(E, C, D) MoE capacity buffers: experts → model (expert parallelism).
+    Each expert's stacked SwiGLU then runs wholly on one shard — numerics
+    identical to single-device (no contraction is split)."""
+    mesh = _ctx()["mesh"]
+    m = 1 if mesh is None else model_size(mesh)
+    if mesh is None or x.ndim != 3 or m == 1:
+        return x
+    if x.shape[0] % m or x.shape[0] < m:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P("model")))
+
+
 def logits_constraint(x):
     """(B, S, V) fp32 logits: vocab → model (loss logsumexp psums per shard)."""
-    mesh = _CURRENT["mesh"]
+    mesh = _ctx()["mesh"]
     if mesh is None or x.ndim < 2 or model_size(mesh) == 1:
         return x
     spec = [None] * x.ndim
@@ -105,14 +147,17 @@ def logits_constraint(x):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
 
 
-def install_residual_constraint(head_shard: bool = False):
+def install_residual_constraint():
+    """Install the activation-constraint hooks into repro.models.model.
+    Every hook is context-gated (no-op without a ``use_mesh`` scope on the
+    calling thread; head constraints additionally require the scope's
+    ``head_shard=True``), so installation itself never changes behavior —
+    trainers and serving engines install unconditionally and pick policy at
+    ``use_mesh`` time."""
     from repro.models import model as model_mod
 
     model_mod.set_residual_constraint(residual_constraint)
-    # head-sharding constraints measured slightly NEGATIVE on yi-34b train_4k
-    # (padding 56→64 heads + SP→TP reshard churn; see §Perf iter 3) — off by
-    # default, available for per-cell experiments.
-    model_mod.set_head_constraint(head_constraint if head_shard else None)
+    model_mod.set_head_constraint(head_constraint)
     model_mod.set_logits_constraint(logits_constraint)
 
 
@@ -264,6 +309,63 @@ def cache_specs(cache, mesh: Mesh):
         return P(*sp)
 
     return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def serve_cache_specs(cache, mesh: Mesh, *, paged: bool):
+    """Serving-cache placement (the tick's KV side of the TickState contract).
+
+    Attention K/V leaves — dense ``(n_rep, S_slots, seq, K, hd)`` or paged
+    pools ``(n_rep, n_pages, page, K, hd)``:
+
+      * K (kv heads) → ``model`` when divisible, else hd → ``model`` —
+        sharding the HEAD axis keeps each (slot, head) attention whole on one
+        shard (softmax and both einsums contract unsharded axes), unlike
+        :func:`cache_specs`'s trailing-axis preference which would split the
+        per-head contraction and change reduction order.
+      * dense slot axis → ``data`` when divisible (pure DP over slots);
+        paged POOL pages stay replicated across ``data`` — page ids are a
+        global namespace shared by every slot's block-table row, so carving
+        the pool over data-parallel shards would make the host allocator
+        device-count-DEPENDENT.  The allocator stays oblivious to the mesh.
+
+    Everything else (SSM/conv recurrent rows) is replicated: O(1) per slot,
+    and the commit/rollback scatters index it by slot from every shard."""
+    m = model_size(mesh)
+    dp = dp_axes(mesh)
+
+    def visit(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        sp: list = [None] * leaf.ndim
+        if keys and keys[-1] in ("k", "v") and leaf.ndim == 5:
+            if not paged and leaf.shape[1] % dp_size(mesh) == 0 \
+                    and leaf.shape[1] >= dp_size(mesh):
+                sp[1] = dp
+            if leaf.shape[3] % m == 0 and leaf.shape[3] >= m:
+                sp[3] = "model"
+            elif leaf.shape[4] % m == 0 and leaf.shape[4] >= m:
+                sp[4] = "model"
+        return P(*sp)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def replicated_shardings(tree, mesh: Mesh):
+    """Everywhere-replicated placements for ``jax.device_put`` (adapter
+    banks, tick state, host-built rows)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def shard_serving(mesh: Mesh, params, cache, *, paged: bool):
+    """Place a serving engine's weights and cache onto ``mesh``: weights via
+    :func:`param_specs` with ``fsdp=False`` (tensor/expert-parallel over
+    ``model``, REPLICATED over ``data`` — serving never all-gathers), cache
+    via :func:`serve_cache_specs`.  Returns ``(params, cache)``."""
+    params = jax.device_put(
+        params, to_shardings(param_specs(params, mesh, fsdp=False), mesh))
+    cache = jax.device_put(
+        cache, to_shardings(serve_cache_specs(cache, mesh, paged=paged),
+                            mesh))
+    return params, cache
 
 
 def opt_specs(lora_specs_tree, opt_state):

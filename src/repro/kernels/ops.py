@@ -5,6 +5,16 @@ else (this CPU container, the dry-run) the pure-jnp oracle executes instead
 — same signature, same numerics (the oracles ARE the reference the kernels
 are tested against in tests/test_kernels.py).  ``force='pallas'`` runs the
 kernel in interpret mode for validation.
+
+Mesh dispatch (PR 6): when the calling thread is inside a
+``sharding.use_mesh`` scope whose ``model`` axis divides both head counts,
+the PAGED ops run PER-SHARD under ``shard_map`` — each model-parallel shard
+executes the whole kernel (Pallas on TPU, the jnp oracle elsewhere) on its
+own contiguous block of heads against its slice of the page pools.  Head-
+axis sharding keeps every (slot, head) attention wholly on one shard, so the
+per-shard math is bit-identical to the unsharded op; outside a mesh scope
+(or when heads don't divide) the unsharded op runs and GSPMD is free to
+partition it however the surrounding jit demands.
 """
 from __future__ import annotations
 
@@ -13,7 +23,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed import sharding as _dist
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.nf4_matmul import nf4_matmul as _nf4_pallas
@@ -25,6 +38,21 @@ from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _tp_mesh(n_q: int, n_kv: int):
+    """The active mesh IF per-shard paged-kernel dispatch is eligible: a
+    ``model`` axis > 1 dividing BOTH the query and kv head counts, so each
+    shard holds whole contiguous GQA groups (q head h reads kv head
+    ``h // (n_q // n_kv)`` — equal splits keep every group local).  Returns
+    None otherwise; the caller then emits the unsharded op."""
+    mesh = _dist.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    m = mesh.shape["model"]
+    if m == 1 or n_q % m or n_kv % m:
+        return None
+    return mesh
 
 
 def nf4_matmul(x, codes, scales, *, out_dtype=jnp.float32,
@@ -45,10 +73,7 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
     return _ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
 
 
-def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
-                           force: Optional[str] = None):
-    """Single-token attention through a paged KV cache.  q: (B, H, D);
-    pools: (n_pages, page, K, D); table: (B, R) page ids; pos: (B,)."""
+def _paged_decode_local(q, pool_k, pool_v, table, pos, *, window, force):
     if force == "pallas" or (force is None and _on_tpu()):
         return _paged_pallas(q, pool_k, pool_v, table, pos, window=window,
                              interpret=not _on_tpu())
@@ -56,18 +81,53 @@ def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
                                            window=window)
 
 
-def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
-                          window: int = 0, force: Optional[str] = None):
-    """Chunk-query attention through a paged KV cache (chunked prefill):
-    q: (B, C, H, D) at positions pos..pos+C-1; k_new/v_new: (B, C, K, D)
-    the chunk's own keys/values; pools: (n_pages, page, K, D); table:
-    (B, R) page ids; pos: (B,)."""
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
+                           force: Optional[str] = None):
+    """Single-token attention through a paged KV cache.  q: (B, H, D);
+    pools: (n_pages, page, K, D); table: (B, R) page ids; pos: (B,).
+    Inside an eligible mesh scope the kernel runs per model-parallel shard
+    (heads split, block table / positions replicated)."""
+    mesh = _tp_mesh(q.shape[1], pool_k.shape[2])
+    fn = functools.partial(_paged_decode_local, window=window, force=force)
+    if mesh is not None:
+        heads = P(None, "model", None)
+        pool = P(None, None, "model", None)
+        return shard_map(
+            fn, mesh=mesh,
+            in_specs=(heads, pool, pool, P(None, None), P(None)),
+            out_specs=heads, check_rep=False)(q, pool_k, pool_v, table, pos)
+    return fn(q, pool_k, pool_v, table, pos)
+
+
+def _paged_chunk_local(q, k_new, v_new, pool_k, pool_v, table, pos,
+                       *, window, force):
     if force == "pallas" or (force is None and _on_tpu()):
         return _paged_chunk_pallas(q, k_new, v_new, pool_k, pool_v, table,
                                    pos, window=window,
                                    interpret=not _on_tpu())
     return _ref.paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v,
                                           table, pos, window=window)
+
+
+def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
+                          window: int = 0, force: Optional[str] = None):
+    """Chunk-query attention through a paged KV cache (chunked prefill):
+    q: (B, C, H, D) at positions pos..pos+C-1; k_new/v_new: (B, C, K, D)
+    the chunk's own keys/values; pools: (n_pages, page, K, D); table:
+    (B, R) page ids; pos: (B,).  Inside an eligible mesh scope the kernel
+    runs per model-parallel shard (heads split, table/pos replicated)."""
+    mesh = _tp_mesh(q.shape[2], pool_k.shape[2])
+    fn = functools.partial(_paged_chunk_local, window=window, force=force)
+    if mesh is not None:
+        qh = P(None, None, "model", None)
+        kv = P(None, None, "model", None)
+        pool = P(None, None, "model", None)
+        return shard_map(
+            fn, mesh=mesh,
+            in_specs=(qh, kv, kv, pool, pool, P(None, None), P(None)),
+            out_specs=qh, check_rep=False)(
+                q, k_new, v_new, pool_k, pool_v, table, pos)
+    return fn(q, k_new, v_new, pool_k, pool_v, table, pos)
 
 
 def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,

@@ -154,8 +154,9 @@ def lower_cell(arch: str, shape: str, mesh, *, variant: str = "qloram",
     # (§Perf iterations 3/5) — default ON for serve, OFF for train.
     if head_shard is None:
         head_shard = kind != "train"
-    sharding.install_residual_constraint(head_shard=head_shard)
-    with sharding.use_mesh(mesh, seq_shard=seq_shard and kind == "train"):
+    sharding.install_residual_constraint()
+    with sharding.use_mesh(mesh, seq_shard=seq_shard and kind == "train",
+                           head_shard=head_shard):
         base_sh = sharding.to_shardings(
             sharding.param_specs(spec["base"], mesh, fsdp=fsdp), mesh)
         if kind == "train":

@@ -25,3 +25,20 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, n // data)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """The serving engines' ``data × model`` mesh (ServeConfig.mesh_data /
+    mesh_model, or ``launch/serve.py --mesh data,model``).  Unlike
+    :func:`make_host_mesh` this REFUSES to silently clamp: a serving
+    deployment that asks for more chips than exist is a config error, not
+    something to paper over with a smaller (differently-sharded) grid."""
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1 (got {data}x{model})")
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"serve mesh {data}x{model} needs {data * model} devices but "
+            f"only {n} exist (hint: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N for CPU smoke runs)")
+    return jax.make_mesh((data, model), ("data", "model"))

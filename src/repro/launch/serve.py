@@ -11,6 +11,14 @@ adapter registry per-slot instead of a single global adapter).
 (``--gamma``) tokens are proposed per slot by the small model (running the
 pruned adapters pre-recovery) and verified by the full model in one batched
 forward — output is identical in distribution to plain serving.
+
+``--mesh data,model`` serves over an explicit device mesh: weights and KV
+head-sharded over the ``model`` axis, decode batch sharded over ``data``
+(see the sharding table in ``repro/serving/engine.py``).  The product must
+not exceed ``len(jax.devices())``; on CPU export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.  ``1,1``
+(default) serves single-device with the mesh machinery compiled away.
+Tokens are identical to the single-device engine either way.
 """
 from __future__ import annotations
 
@@ -68,7 +76,14 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="shared-prefix length in tokens (with "
                          "--prefix-sharing; 0 → half the prompt)")
+    ap.add_argument("--mesh", type=str, default="1,1", metavar="DATA,MODEL",
+                    help="serve over a DATAxMODEL device mesh (batch over "
+                         "data, heads/experts over model); 1,1 = no mesh")
     args = ap.parse_args()
+    try:
+        mesh_data, mesh_model = (int(v) for v in args.mesh.split(","))
+    except ValueError:
+        ap.error("--mesh wants two comma-separated ints, e.g. --mesh 1,2")
     if args.prefill_chunk or args.prefix_sharing:
         args.paged = True
     if args.speculative or args.paged:
@@ -99,7 +114,8 @@ def main():
             gamma_autotune=args.gamma_autotune,
             kv_paging=args.paged, kv_page_size=args.page_size,
             kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
-            prefix_sharing=args.prefix_sharing)
+            prefix_sharing=args.prefix_sharing,
+            mesh_data=mesh_data, mesh_model=mesh_model)
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)
@@ -147,7 +163,8 @@ def main():
 
     eng = ServeEngine(plan, params if args.no_merge else merged,
                       ServeConfig(max_seq_len=args.max_seq_len,
-                                  merge_adapters=not args.no_merge),
+                                  merge_adapters=not args.no_merge,
+                                  mesh_data=mesh_data, mesh_model=mesh_model),
                       lora=lora_full if args.no_merge else None)
     fe = None
     if cfg.family == "encdec":

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distributed import sharding
 from repro.quant import nf4
 
 Array = jax.Array
@@ -254,7 +255,12 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cache_len: Array,
 
     q: (B, 1, H, D); caches: (B, S_max, H, D); cache_len: () current length
     (the new token's K/V must already be written at position cache_len-1).
+
+    The head constraint is context-gated (no-op outside a ``head_shard``
+    mesh scope): under tensor-parallel serving each shard attends its own
+    heads, and the whole per-head softmax/contraction stays local.
     """
+    q = sharding.head_constraint(q)
     b, smax, h, d = k_cache.shape
     scale = 1.0 / (d ** 0.5)
     kpos = jnp.arange(smax)
@@ -264,7 +270,8 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cache_len: Array,
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
     logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+    return sharding.head_constraint(
+        jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache))
 
 
 # ---------------------------------------------------------------------------

@@ -324,7 +324,11 @@ def _attn_block(
         k = L.apply_rope(k, positions, theta)
 
     if cache is not None and kind != "cross_attn":
-        # decode, speculative verify, or prefill-write
+        # decode, speculative verify, or prefill-write — tensor-parallel
+        # serving shards the head axis here (context-gated: a no-op outside
+        # a head_shard mesh scope), so every branch below computes its
+        # (slot, head) attention wholly on one shard
+        q = _shard_heads(q)
         paged = block_table is not None
         if paged:
             # cache holds a page POOL (n_pages, page, kv, hd); the slot's
@@ -386,7 +390,8 @@ def _attn_block(
             pb = probs[..., cache_size:].astype(v.dtype)
             out = (jnp.einsum("bkgts,bskd->bkgtd", po, cv)
                    + jnp.einsum("bkgtj,bjkd->bkgtd", pb, v))
-            out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+            out = _shard_heads(out.transpose(0, 3, 1, 2, 4)
+                               .reshape(B, T, H, hd))
             # pending writes: the engine scatters rows j < n_keep per slot
             new_cache = {"k": kw, "v": vw}
         elif chunk:
@@ -400,9 +405,9 @@ def _attn_block(
             # mapping, last-writer-wins inside a wrapped windowed ring).
             assert paged, "chunked prefill requires a paged cache"
             pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-            out = kops.paged_chunk_attention(
+            out = _shard_heads(kops.paged_chunk_attention(
                 q, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype),
-                cache["k"], cache["v"], tbl, pos_v, window=window)
+                cache["k"], cache["v"], tbl, pos_v, window=window))
             new_cache = {"k": k.astype(cache["k"].dtype),
                          "v": v.astype(cache["v"].dtype)}
         elif q.shape[1] == 1 and paged:  # decode step, paged pool
@@ -418,7 +423,7 @@ def _attn_block(
             new_cache = {"k": ck, "v": cv}
             out = kops.paged_decode_attention(q[:, 0], ck, cv, tbl, pos_v,
                                               window=window)
-            out = out[:, None]
+            out = _shard_heads(out[:, None])
         elif q.shape[1] == 1:  # decode step
             # pos may be a scalar (whole batch at one position — legacy
             # engine) or per-slot (B,) (continuous batching: every slot sits
@@ -445,9 +450,9 @@ def _attn_block(
             logits = jnp.where(valid[:, None, None, :], logits, L.NEG_INF)
             probs = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
             out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
-            out = out.reshape(B_, 1, H, hd)
-        else:  # prefill: full attention then write cache
-            out, new_cache = _prefill_attn_and_cache(_shard_heads(q), k, v, cache,
+            out = _shard_heads(out.reshape(B_, 1, H, hd))
+        else:  # prefill: full attention then write cache (q sharded above)
+            out, new_cache = _prefill_attn_and_cache(q, k, v, cache,
                                                      window, H // K,
                                                      valid_len=valid_len)
     else:

@@ -19,6 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import sharding
 from repro.models.layers import dense, swiglu
 from repro.quant.nf4 import maybe_dequant
 
@@ -84,7 +85,11 @@ def moe_mlp(
     src = jnp.repeat(xe, top_k, axis=0)                           # (T·k, D)
     src = jnp.where(keep[:, None], src, 0)
     buf = buf.at[dest].add(src)                                   # scatter
-    buf = buf.reshape(e, cap, d)
+    # expert-parallel constraint (context-gated; no-op without a mesh):
+    # E → model keeps each expert's stacked SwiGLU wholly on one shard, so
+    # the vmap below runs E/m experts per device with exact numerics — only
+    # the scatter/gather either side of it crosses shards
+    buf = sharding.expert_constraint(buf.reshape(e, cap, d))
 
     # stacked expert SwiGLU: weights (E, D, F) / (E, F, D)
     def ffn(buf_e, wg, wu, wd):
@@ -95,7 +100,7 @@ def moe_mlp(
     out_buf = jax.vmap(ffn)(buf, maybe_dequant(p["we_g"], xe.dtype),
                             maybe_dequant(p["we_u"], xe.dtype),
                             maybe_dequant(p["we_d"], xe.dtype))     # (E, C, D)
-    out_buf = out_buf.reshape(e * cap, d)
+    out_buf = sharding.expert_constraint(out_buf).reshape(e * cap, d)
 
     gathered = out_buf[dest]                                       # (T·k, D)
     gathered = jnp.where(keep[:, None], gathered, 0)

@@ -406,6 +406,31 @@ def make_copy_page(plan: Plan) -> Callable:
     return jax.jit(copy, donate_argnums=(0,))
 
 
+def admit_update(st, slot, first, pos0, aid, temp, seed, max_new, use_spec):
+    """THE fused per-admission tick-state update, shared by every engine.
+
+    ``st`` is a :class:`repro.serving.tickstate.TickState`; one jitted
+    dispatch flips the slot live instead of eight ``.at[].set`` round trips.
+    The speculative fields (``spec``, ``max_new``) update only when the state
+    CARRIES them (``st.spec is not None`` — a trace-time branch, so the plain
+    engine's compiled admission never touches the extra operands it is
+    handed).  Jit with ``donate_argnums=(0,)``."""
+    kw = dict(
+        last_tok=st.last_tok.at[slot].set(first),
+        pos=st.pos.at[slot].set(pos0),
+        active=st.active.at[slot].set(True),
+        adapter_ids=st.adapter_ids.at[slot].set(aid),
+        temps=st.temps.at[slot].set(temp),
+        seeds=st.seeds.at[slot].set(seed),
+        gen_idx=st.gen_idx.at[slot].set(1),
+        out_buf=st.out_buf.at[slot, 0].set(first),
+    )
+    if st.spec is not None:
+        kw["spec"] = st.spec.at[slot].set(use_spec)
+        kw["max_new"] = st.max_new.at[slot].set(max_new)
+    return st.replace(**kw)
+
+
 # ---------------------------------------------------------------------------
 # speculative-decoding serve steps (draft propose + target verify)
 # ---------------------------------------------------------------------------

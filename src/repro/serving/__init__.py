@@ -13,3 +13,4 @@ from repro.serving.speculative import (GammaController,  # noqa: F401
                                        commit_cache_paged, commit_draft_cache,
                                        commit_draft_cache_paged,
                                        speculative_accept)
+from repro.serving.tickstate import TickState  # noqa: F401

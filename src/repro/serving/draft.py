@@ -44,6 +44,14 @@ class DraftModel:
     def bank(self) -> Optional[PyTree]:
         return None if self.registry is None else self.registry.bank
 
+    def with_params(self, params: PyTree) -> "DraftModel":
+        """The same draft with re-placed params — how a meshed
+        :class:`~repro.serving.speculative.SpeculativeServeEngine` swaps in
+        the TP-sharded copy (``sharding.shard_serving``; pruned widths that
+        don't divide the ``model`` axis replicate).  The registry — and so
+        the stacked adapter bank — stays shared with the original."""
+        return dataclasses.replace(self, params=params)
+
     def add(self, name: str, small_lora: PyTree) -> int:
         """Register a pruned-width adapter under ``name``.  Register adapters
         in the SAME ORDER as on the target registry so ids line up."""

@@ -58,6 +58,57 @@ Two paged-only optimizations (PR 4):
   windowed rings wrapping onto prefix pages), so output stays
   token-identical to unshared serving while prefill FLOPs and KV pages
   scale with the UNIQUE tokens only.
+
+Tick state and mesh sharding (PR 6)
+-----------------------------------
+
+Every jitted serving step threads ONE explicit pytree of device state:
+:class:`repro.serving.tickstate.TickState` (it replaced the untyped
+``dict(st)`` that used to be copied in three places here and in
+``speculative.py``).  Engines accept a ``jax.sharding.Mesh`` (or build one
+from ``ServeConfig.mesh_data`` × ``ServeConfig.mesh_model``, see
+``launch/serve.py --mesh``); with a mesh the tick runs under GSPMD with this
+placement, declared leaf-by-leaf in ``TickState.field_specs()`` and
+``sharding.serve_cache_specs`` / ``sharding.param_specs``:
+
+====================  =========================  ===========================
+device state          axes                       placement
+====================  =========================  ===========================
+TickState.last_tok    (S,)                       replicated
+TickState.pos         (S,)                       replicated
+TickState.active      (S,)                       replicated
+TickState.adapter_ids (S,)                       replicated
+TickState.temps       (S,)                       replicated
+TickState.seeds       (S,)                       replicated
+TickState.gen_idx     (S,)                       replicated
+TickState.out_buf     (S, max_new)               replicated
+TickState.block_table (S, n_tbl)                 replicated
+TickState.spec        (S,)                       replicated
+TickState.max_new     (S,)                       replicated
+dense KV cache        (r, S, seq, K, hd)         S → data, K (else hd) → model
+paged K/V pools       (r, n_pages, page, K, hd)  K (else hd) → model; pages
+                                                 REPLICATED over data (page
+                                                 ids are one global
+                                                 namespace — the host
+                                                 allocator stays
+                                                 device-count-agnostic)
+SSM / conv state      (r, S, ...)                replicated (O(1) per slot)
+weights               per param_specs            tensor/expert-parallel over
+                                                 model, replicated over data
+adapter bank          stacked (A, ...)           replicated (rank-r factors
+                                                 are tiny; arXiv:2106.09685)
+activations           (B, S, D) / (B, S, H, hd)  B → data; heads → model
+                                                 (head_shard scope flag)
+====================  =========================  ===========================
+
+Every TickState leaf is REPLICATED by design: it is the scheduler's device
+mirror (slot occupancy, positions, sampling streams, block-table rows) and
+each shard needs all of it to mask its portion of the batched decode.  What
+shards is what the state INDEXES INTO — pools, caches, weights.  The host
+side (Scheduler, PageAllocator, COW sweep, prefix registry) never sees the
+mesh: admission, preemption, COW, and prefix sharing are device-count-
+agnostic, and ``tests/test_mesh_serving.py`` pins sharded output
+token-identical to single-device across model families.
 """
 from __future__ import annotations
 
@@ -74,8 +125,8 @@ from repro.core.recovery import merge_lora
 from repro.distributed import sharding
 from repro.models.model import (Plan, init_cache, init_paged_cache,
                                 ring_pages)
-from repro.runtime.steps import (attn_window_map, make_copy_page,
-                                 make_decode_step,
+from repro.runtime.steps import (admit_update, attn_window_map,
+                                 make_copy_page, make_decode_step,
                                  make_multi_adapter_decode_step,
                                  make_paged_prefill_chunk,
                                  make_paged_prefill_into_slot,
@@ -85,6 +136,19 @@ from repro.serving.adapters import AdapterRegistry
 from repro.serving.pages import (PageAllocator, PoolExhausted, bucket_len,
                                  pages_for)
 from repro.serving.scheduler import Request, RequestResult, Scheduler
+from repro.serving.tickstate import TickState
+
+
+def _resolve_mesh(cfg: ServeConfig, mesh):
+    """The engine's mesh: an explicit one wins; otherwise build a
+    ``data × model`` host mesh from the config axes (1×1 → no mesh at all —
+    the entire sharding path compiles away)."""
+    if mesh is not None:
+        return mesh
+    if cfg.mesh_data * cfg.mesh_model > 1:
+        from repro.launch.mesh import make_serve_mesh
+        return make_serve_mesh(cfg.mesh_data, cfg.mesh_model)
+    return None
 
 
 @dataclasses.dataclass
@@ -124,10 +188,15 @@ class ServeEngine:
                  mesh=None):
         self.plan = plan
         self.cfg = cfg
-        self.mesh = mesh
+        self.mesh = _resolve_mesh(cfg, mesh)
         if lora is not None and cfg.merge_adapters:
             params = merge_lora(params, lora, lora_scale)
             lora = None
+        if self.mesh is not None:
+            sharding.install_residual_constraint()
+            params = jax.device_put(params, sharding.to_shardings(
+                sharding.param_specs(params, self.mesh, fsdp=False),
+                self.mesh))
         self.params = params
         self.lora = lora
         self._prefill = jax.jit(make_prefill_step(
@@ -158,11 +227,15 @@ class ServeEngine:
         frontend: Optional[np.ndarray] = None,
     ) -> GenerationResult:
         B, S_prompt = prompts.shape
-        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
-               else _null())
+        ctx = (sharding.use_mesh(self.mesh, head_shard=True)
+               if self.mesh is not None else _null())
         with ctx:
             cache = init_cache(self.plan, B, self.cfg.max_seq_len,
                                jnp.dtype(self.cfg.kv_cache_dtype))
+            if self.mesh is not None:
+                cache = jax.device_put(cache, sharding.to_shardings(
+                    sharding.serve_cache_specs(cache, self.mesh, paged=False),
+                    self.mesh))
             t0 = time.perf_counter()
             logits, cache, pos = self._call_prefill(
                 jnp.asarray(prompts), cache,
@@ -210,7 +283,11 @@ class ContinuousServeEngine:
         self.params = params
         self.cfg = cfg
         self.registry = registry
-        self.mesh = mesh
+        self.mesh = _resolve_mesh(cfg, mesh)
+        if self.mesh is not None:
+            # hooks are context-gated: installing them changes nothing until
+            # step() opens its use_mesh scope
+            sharding.install_residual_constraint()
         if registry is not None and registry.max_adapters != cfg.max_adapters:
             raise ValueError(
                 f"ServeConfig.max_adapters={cfg.max_adapters} does not match "
@@ -279,42 +356,40 @@ class ContinuousServeEngine:
         paged = self.paged
 
         def make_tick(sampling: bool):
-            def tick(params_, bank, cache, st):
+            def tick(params_, bank, cache, st: TickState):
                 if paged:
-                    logits, cache = decode(params_, bank, st["last_tok"],
-                                           cache, st["pos"],
-                                           st["adapter_ids"],
-                                           st["block_table"])
+                    logits, cache = decode(params_, bank, st.last_tok,
+                                           cache, st.pos,
+                                           st.adapter_ids,
+                                           st.block_table)
                 else:
-                    logits, cache = decode(params_, bank, st["last_tok"],
-                                           cache, st["pos"],
-                                           st["adapter_ids"])
+                    logits, cache = decode(params_, bank, st.last_tok,
+                                           cache, st.pos,
+                                           st.adapter_ids)
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 if sampling:
                     # key = (request seed, generation index): sampling is
                     # reproducible per request no matter how the scheduler
                     # interleaved it with other traffic
-                    keys = jax.vmap(request_key)(st["seeds"], st["gen_idx"])
-                    temp = jnp.maximum(st["temps"], 1e-6)[:, None]
+                    keys = jax.vmap(request_key)(st.seeds, st.gen_idx)
+                    temp = jnp.maximum(st.temps, 1e-6)[:, None]
                     sampled = jax.vmap(jax.random.categorical)(
                         keys, logits / temp).astype(jnp.int32)
-                    tok = jnp.where(st["temps"] > 0.0, sampled, tok)
-                act = st["active"]
-                tok = jnp.where(act, tok, st["last_tok"])
+                    tok = jnp.where(st.temps > 0.0, sampled, tok)
+                act = st.active
+                tok = jnp.where(act, tok, st.last_tok)
                 step1 = act.astype(jnp.int32)
                 bidx = jnp.arange(S)
-                gi = jnp.minimum(st["gen_idx"], st["out_buf"].shape[1] - 1)
-                cur = st["out_buf"][bidx, gi]
-                out_buf = st["out_buf"].at[bidx, gi].set(
+                gi = jnp.minimum(st.gen_idx, st.out_buf.shape[1] - 1)
+                cur = st.out_buf[bidx, gi]
+                out_buf = st.out_buf.at[bidx, gi].set(
                     jnp.where(act, tok, cur))
-                new_st = dict(st)       # carries block_table when paged
-                new_st.update(
+                return cache, st.replace(
                     last_tok=tok,
-                    pos=st["pos"] + step1,
-                    gen_idx=st["gen_idx"] + step1,
+                    pos=st.pos + step1,
+                    gen_idx=st.gen_idx + step1,
                     out_buf=out_buf,
                 )
-                return cache, new_st
 
             return jax.jit(tick, donate_argnums=(2, 3))
 
@@ -323,21 +398,10 @@ class ContinuousServeEngine:
         self._tick_sample = make_tick(True)
         self._n_hot = 0    # in-flight/queued requests with temperature > 0
 
-        def admit_update(st, slot, first, pos0, aid, temp, seed):
-            out = dict(st)              # carries block_table when paged
-            out.update(
-                last_tok=st["last_tok"].at[slot].set(first),
-                pos=st["pos"].at[slot].set(pos0),
-                active=st["active"].at[slot].set(True),
-                adapter_ids=st["adapter_ids"].at[slot].set(aid),
-                temps=st["temps"].at[slot].set(temp),
-                seeds=st["seeds"].at[slot].set(seed),
-                gen_idx=st["gen_idx"].at[slot].set(1),
-                out_buf=st["out_buf"].at[slot, 0].set(first),
-            )
-            return out
-
-        # one fused dispatch per admission instead of seven .at[].set calls
+        # one fused dispatch per admission instead of eight .at[].set calls;
+        # the speculative subclass shares this exact jit — its extra fields
+        # update iff the TickState carries them (a trace-time branch in
+        # repro.runtime.steps.admit_update)
         self._admit_update = jax.jit(admit_update, donate_argnums=(0,))
 
         if self.paged:
@@ -347,19 +411,16 @@ class ContinuousServeEngine:
         else:
             self.cache = init_cache(plan, S, cfg.max_seq_len,
                                     jnp.dtype(cfg.kv_cache_dtype))
-        self._st: Dict[str, jax.Array] = {
-            "last_tok": jnp.zeros((S,), jnp.int32),
-            "pos": jnp.zeros((S,), jnp.int32),
-            "active": jnp.zeros((S,), bool),
-            "adapter_ids": jnp.zeros((S,), jnp.int32),
-            "temps": jnp.zeros((S,), jnp.float32),
-            "seeds": jnp.zeros((S,), jnp.int32),
-            "gen_idx": jnp.zeros((S,), jnp.int32),
-            "out_buf": jnp.zeros((S, cfg.max_new_tokens), jnp.int32),
-        }
-        if self.paged:
-            # all-zero rows route free slots' garbage writes to the trash page
-            self._st["block_table"] = jnp.zeros((S, self._n_tbl), jnp.int32)
+        self._st: TickState = self._init_tick_state(S, cfg)
+        if self.mesh is not None:
+            # weights TP/EP-sharded + cache per serve_cache_specs; the tick
+            # state lands replicated per its own declared leaf specs.
+            # Adapter banks and host-built rows stay uncommitted — jit
+            # places them against the committed operands.
+            self.params, self.cache = sharding.shard_serving(
+                self.mesh, self.params, self.cache, paged=self.paged)
+            self._st = jax.device_put(self._st,
+                                      self._st.shardings(self.mesh))
         # aggregate counters for benchmarks / monitoring
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
@@ -447,8 +508,8 @@ class ContinuousServeEngine:
         """Admit whatever fits, stream at most one prefill chunk per
         still-prefilling slot, run one decode tick, return newly completed
         requests (empty list if nothing finished this tick)."""
-        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
-               else _null())
+        ctx = (sharding.use_mesh(self.mesh, head_shard=True)
+               if self.mesh is not None else _null())
         done: List[RequestResult] = []
         progressive = self.paged and (self._chunking or self._sharing)
         with ctx:
@@ -527,6 +588,13 @@ class ContinuousServeEngine:
         return self._sched.queued + len(self._sched.occupied_slots())
 
     # -- internals ----------------------------------------------------------
+
+    def _init_tick_state(self, S: int, cfg: ServeConfig) -> TickState:
+        """The engine's initial :class:`TickState` (all slots free).  The
+        speculative engine overrides this to request the draft-round leaves
+        — the base constructor then places ONE state for both."""
+        return TickState.zeros(S, cfg.max_new_tokens,
+                               n_tbl=self._n_tbl if self.paged else 0)
 
     def _bucketed_prompt(self, req: Request):
         """(tokens (1, Sb), valid_len) — the prompt right-padded to its
@@ -639,11 +707,11 @@ class ContinuousServeEngine:
         return logits, new_state or None
 
     def _activate(self, slot: int, req: Request, first) -> None:
-        """Flip a fully-prefilled slot live in the jitted tick state
-        (overridden by the speculative engine for its extra fields)."""
+        """Flip a fully-prefilled slot live in the jitted tick state.  The
+        speculative operands trace unused when the state has no spec leaves."""
         self._st = self._admit_update(
             self._st, slot, first, len(req.prompt), req.adapter_id,
-            req.temperature, req.seed)
+            req.temperature, req.seed, req.max_new_tokens, req.speculative)
 
     def _run_chunk(self, slot: int) -> None:
         ctx = self._prefill_ctx[slot]
@@ -876,8 +944,8 @@ class ContinuousServeEngine:
     def _set_table_row(self, slot: int, ids):
         row = np.zeros(self._n_tbl, np.int32)
         row[:len(ids)] = ids
-        self._st["block_table"] = self._st["block_table"].at[slot].set(
-            jnp.asarray(row))
+        self._st = self._st.replace(
+            block_table=self._st.block_table.at[slot].set(jnp.asarray(row)))
 
     def _release_slot_pages(self, slot: int):
         self.pages.release(slot)
@@ -889,7 +957,8 @@ class ContinuousServeEngine:
             # the builder lost its slot before capturing — free the id so
             # the (requeued-at-head) request can rebuild on re-admission
             self._prefix_pending.discard(ctx["building"])
-        self._st["block_table"] = self._st["block_table"].at[slot].set(0)
+        self._st = self._st.replace(
+            block_table=self._st.block_table.at[slot].set(0))
         self._slot_pos[slot] = 0
         self._admit_seq[slot] = -1
 
@@ -899,7 +968,8 @@ class ContinuousServeEngine:
         generation index), so the re-run emits the same tokens."""
         self._sched.preempt(slot)
         self._release_slot_pages(slot)
-        self._st["active"] = self._st["active"].at[slot].set(False)
+        self._st = self._st.replace(
+            active=self._st.active.at[slot].set(False))
         self.n_preemptions += 1
 
     def _ensure_growth(self, lookahead: int):
@@ -951,7 +1021,7 @@ class ContinuousServeEngine:
                 if "k" in bc:
                     total += bc["k"].nbytes + bc["v"].nbytes
         if self.paged:
-            total += self._st["block_table"].nbytes
+            total += self._st.block_table.nbytes
         return total
 
     def _admit(self, slot: int, req: Request):
@@ -977,9 +1047,7 @@ class ContinuousServeEngine:
             logits, self.cache = self._prefill(self.params, tree, tokens,
                                                self.cache, slot)
         first = self._first_token(logits[0], req)
-        self._st = self._admit_update(
-            self._st, slot, first, len(req.prompt), req.adapter_id,
-            req.temperature, req.seed)
+        self._activate(slot, req, first)
         self.n_prefill_tokens += len(req.prompt)
         self._t_first[req.uid] = time.perf_counter()
 
@@ -996,8 +1064,9 @@ class ContinuousServeEngine:
         req = self._sched.slot_request(slot)
         n = self._sched.slot_generated(slot)
         # the single device→host transfer for this request
-        row = np.asarray(self._st["out_buf"][slot, :n])
-        self._st["active"] = self._st["active"].at[slot].set(False)
+        row = np.asarray(self._st.out_buf[slot, :n])
+        self._st = self._st.replace(
+            active=self._st.active.at[slot].set(False))
         if self.paged:
             self._release_slot_pages(slot)
         req_evicted = self._sched.evict(slot)

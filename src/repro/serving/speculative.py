@@ -56,6 +56,7 @@ from repro.serving.draft import DraftModel
 from repro.serving.engine import ContinuousServeEngine, _null
 from repro.serving.pages import pages_for
 from repro.serving.scheduler import RequestResult
+from repro.serving.tickstate import TickState
 
 PyTree = Any
 
@@ -467,7 +468,7 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
     ``sampling=False`` is the all-greedy fast path: no draft distributions,
     no target softmax, no PRNG work — acceptance is pure argmax matching.
     ``paged=True``: both models' caches are page pools sharing ONE block
-    table / page-id space (``st["block_table"]``) — the draft's pool is
+    table / page-id space (``st.block_table``) — the draft's pool is
     physically smaller because its pruned pages are narrower; accepted
     pending K/V commits into pages, windowed rings roll back exactly."""
     if paged:
@@ -484,34 +485,34 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
     windows_d = attn_window_map(draft_plan)
 
     def round_fn(params, bank, dparams, dbank, cache, dcache, st):
-        B = st["pos"].shape[0]
+        B = st.pos.shape[0]
         bidx = jnp.arange(B)
-        pos, gen = st["pos"], st["gen_idx"]
-        temps, seeds = st["temps"], st["seeds"]
-        act, spec = st["active"], st["spec"]
+        pos, gen = st.pos, st.gen_idx
+        temps, seeds = st.temps, st.seeds
+        act, spec = st.active, st.spec
         temp = jnp.maximum(temps, 1e-6)
 
         if paged:
-            tbl = st["block_table"]
+            tbl = st.block_table
             dcache, drafts_t, qs_t, undo = draft_loop(
-                dparams, dbank, dcache, st["last_tok"], pos,
-                st["adapter_ids"], temps, seeds, gen, tbl)
+                dparams, dbank, dcache, st.last_tok, pos,
+                st.adapter_ids, temps, seeds, gen, tbl)
         else:
             dcache, drafts_t, qs_t, undo = draft_loop(
-                dparams, dbank, dcache, st["last_tok"], pos,
-                st["adapter_ids"], temps, seeds, gen)
+                dparams, dbank, dcache, st.last_tok, pos,
+                st.adapter_ids, temps, seeds, gen)
         drafts = drafts_t.T                              # (B, γ): d_1..d_γ
 
         # verify block: the already-emitted last token + the first γ-1 drafts;
         # logits[:, i] is the target distribution that judges drafts[:, i]
         u_tok = jnp.concatenate(
-            [st["last_tok"][:, None], drafts[:, :gamma - 1]], axis=1)
+            [st.last_tok[:, None], drafts[:, :gamma - 1]], axis=1)
         if paged:
             logits, pending = verify(params, bank, u_tok, cache, pos,
-                                     st["adapter_ids"], tbl)
+                                     st.adapter_ids, tbl)
         else:
             logits, pending = verify(params, bank, u_tok, cache, pos,
-                                     st["adapter_ids"])
+                                     st.adapter_ids)
         tgt_greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         if sampling:
@@ -540,7 +541,7 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
         n_keep = jnp.minimum(n + 1, gamma)
 
         last_new = jnp.where(n >= gamma, drafts[:, gamma - 1], t)
-        remaining = st["max_new"] - gen
+        remaining = st.max_new - gen
         e_eff = jnp.where(act, jnp.minimum(n_keep, remaining), 0)
         keep_c = jnp.where(act, n_keep, 0)
 
@@ -554,8 +555,8 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
         # gen + e_eff <= max_new <= buffer width.
         cols = gen[:, None] + jnp.arange(gamma)[None, :]
         wmask = jnp.arange(gamma)[None, :] < e_eff[:, None]
-        cols = jnp.where(wmask, cols, st["out_buf"].shape[1])
-        out_buf = st["out_buf"].at[bidx[:, None], cols].set(emit, mode="drop")
+        cols = jnp.where(wmask, cols, st.out_buf.shape[1])
+        out_buf = st.out_buf.at[bidx[:, None], cols].set(emit, mode="drop")
 
         if paged:
             cache = commit_cache_paged(cache, pending, pos, keep_c, tbl,
@@ -566,9 +567,8 @@ def make_spec_round(plan, draft_plan, gamma: int, *, lora_scale: float = 2.0,
             cache = commit_cache(cache, pending, pos, keep_c, full_len)
             dcache = commit_draft_cache(dcache, undo, pos, keep_c)
 
-        new_st = dict(st)
-        new_st.update(
-            last_tok=jnp.where(act, last_new, st["last_tok"]),
+        new_st = st.replace(
+            last_tok=jnp.where(act, last_new, st.last_tok),
             pos=pos + keep_c,
             gen_idx=gen + e_eff,
             out_buf=out_buf)
@@ -666,10 +666,14 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         else:
             self.draft_cache = init_cache(draft.plan, S, cfg.max_seq_len,
                                           jnp.dtype(cfg.kv_cache_dtype))
-        self._st.update({
-            "spec": jnp.zeros((S,), bool),
-            "max_new": jnp.zeros((S,), jnp.int32),
-        })
+        if self.mesh is not None:
+            # the draft runs on the SAME mesh: its pruned widths re-run the
+            # shape-driven divisibility checks inside param_specs /
+            # serve_cache_specs — any non-divisible axis simply replicates
+            dparams, dcache = sharding.shard_serving(
+                self.mesh, draft.params, self.draft_cache, paged=self.paged)
+            self.draft = draft.with_params(dparams)
+            self.draft_cache = dcache
         # each distinct γ compiles its own round pair; the autotuner walks
         # through a handful of values and then settles
         self._rounds = {}
@@ -710,28 +714,21 @@ class SpeculativeServeEngine(ContinuousServeEngine):
 
             self._prefill_both = jax.jit(prefill_both, donate_argnums=(5, 6))
 
-        def admit_spec(st, slot, first, pos0, aid, temp, seed, max_new,
-                       use_spec):
-            out = dict(st)              # carries block_table when paged
-            out.update(
-                last_tok=st["last_tok"].at[slot].set(first),
-                pos=st["pos"].at[slot].set(pos0),
-                active=st["active"].at[slot].set(True),
-                adapter_ids=st["adapter_ids"].at[slot].set(aid),
-                temps=st["temps"].at[slot].set(temp),
-                seeds=st["seeds"].at[slot].set(seed),
-                gen_idx=st["gen_idx"].at[slot].set(1),
-                out_buf=st["out_buf"].at[slot, 0].set(first),
-                spec=st["spec"].at[slot].set(use_spec),
-                max_new=st["max_new"].at[slot].set(max_new),
-            )
-            return out
-
-        self._admit_update_spec = jax.jit(admit_spec, donate_argnums=(0,))
+        # admission reuses the base engine's jitted
+        # repro.runtime.steps.admit_update verbatim: the TickState built by
+        # _init_tick_state carries spec/max_new leaves, so the shared trace
+        # updates them too — no speculative admission closure exists anymore
         # speculation telemetry
         self.n_rounds = 0
         self.n_proposed = 0
         self.n_accepted = 0
+
+    def _init_tick_state(self, S, cfg):
+        """The speculative leaves (per-request opt-in + γ-round emit budget)
+        join the ONE tick state the base constructor places."""
+        return TickState.zeros(S, cfg.max_new_tokens,
+                               n_tbl=self._n_tbl if self.paged else 0,
+                               speculative=True)
 
     def _get_rounds(self, gamma: int):
         """(greedy, sampled) jitted round fns for ``gamma`` — built once per
@@ -827,11 +824,6 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             return logits, None
         return logits, {"t": ns_t or None, "d": ns_d or None}
 
-    def _activate(self, slot, req, first):
-        self._st = self._admit_update_spec(
-            self._st, slot, first, len(req.prompt), req.adapter_id,
-            req.temperature, req.seed, req.max_new_tokens, req.speculative)
-
     def _state_restore(self, slot, state):
         if state is None:
             return
@@ -884,9 +876,7 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 self.params, tree, self.draft.params, dtree, tokens,
                 self.cache, self.draft_cache, slot)
         first = self._first_token(logits[0], req)
-        self._st = self._admit_update_spec(
-            self._st, slot, first, len(req.prompt), req.adapter_id,
-            req.temperature, req.seed, req.max_new_tokens, req.speculative)
+        self._activate(slot, req, first)
         self.n_prefill_tokens += len(req.prompt)
         self._t_first[req.uid] = time.perf_counter()
 
@@ -894,8 +884,8 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         """Admit whatever fits, run a batch of draft→verify→commit rounds,
         return newly completed requests.  Each round advances every active
         slot by 1..γ tokens (accepted drafts + correction)."""
-        ctx = (sharding.use_mesh(self.mesh, False) if self.mesh is not None
-               else _null())
+        ctx = (sharding.use_mesh(self.mesh, head_shard=True)
+               if self.mesh is not None else _null())
         done: List[RequestResult] = []
         progressive = self.paged and (self._chunking or self._sharing)
         with ctx:

@@ -1,0 +1,128 @@
+"""The jitted tick state — one explicit, shardable pytree for every engine.
+
+Before this module the continuous and speculative engines each carried an
+untyped ``Dict[str, jax.Array]`` through their jitted steps, copied and
+mutated with ``dict(st); st.update(...)`` in three near-identical places.
+:class:`TickState` replaces all of them: a frozen dataclass registered as a
+JAX pytree, so it traces/donates/shards exactly like the dict did, but the
+field set is CLOSED (a typo becomes an ``AttributeError`` at trace time, not
+a silently-ignored extra dict key) and every leaf declares its mesh placement
+up front.
+
+Sharding contract (the field-by-field table lives in
+``repro.serving.engine``'s module docstring): every TickState leaf is
+REPLICATED (``PartitionSpec()``).  The tick state is the scheduler's device
+mirror — slot occupancy, per-slot positions, sampling streams, block-table
+rows — and every mesh shard needs all of it to mask its own portion of the
+batched decode.  What actually shards over the mesh is what the state
+*indexes into*: the page pools / KV caches (heads → ``model``, dense slot
+axis → ``data``) and the weights (tensor/expert-parallel via
+``repro.distributed.sharding.param_specs``).  Replication is still a
+declaration, not an omission — ``tests/test_tickstate_spec.py`` fails any
+field added without one.
+
+Optional fields (``block_table``, ``spec``, ``max_new``) are ``None`` when a
+given engine does not use them; ``None`` is an empty pytree, so the plain
+dense engine's jitted tick never sees (or pays for) the speculative fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def _leaf(pspec: P, doc: str, default=dataclasses.MISSING):
+    """A TickState field with its declared mesh placement.
+
+    The ``pspec`` metadata is the single source of truth for the leaf's
+    sharding — :meth:`TickState.shardings` builds device placements from it
+    and the pytree lint (tests/test_tickstate_spec.py) walks it."""
+    return dataclasses.field(default=default,
+                             metadata={"pspec": pspec, "doc": doc})
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TickState:
+    """Per-slot device state threaded through every jitted serving step.
+
+    All vectors are indexed by slot (``ServeConfig.max_slots``); shapes never
+    change after construction, so every consumer compiles exactly once.
+    """
+
+    # -- slot metadata ------------------------------------------------------
+    last_tok: Array = _leaf(P(), "(S,) i32 — last emitted token per slot")
+    pos: Array = _leaf(P(), "(S,) i32 — next decode position per slot")
+    active: Array = _leaf(P(), "(S,) bool — slot occupancy mask")
+    adapter_ids: Array = _leaf(P(), "(S,) i32 — stacked-bank adapter route")
+    # -- sampling state -----------------------------------------------------
+    temps: Array = _leaf(P(), "(S,) f32 — per-request temperature")
+    seeds: Array = _leaf(P(), "(S,) i32 — per-request PRNG seed")
+    gen_idx: Array = _leaf(P(), "(S,) i32 — tokens generated so far")
+    # -- output accumulation ------------------------------------------------
+    out_buf: Array = _leaf(P(), "(S, max_new) i32 — on-device token buffer")
+    # -- paged-cache state (None on dense engines) --------------------------
+    block_table: Optional[Array] = _leaf(
+        P(), "(S, n_tbl) i32 — page ids per slot; zeros route to trash page",
+        default=None)
+    # -- speculative / draft state (None on non-speculative engines) --------
+    spec: Optional[Array] = _leaf(
+        P(), "(S,) bool — per-request speculative opt-in", default=None)
+    max_new: Optional[Array] = _leaf(
+        P(), "(S,) i32 — per-request budget (γ-round emit cap)", default=None)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def zeros(cls, n_slots: int, max_new_tokens: int, *, n_tbl: int = 0,
+              speculative: bool = False) -> "TickState":
+        """The all-free initial state.  ``n_tbl > 0`` adds the paged block
+        table (all-zero rows route garbage writes to the trash page);
+        ``speculative=True`` adds the draft-round fields."""
+        S = n_slots
+        return cls(
+            last_tok=jnp.zeros((S,), jnp.int32),
+            pos=jnp.zeros((S,), jnp.int32),
+            active=jnp.zeros((S,), bool),
+            adapter_ids=jnp.zeros((S,), jnp.int32),
+            temps=jnp.zeros((S,), jnp.float32),
+            seeds=jnp.zeros((S,), jnp.int32),
+            gen_idx=jnp.zeros((S,), jnp.int32),
+            out_buf=jnp.zeros((S, max_new_tokens), jnp.int32),
+            block_table=(jnp.zeros((S, n_tbl), jnp.int32) if n_tbl else None),
+            spec=(jnp.zeros((S,), bool) if speculative else None),
+            max_new=(jnp.zeros((S,), jnp.int32) if speculative else None),
+        )
+
+    # -- functional update --------------------------------------------------
+
+    def replace(self, **kw) -> "TickState":
+        """``dataclasses.replace`` spelled as a method — the one mutation
+        idiom, in jitted ticks and host-side bookkeeping alike."""
+        return dataclasses.replace(self, **kw)
+
+    # -- declared sharding --------------------------------------------------
+
+    @classmethod
+    def field_specs(cls) -> Dict[str, P]:
+        """{field name: declared PartitionSpec} — every field MUST appear."""
+        return {f.name: f.metadata["pspec"] for f in dataclasses.fields(cls)}
+
+    def specs(self) -> "TickState":
+        """A TickState-shaped pytree of PartitionSpecs (``None`` where the
+        corresponding leaf is absent) — feed to ``sharding.to_shardings``."""
+        declared = self.field_specs()
+        return dataclasses.replace(self, **{
+            name: (None if getattr(self, name) is None else spec)
+            for name, spec in declared.items()})
+
+    def shardings(self, mesh: Mesh) -> "TickState":
+        """NamedShardings for ``jax.device_put`` onto ``mesh``."""
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), self.specs(),
+                            is_leaf=lambda x: isinstance(x, P))

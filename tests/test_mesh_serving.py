@@ -1,0 +1,261 @@
+"""Mesh-sharded serving: token identity + mesh-scope hygiene.
+
+  1. ``sharding.use_mesh`` scope regression — the context is THREAD-LOCAL:
+     nested scopes restore on exit (including under exceptions), and a scope
+     entered on one thread is invisible on another.  Guards the PR-6 fix of
+     the module-global ``_CURRENT`` dict, where a concurrent engine's
+     ``__exit__`` could clobber another thread's mesh mid-trace.
+  2. token identity — the engines serving over an explicit device mesh
+     (weights tensor/expert-parallel on ``model``, KV head-sharded, decode
+     batch on ``data``) emit EXACTLY the tokens the single-device engines
+     emit, across the dense / sliding-window / MoE families, with slot
+     eviction, chunked prefill, copy-on-write shared prefixes, and mixed
+     speculative/plain slots in flight.
+
+The identity tests need a multi-device platform; CI forces one on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE jax
+imports).  On a single device they skip.
+"""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_smoke
+from repro.core import loram, recovery
+from repro.distributed import sharding
+from repro.models import init_params, make_plan
+from repro.models.model import init_lora
+from repro.serving import (AdapterRegistry, ContinuousServeEngine,
+                           SpeculativeServeEngine, draft_from_setup)
+
+RNG = jax.random.PRNGKey(0)
+LORA_CFG = LoRAConfig(rank=4)
+LORAM_CFG = LoRAMConfig(method="stru", ratio=0.5, keep_first=0, keep_last=0)
+
+N_DEV = len(jax.devices())
+needs_devices = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs a multi-device platform (run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# (data, model) shapes to exercise; 2x2 additionally covers the dense-cache
+# slot axis actually splitting over ``data``
+MESHES = [(1, 2)] + ([(2, 2)] if N_DEV >= 4 else [])
+
+
+# ---------------------------------------------------------------------------
+# 1. thread-local mesh scope (runs on any device count)
+# ---------------------------------------------------------------------------
+
+def _mesh(axis="model"):
+    return jax.make_mesh((1,), (axis,))
+
+
+def test_use_mesh_nested_scopes_restore():
+    outer, inner = _mesh("model"), _mesh("data")
+    assert sharding.current_mesh() is None
+    with sharding.use_mesh(outer, head_shard=True):
+        assert sharding.current_mesh() is outer
+        with sharding.use_mesh(inner):
+            assert sharding.current_mesh() is inner
+        # inner exit restores the OUTER scope, flags included
+        assert sharding.current_mesh() is outer
+        assert sharding._ctx()["head_shard"] is True
+    assert sharding.current_mesh() is None
+    assert sharding._ctx()["head_shard"] is False
+
+
+def test_use_mesh_restores_on_exception():
+    with pytest.raises(RuntimeError, match="boom"):
+        with sharding.use_mesh(_mesh()):
+            raise RuntimeError("boom")
+    assert sharding.current_mesh() is None
+
+
+def test_use_mesh_scopes_are_thread_local():
+    """A second engine's scope on another thread must neither observe nor
+    clobber this thread's mesh — the module-global-dict regression."""
+    m_main, m_worker = _mesh("model"), _mesh("data")
+    entered, release = threading.Event(), threading.Event()
+    seen = {}
+
+    def worker():
+        seen["before"] = sharding.current_mesh()
+        with sharding.use_mesh(m_worker):
+            seen["inside"] = sharding.current_mesh()
+            entered.set()
+            release.wait(10)
+        seen["after"] = sharding.current_mesh()
+
+    with sharding.use_mesh(m_main, head_shard=True):
+        t = threading.Thread(target=worker)
+        t.start()
+        assert entered.wait(10)
+        # the worker is INSIDE its scope right now — ours must be untouched
+        assert sharding.current_mesh() is m_main
+        assert sharding._ctx()["head_shard"] is True
+        release.set()
+        t.join(10)
+        assert sharding.current_mesh() is m_main
+    assert sharding.current_mesh() is None
+    assert seen["before"] is None          # main's scope invisible to worker
+    assert seen["inside"] is m_worker
+    assert seen["after"] is None
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures
+# ---------------------------------------------------------------------------
+
+def _mk_registry(plan, n=4):
+    def mk(seed):
+        lora = init_lora(plan, LORA_CFG, jax.random.PRNGKey(seed))
+        return jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), lora)
+
+    adapters = {"math": mk(11), "code": mk(22)}
+    reg = AdapterRegistry(adapters["math"], max_adapters=n)
+    for name, lora in adapters.items():
+        reg.add(name, lora)
+    return reg
+
+
+def _run(plan, params, registry, cfg_kw, work, draft=None):
+    """Serve ``work`` (list of (prompt, submit-kwargs)) through one engine;
+    returns tokens in submission order."""
+    sc = ServeConfig(**cfg_kw)
+    if draft is not None:
+        eng = SpeculativeServeEngine(plan, params, sc, registry, draft,
+                                     lora_scale=LORA_CFG.scale)
+    else:
+        eng = ContinuousServeEngine(plan, params, sc, registry,
+                                    lora_scale=LORA_CFG.scale)
+    uids = [eng.submit(p, **kw) for p, kw in work]
+    res = eng.run()
+    return [np.asarray(res[u].tokens) for u in uids], eng
+
+
+def _assert_identical(ref, got, work):
+    assert len(ref) == len(got) == len(work)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(
+            g, r, err_msg=f"request #{i} ({work[i][1]}) diverged between "
+                          f"single-device and mesh-sharded serving")
+
+
+# ---------------------------------------------------------------------------
+# 2. token identity across families, with eviction
+# ---------------------------------------------------------------------------
+
+@needs_devices
+@pytest.mark.parametrize("mesh_shape", MESHES)
+@pytest.mark.parametrize("arch",
+                         ["yi-34b", "gemma3-12b", "deepseek-moe-16b"])
+def test_sharded_engine_token_identical_with_eviction(arch, mesh_shape):
+    """Dense-cache continuous engine, 6 requests > 2 slots → every slot is
+    evicted and re-admitted; mixed adapters and prompt lengths in flight."""
+    cfg = get_smoke(arch)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    registry = _mk_registry(plan)
+
+    rs = np.random.default_rng(0)
+    spec = [(6, "math", 5), (9, "code", 4), (4, None, 5),
+            (9, "math", 3), (6, "code", 5), (4, "math", 4)]
+    work = [(rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32),
+             dict(max_new_tokens=m, adapter=a)) for n, a, m in spec]
+
+    base = dict(max_seq_len=48, max_slots=2, max_adapters=4,
+                max_new_tokens=8, kv_cache_dtype="float32")
+    ref, ref_eng = _run(plan, params, registry, base, work)
+    assert ref_eng.mesh is None
+    data, model = mesh_shape
+    got, eng = _run(plan, params, registry,
+                    {**base, "mesh_data": data, "mesh_model": model}, work)
+    assert eng.mesh is not None and eng.mesh.shape["model"] == model
+    _assert_identical(ref, got, work)
+
+
+@needs_devices
+def test_sharded_paged_chunked_prefill_and_shared_prefix_identical():
+    """Paged pools + chunked prefill + copy-on-write prefix sharing, all
+    mesh-sharded at once — page ids are a global namespace replicated over
+    ``data``, so the allocator's decisions (and the tokens) cannot depend
+    on the device count."""
+    cfg = get_smoke("yi-34b")
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    registry = _mk_registry(plan)
+
+    rs = np.random.default_rng(3)
+    prefix = rs.integers(2, cfg.vocab_size, (10,)).astype(np.int32)
+    work = []
+    for i in range(5):
+        suffix = rs.integers(2, cfg.vocab_size,
+                             (int(rs.integers(3, 8)),)).astype(np.int32)
+        work.append((np.concatenate([prefix, suffix]),
+                     dict(max_new_tokens=4 + i % 3,
+                          adapter=("math", "code", None)[i % 3],
+                          prefix_id="system", prefix_len=len(prefix))))
+
+    base = dict(max_seq_len=64, max_slots=2, max_adapters=4,
+                max_new_tokens=8, kv_cache_dtype="float32",
+                kv_paging=True, kv_page_size=8, prefill_chunk=8,
+                prefix_sharing=True)
+    ref, ref_eng = _run(plan, params, registry, base, work)
+    got, eng = _run(plan, params, registry,
+                    {**base, "mesh_data": 1, "mesh_model": 2}, work)
+    assert eng.mesh is not None
+    assert eng.n_prefill_chunks > 0        # chunking actually engaged
+    assert eng.n_prefix_hits >= 1          # sharing actually engaged
+    # the host allocator is device-count-agnostic: identical page telemetry
+    assert eng.pages.peak_in_use == ref_eng.pages.peak_in_use
+    _assert_identical(ref, got, work)
+
+
+@needs_devices
+def test_sharded_speculative_token_identical():
+    """The pruned draft runs on the SAME mesh as the target; mixed
+    speculative/plain slots, greedy — tokens must match the single-device
+    speculative engine exactly."""
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    setup = loram.setup(plan, params, LORAM_CFG, LORA_CFG,
+                        jax.random.PRNGKey(1))
+    draft = draft_from_setup(setup, max_adapters=4)
+
+    registry = None
+    for name, seed in [("math", 11), ("code", 22)]:
+        small = init_lora(setup.small_plan, LORA_CFG, jax.random.PRNGKey(seed))
+        small = jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), small)
+        full = recovery.recover_lora(small, setup.spec, plan,
+                                     setup.small_plan)
+        if registry is None:
+            registry = AdapterRegistry(full, max_adapters=4)
+        registry.add(name, full)
+        draft.add(name, small)
+
+    rs = np.random.default_rng(1)
+    spec = [(6, "math", 5, True), (9, "code", 4, False), (4, None, 5, True),
+            (9, "math", 3, True), (6, "code", 4, True)]
+    work = [(rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32),
+             dict(max_new_tokens=m, adapter=a, speculative=sp))
+            for n, a, m, sp in spec]
+
+    base = dict(max_seq_len=64, max_slots=2, max_adapters=4,
+                max_new_tokens=8, kv_cache_dtype="float32", draft_gamma=3)
+    ref, _ = _run(plan, params, registry, base, work, draft=draft)
+    got, eng = _run(plan, params, registry,
+                    {**base, "mesh_data": 1, "mesh_model": 2}, work,
+                    draft=draft)
+    assert eng.mesh is not None
+    assert eng.n_proposed > 0 and eng.n_rounds > 0
+    _assert_identical(ref, got, work)

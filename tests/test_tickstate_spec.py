@@ -1,0 +1,126 @@
+"""Pytree/sharding lint for the jitted tick state.
+
+The PR-6 contract: the state threaded through every jitted serving step is
+ONE explicit dataclass pytree (``repro.serving.tickstate.TickState``) in
+which every field declares its mesh placement up front.  These tests fail
+the build if
+
+  * a field is added without a declared ``PartitionSpec`` (or a doc string),
+  * the pytree registration drifts (leaf count vs populated fields),
+  * anything dict-shaped re-enters a jitted tick signature — the untyped
+    ``Dict[str, Array]`` this refactor deleted must not come back.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ServeConfig, get_smoke
+from repro.models import init_params, make_plan
+from repro.serving import ContinuousServeEngine
+from repro.serving.tickstate import TickState
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dict_leaves(tree):
+    return [x for x in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, dict)) if isinstance(x, dict)]
+
+
+# ---------------------------------------------------------------------------
+# declared placement: every field, no exceptions
+# ---------------------------------------------------------------------------
+
+def test_every_field_declares_partition_spec_and_doc():
+    fields = dataclasses.fields(TickState)
+    assert fields, "TickState lost its fields?"
+    declared = TickState.field_specs()
+    assert set(declared) == {f.name for f in fields}
+    for f in fields:
+        assert "pspec" in f.metadata, (
+            f"TickState.{f.name} added without a declared PartitionSpec — "
+            f"use the _leaf() helper")
+        assert isinstance(f.metadata["pspec"], P), f.name
+        assert f.metadata.get("doc"), f"TickState.{f.name} has no doc"
+
+
+def test_specs_mirror_populated_fields_only():
+    st = TickState.zeros(4, 8, n_tbl=3, speculative=False)
+    sp = st.specs()
+    assert isinstance(sp.block_table, P)
+    assert sp.spec is None and sp.max_new is None      # absent leaves
+    assert all(isinstance(getattr(sp, n), P)
+               for n in ("last_tok", "pos", "active", "out_buf"))
+
+
+def test_shardings_cover_every_populated_leaf():
+    mesh = jax.make_mesh((1,), ("model",))
+    st = TickState.zeros(2, 4, n_tbl=2, speculative=True)
+    sh = st.shardings(mesh)
+    n_leaves = len(jax.tree.leaves(st))
+    assert len(jax.tree.leaves(
+        sh, is_leaf=lambda x: hasattr(x, "mesh"))) == n_leaves
+    placed = jax.device_put(st, sh)
+    assert isinstance(placed, TickState)
+    assert int(placed.pos.shape[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# pytree registration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_tbl,speculative,extra", [
+    (0, False, 0),   # plain dense engine
+    (3, False, 1),   # paged
+    (0, True, 2),    # speculative dense
+    (3, True, 3),    # speculative paged
+])
+def test_leaf_count_matches_populated_fields(n_tbl, speculative, extra):
+    st = TickState.zeros(4, 8, n_tbl=n_tbl, speculative=speculative)
+    populated = sum(getattr(st, f.name) is not None
+                    for f in dataclasses.fields(TickState))
+    leaves, treedef = jax.tree.flatten(st)
+    assert len(leaves) == populated == 8 + extra
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, TickState)
+
+
+def test_replace_traces_under_jit():
+    st = TickState.zeros(4, 8)
+
+    @jax.jit
+    def tick(s):
+        return s.replace(pos=s.pos + 1,
+                         out_buf=s.out_buf.at[:, 0].set(s.last_tok))
+
+    out = tick(st)
+    assert isinstance(out, TickState)
+    assert int(out.pos[0]) == 1
+    with pytest.raises(TypeError):
+        st.replace(bogus_field=jnp.zeros(4))   # closed field set
+
+
+# ---------------------------------------------------------------------------
+# no dict leaf in any tick signature
+# ---------------------------------------------------------------------------
+
+def test_tickstate_has_no_dict_leaves():
+    st = TickState.zeros(4, 8, n_tbl=2, speculative=True)
+    assert not _dict_leaves(st)
+
+
+def test_live_engine_state_is_tickstate_not_dict():
+    """The lint that bites: a real engine's jitted-tick operand must be a
+    TickState with zero dict-shaped leaves."""
+    cfg = get_smoke("yi-34b")
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=32, max_slots=2, max_new_tokens=8,
+                    kv_cache_dtype="float32"))
+    assert isinstance(eng._st, TickState)
+    assert not _dict_leaves(eng._st)
