@@ -59,6 +59,7 @@ from repro.core import loram, recovery
 from repro.core.pruning import zero_prunable_tail
 from repro.models import init_params, make_plan
 from repro.models.model import init_lora
+from repro.obs import latency_summary, metric_value
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
                            ServeEngine, SpeculativeServeEngine,
                            auto_pool_pages, draft_from_setup)
@@ -150,24 +151,45 @@ def _per_device_bytes(tree):
     return total
 
 
-def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q))
-
-
-def _tail_ms(ttfts, e2es, suffix=""):
-    """{ttft,e2e}_{p50,p99}[suffix]_ms over per-request seconds."""
-    return {
-        f"ttft_p50{suffix}_ms": round(_pct(ttfts, 50) * 1e3, 3),
-        f"ttft_p99{suffix}_ms": round(_pct(ttfts, 99) * 1e3, 3),
-        f"e2e_p50{suffix}_ms": round(_pct(e2es, 50) * 1e3, 3),
-        f"e2e_p99{suffix}_ms": round(_pct(e2es, 99) * 1e3, 3),
-    }
-
-
 def latency_stats(results):
-    """p50/p99 TTFT and end-to-end latency (ms) over a results dict."""
-    return _tail_ms([r.ttft_s for r in results.values()],
-                    [r.latency_s for r in results.values()])
+    """p50/p99 TTFT and end-to-end latency (ms) over a results dict.
+    Field names and rounding come from :func:`repro.obs.latency_summary`
+    (the same helper behind the launcher snapshot), so the bench and the
+    observability stack can never disagree on percentile semantics."""
+    return latency_summary([r.ttft_s for r in results.values()],
+                           [r.latency_s for r in results.values()])
+
+
+OBS_COUNTERS = {
+    # results key → registry metric; the bench reads the same registry a
+    # --metrics-json snapshot would serialize, not engine attributes
+    "prefill_tokens": "serve_prefill_tokens_total",
+    "decode_tokens": "serve_decode_tokens_total",
+    "requests_completed": "serve_requests_completed_total",
+    "ticks": "serve_ticks_total",
+    "preemptions": "serve_preemptions_total",
+}
+
+
+def obs_section(eng):
+    """Registry-derived telemetry block for BENCH_serving.json: core
+    counters read through the metrics-registry snapshot, the tick-span
+    summary, and the lifecycle-event counts.  Counters cover every pass the
+    engine ran (warm-up + timed) — they are cross-checked against the event
+    log, not against the best-of timing."""
+    snap = eng.metrics.snapshot()
+    sec = {k: int(metric_value(snap, name))
+           for k, name in OBS_COUNTERS.items()}
+    if getattr(eng, "paged", False):
+        sec["pages_peak_in_use"] = int(
+            metric_value(snap, "serve_pages_peak_in_use"))
+        sec["pages_pool_size"] = int(
+            metric_value(snap, "serve_pages_pool_size"))
+    sec["spans"] = {name: {"count": s["count"],
+                           "total_ms": round(s["total_s"] * 1e3, 3)}
+                    for name, s in eng.tracer.summary().items()}
+    sec["event_counts"] = eng.events.counts()
+    return sec
 
 
 def run_continuous(plan, params, registry, work, slots, lora_scale,
@@ -264,6 +286,25 @@ def validate_results(results):
     for key in ("prefix_hits", "prefill_tokens_saved", "pages_shared"):
         assert key in pfx["shared"], f"prefix.shared missing {key}"
     assert isinstance(results.get("speedups"), dict)
+    # registry-derived telemetry: present for both continuous engines, with
+    # counters consistent with the lifecycle-event log
+    ob = results.get("obs")
+    assert isinstance(ob, dict), "obs section missing"
+    for name in ("continuous", "paged"):
+        assert name in ob, f"obs missing {name}"
+        sec = ob[name]
+        missing = (set(OBS_COUNTERS) | {"spans", "event_counts"}) - set(sec)
+        assert not missing, f"obs[{name}] missing {sorted(missing)}"
+        ev = sec["event_counts"]
+        assert sec["requests_completed"] == ev.get("complete", 0), (
+            f"obs[{name}]: requests_completed={sec['requests_completed']} "
+            f"!= complete events={ev.get('complete', 0)}")
+        assert ev.get("submit", 0) == ev.get("complete", 0), (
+            f"obs[{name}]: {ev.get('submit', 0)} submits but "
+            f"{ev.get('complete', 0)} completes — requests leaked")
+        assert sec["spans"].get("tick", {}).get("count", 0) > 0, (
+            f"obs[{name}]: no tick spans recorded")
+    assert "pages_peak_in_use" in ob["paged"], "obs.paged missing pages"
 
 
 # ---------------------------------------------------------------------------
@@ -321,10 +362,9 @@ def run_latency(plan, params, registry, work, slots, lora_scale, lat,
     if interval is None:
         interval = (time.perf_counter() - t0) / len(work)
     # the warm-up drained the whole workload once — zero the telemetry so
-    # the reported counters describe the measured open-loop run only
-    eng.n_prefill_chunks = 0
-    eng.n_ticks_during_prefill = 0
-    eng.n_prefill_tokens = 0
+    # the reported counters/spans/events describe the measured open-loop
+    # run only
+    eng.reset_telemetry()
 
     # burst arrivals: each long job and the shorts behind it arrive
     # together; bursts are spaced so the previous one has mostly drained
@@ -582,9 +622,11 @@ def main():
 
     def tail(ttft, e2e, is_long):
         short = [u for u in ttft if not is_long[u]]
-        stats = _tail_ms([ttft[u] for u in ttft], [e2e[u] for u in e2e])
-        short_stats = _tail_ms([ttft[u] for u in short],
-                               [e2e[u] for u in short], suffix="_short")
+        stats = latency_summary([ttft[u] for u in ttft],
+                                [e2e[u] for u in e2e])
+        short_stats = latency_summary([ttft[u] for u in short],
+                                      [e2e[u] for u in short],
+                                      suffix="_short")
         return {**stats,
                 "ttft_p50_short_ms": short_stats["ttft_p50_short_ms"],
                 "ttft_p99_short_ms": short_stats["ttft_p99_short_ms"]}
@@ -672,6 +714,12 @@ def main():
                        "pages_shared": shr_eng.n_prefix_pages_shared},
         },
         "speedups": {"paged_vs_continuous": round(paged_tps / cont_tps, 3)},
+        # registry-derived telemetry (same source as --metrics-json): the
+        # schema guard cross-checks these counters against the event log
+        "obs": {
+            "continuous": obs_section(cont_eng),
+            "paged": obs_section(paged_eng),
+        },
     }
 
     if not args.smoke:

@@ -322,6 +322,21 @@ class ServeConfig:
     # table in repro/serving/engine.py for what lands on which axis.
     mesh_data: int = 1               # pure DP (dense slot axis, activations)
     mesh_model: int = 1              # tensor/expert parallel (heads, FFN, EP)
+    # observability (repro.obs): metrics registry + tick tracer + lifecycle
+    # event log.  Strictly host-side — instrumentation never enters a jitted
+    # function, changes emitted tokens, or adds TickState leaves.  The
+    # registry's counters stay on even when obs=False (they back the
+    # engines' n_* accessors); the switch gates the tracer and event log.
+    obs: bool = True                 # span tracer + event log on
+    obs_trace_capacity: int = 512    # span ring size (old spans fall off)
+    obs_event_capacity: int = 4096   # lifecycle-event ring size
+    obs_device_sync: bool = False    # block_until_ready at every span close:
+                                     # honest per-phase device timings at the
+                                     # cost of dispatch pipelining
+    # opt-in straggler detection: EWMA of tick wall-clock via
+    # runtime.watchdog.StepWatchdog; a straggler tick is COUNTED
+    # (serve_stalls_total + a "stall" event), never raised
+    tick_watchdog: bool = False
 
 
 def round_to(x: int, mult: int) -> int:

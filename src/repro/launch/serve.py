@@ -19,6 +19,13 @@ not exceed ``len(jax.devices())``; on CPU export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.  ``1,1``
 (default) serves single-device with the mesh machinery compiled away.
 Tokens are identical to the single-device engine either way.
+
+``--metrics-json PATH`` dumps the full observability snapshot (metrics
+registry + tick-span summary + request lifecycle events + per-request
+results, see ``repro.obs``) after the run, validated against the checked-in
+``repro/obs/snapshot.schema.json``.  ``--metrics-port PORT`` additionally
+serves live Prometheus text at ``/metrics`` (JSON at ``/metrics.json``)
+while the process runs.
 """
 from __future__ import annotations
 
@@ -29,12 +36,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_arch, get_smoke
 from repro.core import loram
 from repro.models import init_params, make_plan
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
                            ServeEngine, SpeculativeServeEngine,
                            draft_from_setup)
+
+
+def _export_metrics(args, eng, results=None) -> None:
+    """``--metrics-json``: one schema-validated snapshot per run, with the
+    engine-reported per-request timings alongside the event log so the two
+    clocks can be cross-checked (CI does)."""
+    if not args.metrics_json:
+        return
+    extra = None
+    if results is not None:
+        extra = {"requests": {
+            str(uid): {"ttft_s": r.ttft_s, "latency_s": r.latency_s,
+                       "n_generated": r.n_generated}
+            for uid, r in results.items()}}
+    obs.write_snapshot(args.metrics_json, eng.metrics, eng.tracer,
+                       eng.events, extra=extra)
+    print(f"[serve] metrics snapshot -> {args.metrics_json}")
 
 
 def main():
@@ -79,6 +104,16 @@ def main():
     ap.add_argument("--mesh", type=str, default="1,1", metavar="DATA,MODEL",
                     help="serve over a DATAxMODEL device mesh (batch over "
                          "data, heads/experts over model); 1,1 = no mesh")
+    ap.add_argument("--metrics-json", type=str, default=None, metavar="PATH",
+                    help="write the observability snapshot (metrics + spans "
+                         "+ lifecycle events + per-request results) here "
+                         "after the run")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve live Prometheus text on this port at "
+                         "/metrics (JSON at /metrics.json) while running")
+    ap.add_argument("--tick-watchdog", action="store_true",
+                    help="count straggler ticks via the step watchdog "
+                         "(serve_stalls_total / serve_tick_ewma_s)")
     args = ap.parse_args()
     try:
         mesh_data, mesh_model = (int(v) for v in args.mesh.split(","))
@@ -115,7 +150,8 @@ def main():
             kv_paging=args.paged, kv_page_size=args.page_size,
             kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
             prefix_sharing=args.prefix_sharing,
-            mesh_data=mesh_data, mesh_model=mesh_model)
+            mesh_data=mesh_data, mesh_model=mesh_model,
+            tick_watchdog=args.tick_watchdog)
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)
@@ -124,6 +160,8 @@ def main():
                                          draft)
         else:
             eng = ContinuousServeEngine(plan, params, serve_cfg, registry)
+        server = (obs.serve_http(eng.metrics, args.metrics_port, eng.tracer,
+                                 eng.events) if args.metrics_port else None)
         t0 = time.perf_counter()
         prefix_kw = {}
         if args.prefix_sharing:
@@ -159,6 +197,9 @@ def main():
                   f"{eng.n_prefix_pages_shared} shared page mappings")
         for uid in sorted(results)[:4]:
             print(f"  uid={uid} tokens={results[uid].tokens[:12]}")
+        _export_metrics(args, eng, results)
+        if server is not None:
+            server.shutdown()
         return
 
     eng = ServeEngine(plan, params if args.no_merge else merged,
@@ -171,11 +212,16 @@ def main():
         fe = np.zeros((args.batch, cfg.enc_len, cfg.d_model), np.float32)
     elif cfg.family == "vlm":
         fe = np.zeros((args.batch, cfg.n_patches, cfg.d_model), np.float32)
+    server = (obs.serve_http(eng.metrics, args.metrics_port, eng.tracer,
+                             eng.events) if args.metrics_port else None)
     res = eng.generate(prompts, max_new_tokens=args.new_tokens,
                        temperature=args.temperature, frontend=fe)
     print(f"[serve] generated {res.tokens.shape}; prefill {res.prefill_s:.3f}s; "
           f"decode {res.decode_s:.3f}s; {res.tokens_per_s:.1f} tok/s")
     print(res.tokens[:, :12])
+    _export_metrics(args, eng)
+    if server is not None:
+        server.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,131 @@
+"""Serving observability: metrics registry, tick tracer, lifecycle events.
+
+Three host-side instruments (never inside jit — instrumentation must not
+change emitted tokens or jitted tick signatures, and ``TickState`` gains no
+leaves for it):
+
+* :mod:`repro.obs.metrics` — typed, thread-safe registry of counters /
+  gauges / histograms with Prometheus-style labels.
+* :mod:`repro.obs.trace` — ring-buffer spans around each scheduling phase,
+  aligned with XLA profiles via ``jax.profiler.TraceAnnotation``.
+* :mod:`repro.obs.events` — per-request lifecycle event log
+  (submit → admit → prefill_chunk × N → first_token → preempt → complete),
+  optionally streamed to JSONL.
+* :mod:`repro.obs.export` — Prometheus text page, schema-stable JSON
+  snapshot (``snapshot.schema.json``), and the ``--metrics-port`` HTTP
+  endpoint.
+
+Engines attach all three when ``ServeConfig.obs`` is true (the default);
+``eng.metrics`` / ``eng.tracer`` / ``eng.events`` are the public handles
+(``eng.registry`` stays the ADAPTER registry), and
+``repro.obs.export.snapshot(eng.metrics, eng.tracer, eng.events)`` is the
+one-call export.
+
+Metrics reference
+=================
+
+Every serving registry carries the constant label ``engine`` (``sync`` |
+``continuous`` | ``speculative``), so multi-engine snapshots stay
+distinguishable.
+
+Counters (monotonic totals; reset only via ``registry.reset()`` or the
+legacy ``eng.n_* = 0`` property setters kept for the benchmark warm-up):
+
+``serve_prefill_tokens_total`` (tokens)
+    Prompt tokens pushed through prefill, including re-prefill after a
+    preemption and tokens skipped by a prefix hit (counted when admitted,
+    matching the legacy ``n_prefill_tokens``).
+``serve_decode_tokens_total`` (tokens)
+    Tokens emitted by decode ticks / accepted by speculative verify.
+    Moves once per host sync, by the number of live slots that advanced.
+``serve_requests_completed_total`` (requests)
+    Finalized requests (EOS or max-token budget).  Equals the event log's
+    ``complete`` count — pinned by ``tests/test_obs.py``.
+``serve_prefill_chunks_total`` (chunks)
+    Chunked-prefill dispatches.  One admission = ceil(prompt/chunk) chunks.
+``serve_ticks_total`` (ticks)
+    Jitted decode-tick (or speculative-round) dispatches.
+``serve_ticks_during_prefill_total`` (ticks)
+    Decode ticks interleaved while at least one slot was mid-prefill — the
+    "chunked prefill is actually overlapping" signal.
+``serve_prefix_hits_total`` (requests)
+    Admissions that found a shared-prefix match (COW page sharing).
+``serve_prefix_tokens_saved_total`` (tokens)
+    Prompt tokens NOT re-prefilled thanks to prefix hits.
+``serve_prefix_pages_shared_total`` (pages)
+    KV pages mapped copy-on-write instead of allocated fresh.
+``serve_preemptions_total`` (requests)
+    Slots evicted under page pressure and requeued at the head.
+``serve_stalls_total`` (ticks)
+    Watchdog-flagged straggler ticks (``ServeConfig.tick_watchdog``); the
+    alarm is counted, never raised, in serving.
+``spec_rounds_total`` / ``spec_tokens_proposed_total`` /
+``spec_tokens_accepted_total``
+    Speculative engine only: draft→verify rounds, γ-sized proposals, and
+    verifier-accepted tokens.  ``accepted/proposed`` is the acceptance rate.
+
+Gauges (point-in-time; most are bound to live engine state and resolved at
+snapshot time, so the hot loop never pays for them):
+
+``serve_pages_in_use`` / ``serve_pages_free`` / ``serve_pages_peak_in_use``
+/ ``serve_pages_pool_size`` (pages)
+    Page-pool occupancy from ``serving/pages.PageAllocator`` (paged
+    engines only); ``peak_in_use`` is the high-water mark that sizes pools.
+``serve_slots_occupied`` / ``serve_slots_active`` (slots)
+    Scheduler slots holding any request vs. slots actively decoding.
+``serve_queue_depth`` (requests)
+    Submitted-but-not-admitted requests waiting in the scheduler.
+``serve_adapter_active_slots{adapter=...}`` (slots)
+    Active slots per LoRA adapter name (``__base__`` for adapter-less),
+    from ``serving/adapters.AdapterRegistry`` — a dynamic label family.
+``spec_acceptance_ema`` (ratio) / ``spec_gamma`` (tokens)
+    ``GammaController`` EMA acceptance and the γ it currently proposes.
+``serve_tick_ewma_s`` (seconds)
+    ``StepWatchdog`` EWMA of tick wall-clock (watchdog enabled only).
+``hbm_bytes{component,device}`` (bytes)
+    Per-device HBM attribution for ``weights`` / ``kv_cache`` /
+    ``adapter_bank`` under the mesh — the LoRAM resource story, live.
+
+Histograms (fixed ``LATENCY_BUCKETS`` edges, seconds):
+
+``serve_ttft_seconds``
+    Time to first token per completed request (same stamp as
+    ``RequestResult.ttft_s``).
+``serve_e2e_latency_seconds``
+    Submit-to-complete latency per request.
+
+Event log reference
+===================
+
+Each record: ``{"t": perf_counter float, "kind": ..., "uid": ...}`` plus
+kind-specific fields.  ``t`` shares the clock domain of the engines' TTFT
+stamps, so ``EventLog.derive_ttft(uid) == RequestResult.ttft_s`` exactly.
+
+``submit``      queued; ``n_prompt``, ``adapter``.
+``admit``       placed in a slot; ``slot``, ``adapter``, ``n_prompt``.
+``prefix_hit``  COW match at admission; ``slot``, ``tokens_saved``,
+                ``pages_shared``.
+``prefill_chunk`` one chunk dispatched; ``slot``, ``start``, ``n_tokens``.
+``first_token`` first decode token surfaced; the TTFT stamp.  Emitted at
+                most once per uid (setdefault-guarded — a preempted-then-
+                readmitted request keeps its true TTFT).
+``preempt``     evicted under page pressure; ``slot``, ``pages_freed``;
+                the request is requeued at the head.
+``stall``       watchdog straggler tick; uid is -1 (engine-scoped).
+``complete``    finalized; ``slot``, ``n_generated``.
+"""
+from repro.obs.events import EVENT_KINDS, EventLog
+from repro.obs.export import (metric_value, render_prometheus, serve_http,
+                              snapshot, validate_snapshot, write_snapshot)
+from repro.obs.metrics import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                               MetricsRegistry, latency_summary, percentile)
+from repro.obs.trace import Span, TickTracer
+
+__all__ = [
+    "EVENT_KINDS", "EventLog",
+    "metric_value", "render_prometheus", "serve_http", "snapshot",
+    "validate_snapshot", "write_snapshot",
+    "LATENCY_BUCKETS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "latency_summary", "percentile",
+    "Span", "TickTracer",
+]

@@ -1,0 +1,120 @@
+"""Request-lifecycle event log: one record per scheduling transition.
+
+The serving engines emit a bounded stream of host-side records tracing each
+request from ``submit`` through ``admit``, ``prefix_hit``,
+``prefill_chunk`` × N, ``first_token``, ``preempt`` (with implicit
+requeue-at-head), ``stall`` (watchdog), to ``complete`` — each carrying the
+uid plus whatever attribution the engine knows at that instant (slot,
+adapter, prefix hit, pages held, tokens).  This is what lets a TTFT or p99
+regression be blamed on SCHEDULING (admission waited on pages; prefill
+yielded to decode ticks; a preemption restarted the prompt) instead of being
+re-derived from benchmark harness stamps after the fact.
+
+Records live in a ring (``capacity``; old records drop and are counted in
+``n_dropped``) and can simultaneously stream to a JSONL file (``path``) —
+one ``json.dumps`` per line, flushed on :meth:`close`, so a crashed run
+still leaves its tail on disk.
+
+Timestamps are ``time.perf_counter()`` floats in the SAME clock domain as
+the engines' TTFT stamps — :meth:`derive_ttft` (``first_token.t`` minus
+``submit.t``) therefore reproduces ``RequestResult.ttft_s`` exactly, which
+``tests/test_obs.py`` pins per request.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import Counter as _TallyCounter
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+# the full lifecycle vocabulary — exported so tests and the snapshot schema
+# agree on what may appear in a record's "kind"
+EVENT_KINDS = ("submit", "admit", "prefix_hit", "prefill_chunk",
+               "first_token", "preempt", "stall", "complete")
+
+
+class EventLog:
+    def __init__(self, capacity: int = 4096, *, enabled: bool = True,
+                 path: Optional[str] = None,
+                 clock=time.perf_counter):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.enabled = enabled
+        self.clock = clock
+        self._records: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self.n_dropped = 0
+        self._counts: _TallyCounter = _TallyCounter()
+        self._file = open(path, "w") if (enabled and path) else None
+
+    def emit(self, kind: str, uid: int, *, t: Optional[float] = None,
+             **fields: Any) -> None:
+        """Append one record.  ``t`` lets the caller reuse a stamp it
+        already took (the engines pass their TTFT stamps through, so the
+        event log and ``RequestResult`` can never disagree)."""
+        if not self.enabled:
+            return
+        assert kind in EVENT_KINDS, kind
+        rec = {"t": self.clock() if t is None else t, "kind": kind,
+               "uid": uid, **fields}
+        with self._lock:
+            if len(self._records) == self.capacity:
+                self.n_dropped += 1
+            self._records.append(rec)
+            self._counts[kind] += 1
+            if self._file is not None:
+                self._file.write(json.dumps(rec) + "\n")
+
+    # -- queries -------------------------------------------------------------
+
+    def records(self, uid: Optional[int] = None,
+                kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        with self._lock:
+            recs = list(self._records)
+        if uid is not None:
+            recs = [r for r in recs if r["uid"] == uid]
+        if kind is not None:
+            recs = [r for r in recs if r["kind"] == kind]
+        return recs
+
+    def counts(self) -> Dict[str, int]:
+        """Total records emitted per kind (including any that have since
+        fallen off the ring) — the counter-vs-event-log consistency hook."""
+        with self._lock:
+            return dict(self._counts)
+
+    def _first_t(self, uid: int, kind: str) -> Optional[float]:
+        for r in self.records(uid=uid, kind=kind):
+            return r["t"]
+        return None
+
+    def derive_ttft(self, uid: int) -> Optional[float]:
+        """``first_token.t - submit.t`` from the ring (None if either record
+        dropped or never happened)."""
+        t0 = self._first_t(uid, "submit")
+        t1 = self._first_t(uid, "first_token")
+        if t0 is None or t1 is None:
+            return None
+        return t1 - t0
+
+    def derive_latency(self, uid: int) -> Optional[float]:
+        t0 = self._first_t(uid, "submit")
+        t1 = self._first_t(uid, "complete")
+        if t0 is None or t1 is None:
+            return None
+        return t1 - t0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+            self._counts.clear()
+            self.n_dropped = 0
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None

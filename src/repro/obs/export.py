@@ -1,0 +1,251 @@
+"""Exposition: Prometheus text page + schema-stable JSON snapshot.
+
+Two renderings of the same registry:
+
+* :func:`render_prometheus` — the standard ``text/plain; version=0.0.4``
+  exposition format (``# HELP`` / ``# TYPE`` headers, ``_bucket{le=...}`` /
+  ``_sum`` / ``_count`` for histograms), scrape-able by any Prometheus.
+* :func:`snapshot` — one JSON document bundling the metrics registry, the
+  tick tracer's span summary, and the request event log.  Its shape is
+  pinned by the checked-in schema ``obs/snapshot.schema.json`` and
+  :func:`validate_snapshot` (a deliberately small JSON-Schema subset
+  interpreter — the container has no ``jsonschema`` package, and the subset
+  keeps the contract readable); CI validates every smoke snapshot against
+  it so the shape cannot drift silently.
+
+:func:`serve_http` puts both behind a background ``http.server`` thread
+(``/metrics`` → Prometheus text, ``/metrics.json`` → snapshot) for
+``launch/serve.py --metrics-port``.
+
+:func:`metric_value` is the read-side helper the serving benchmark uses
+instead of reaching into engine-private attributes.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional
+
+from repro.obs.events import EventLog
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TickTracer
+
+SNAPSHOT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def _fmt_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{str(v).replace(chr(92), chr(92) * 2).replace(chr(34), chr(92) + chr(34))}"'
+                    for k, v in sorted(labels.items()))
+    return "{" + body + "}"
+
+
+def _fmt_value(v: Any) -> str:
+    f = float(v)
+    return repr(int(f)) if f == int(f) else repr(f)
+
+
+def render_prometheus(registry: MetricsRegistry) -> str:
+    lines = []
+    snap = registry.snapshot()
+    for name, m in snap.items():
+        if m["help"]:
+            lines.append(f"# HELP {name} {m['help']}")
+        lines.append(f"# TYPE {name} {m['type']}")
+        for s in m["samples"]:
+            labels = s["labels"]
+            if m["type"] == "histogram":
+                for le, cum in s["buckets"]:
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{_fmt_labels({**labels, 'le': le})} {cum}")
+                lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                             f"{_fmt_value(s['sum'])}")
+                lines.append(f"{name}_count{_fmt_labels(labels)} "
+                             f"{s['count']}")
+            else:
+                lines.append(f"{name}{_fmt_labels(labels)} "
+                             f"{_fmt_value(s['value'])}")
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# JSON snapshot
+# ---------------------------------------------------------------------------
+
+def snapshot(registry: MetricsRegistry, tracer: Optional[TickTracer] = None,
+             events: Optional[EventLog] = None,
+             extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The one schema-stable JSON document: metrics + trace summary +
+    lifecycle events (+ caller extras like per-request results, merged at
+    the top level; extras may not shadow the core sections)."""
+    doc: Dict[str, Any] = {
+        "schema_version": SNAPSHOT_VERSION,
+        "metrics": registry.snapshot(),
+    }
+    if tracer is not None:
+        doc["trace"] = {
+            "capacity": tracer.capacity,
+            "n_recorded": tracer.n_recorded,
+            "summary": tracer.summary(),
+        }
+    if events is not None:
+        doc["events"] = {
+            "capacity": events.capacity,
+            "n_dropped": events.n_dropped,
+            "counts": events.counts(),
+            "records": events.records(),
+        }
+    if extra:
+        clash = set(extra) & set(doc)
+        assert not clash, f"snapshot extras shadow core sections: {clash}"
+        doc.update(extra)
+    return doc
+
+
+def write_snapshot(path: str, registry: MetricsRegistry,
+                   tracer: Optional[TickTracer] = None,
+                   events: Optional[EventLog] = None,
+                   extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Validate-then-write (never persist a malformed snapshot), then
+    re-read and re-validate what actually landed on disk — the same
+    discipline BENCH_serving.json gets."""
+    doc = snapshot(registry, tracer, events, extra)
+    validate_snapshot(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    with open(path) as f:
+        validate_snapshot(json.load(f))
+    return doc
+
+
+def metric_value(snap: Dict[str, Any], name: str,
+                 labels: Optional[Dict[str, str]] = None) -> Any:
+    """Pull one sample out of a registry/snapshot dict.  ``snap`` may be a
+    full snapshot document or a bare ``registry.snapshot()``; ``labels``
+    must match a sample's labels EXCLUDING any registry constant labels
+    (those are matched as a subset).  Histogram samples return their
+    ``{count, sum, buckets}`` view."""
+    metrics = snap.get("metrics", snap)
+    if name not in metrics:
+        raise KeyError(f"metric {name!r} not in snapshot "
+                       f"(have {sorted(metrics)})")
+    want = labels or {}
+    for s in metrics[name]["samples"]:
+        if all(s["labels"].get(k) == str(v) for k, v in want.items()):
+            if metrics[name]["type"] == "histogram":
+                return {k: s[k] for k in ("count", "sum", "buckets")}
+            return s["value"]
+    raise KeyError(f"{name}: no sample matching {want} "
+                   f"(have {[s['labels'] for s in metrics[name]['samples']]})")
+
+
+# ---------------------------------------------------------------------------
+# minimal JSON-Schema subset validator
+# ---------------------------------------------------------------------------
+
+_TYPES = {"object": dict, "array": list, "string": str, "boolean": bool,
+          "null": type(None)}
+
+
+def _check(doc, schema, path):
+    t = schema.get("type")
+    if t is not None:
+        ts = t if isinstance(t, list) else [t]
+        ok = False
+        for tn in ts:
+            if tn == "number":
+                ok |= isinstance(doc, (int, float)) and not isinstance(doc, bool)
+            elif tn == "integer":
+                ok |= isinstance(doc, int) and not isinstance(doc, bool)
+            else:
+                ok |= isinstance(doc, _TYPES[tn])
+        assert ok, f"{path}: expected {t}, got {type(doc).__name__}"
+    if "enum" in schema:
+        assert doc in schema["enum"], f"{path}: {doc!r} not in {schema['enum']}"
+    if "const" in schema:
+        assert doc == schema["const"], f"{path}: {doc!r} != {schema['const']!r}"
+    if isinstance(doc, (int, float)) and not isinstance(doc, bool):
+        if "minimum" in schema:
+            assert doc >= schema["minimum"], f"{path}: {doc} < minimum"
+    if isinstance(doc, dict):
+        for req in schema.get("required", ()):
+            assert req in doc, f"{path}: missing required key {req!r}"
+        props = schema.get("properties", {})
+        for k, v in doc.items():
+            if k in props:
+                _check(v, props[k], f"{path}.{k}")
+            else:
+                ap = schema.get("additionalProperties", True)
+                assert ap is not False, f"{path}: unexpected key {k!r}"
+                if isinstance(ap, dict):
+                    _check(v, ap, f"{path}.{k}")
+    if isinstance(doc, list) and "items" in schema:
+        for i, v in enumerate(doc):
+            _check(v, schema["items"], f"{path}[{i}]")
+
+
+_SCHEMA_CACHE: Dict[str, Any] = {}
+
+
+def load_schema(path: Optional[str] = None) -> Dict[str, Any]:
+    if path is None:
+        import os
+        path = os.path.join(os.path.dirname(__file__),
+                            "snapshot.schema.json")
+    if path not in _SCHEMA_CACHE:
+        with open(path) as f:
+            _SCHEMA_CACHE[path] = json.load(f)
+    return _SCHEMA_CACHE[path]
+
+
+def validate_snapshot(doc: Dict[str, Any],
+                      schema: Optional[Dict[str, Any]] = None) -> None:
+    """Assert ``doc`` matches the checked-in snapshot schema (supports the
+    type / required / properties / additionalProperties / items / enum /
+    const / minimum subset — everything the schema file actually uses)."""
+    _check(doc, schema or load_schema(), "$")
+
+
+# ---------------------------------------------------------------------------
+# HTTP exposition (launch/serve.py --metrics-port)
+# ---------------------------------------------------------------------------
+
+def serve_http(registry: MetricsRegistry, port: int,
+               tracer: Optional[TickTracer] = None,
+               events: Optional[EventLog] = None) -> ThreadingHTTPServer:
+    """Background scrape endpoint: ``/metrics`` (Prometheus text) and
+    ``/metrics.json`` (snapshot).  Returns the server; callers own
+    ``shutdown()``."""
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.rstrip("/") == "/metrics":
+                body = render_prometheus(registry).encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif self.path.rstrip("/") == "/metrics.json":
+                body = json.dumps(snapshot(registry, tracer, events)).encode()
+                ctype = "application/json"
+            else:
+                self.send_error(404)
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):      # silence per-request stderr spam
+            pass
+
+    server = ThreadingHTTPServer(("", port), Handler)
+    threading.Thread(target=server.serve_forever, daemon=True,
+                     name="obs-metrics-http").start()
+    return server

@@ -1,0 +1,377 @@
+"""Typed, thread-safe metrics registry for the serving stack.
+
+Three instrument kinds, deliberately mirroring the Prometheus data model so
+:mod:`repro.obs.export` can render a standard text exposition page:
+
+* :class:`Counter` — monotonically increasing totals (tokens prefilled,
+  requests completed, preemptions).  ``set()`` exists ONLY as the
+  backward-compat reset hook for the engines' legacy ``eng.n_* = 0`` idiom
+  (benchmark warm-up zeroing); new code should use
+  :meth:`MetricsRegistry.reset`.
+* :class:`Gauge` — point-in-time values.  Besides ``set()``, a gauge can be
+  bound to a zero-arg callable (:meth:`Gauge.set_fn`) or — for labelled
+  families whose label set is dynamic, e.g. per-adapter active slots — to a
+  collector returning ``{label_values_tuple: value}``
+  (:meth:`Gauge.set_collector`).  Callables are resolved at READ time
+  (snapshot / exposition), so the hot serving loop never pays for them.
+* :class:`Histogram` — fixed bucket edges declared at creation (cumulative
+  ``le`` semantics).  Fixed edges keep the snapshot schema stable across
+  runs, which is what lets CI diff two snapshots structurally.
+
+Labels: each metric declares its ``labelnames`` up front; ``labels(**kv)``
+binds one child per distinct value tuple (Prometheus-style).  The registry
+itself can carry ``constant_labels`` (e.g. ``{"engine": "paged"}``) that are
+merged into every exported sample — the engines use this so dense / paged /
+speculative snapshots are distinguishable without threading an engine label
+through every call site.
+
+Thread safety: one registry-wide :class:`threading.RLock` guards child
+creation and every mutation.  The instruments are host-side Python — they
+must NEVER appear inside a jitted function (the hard obs constraint:
+instrumentation cannot change emitted tokens or jitted tick signatures).
+
+The module also hosts the pure latency-summary helpers
+(:func:`percentile`, :func:`latency_summary`) that ``benchmarks/
+serve_bench.py`` previously duplicated privately.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+# default histogram edges for request-scale latencies (seconds); the +inf
+# bucket is implicit.  Spans sub-ms ticks through multi-second long-context
+# prefills.
+LATENCY_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+class Metric:
+    """Shared plumbing: name / help / unit / label validation / children."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, unit: str,
+                 labelnames: Tuple[str, ...], lock: threading.RLock):
+        assert name, "metric name required"
+        self.name = name
+        self.help = help
+        self.unit = unit
+        self.labelnames = tuple(labelnames)
+        self._lock = lock
+        self._children: Dict[Tuple[str, ...], Any] = {}
+
+    def _key(self, labels: Dict[str, str]) -> Tuple[str, ...]:
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: got labels {sorted(labels)}, declared "
+                f"{sorted(self.labelnames)}")
+        return tuple(str(labels[n]) for n in self.labelnames)
+
+    def labels(self, **labels):
+        """The child bound to this label-value combination (created on first
+        use).  A metric with no labelnames IS its own sole child."""
+        key = self._key(labels)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._new_child()
+                self._children[key] = child
+        return child
+
+    def _default(self):
+        """The label-less child — valid only when labelnames is empty."""
+        return self.labels()
+
+    def _new_child(self):
+        raise NotImplementedError
+
+    def samples(self) -> List[Tuple[Tuple[str, ...], Any]]:
+        """[(label values, child view)] snapshot under the lock."""
+        with self._lock:
+            return [(k, c.view()) for k, c in sorted(self._children.items())]
+
+    def reset(self) -> None:
+        with self._lock:
+            for c in self._children.values():
+                c.reset()
+
+
+class _CounterChild:
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, lock):
+        self._v = 0.0
+        self._lock = lock
+
+    def inc(self, amount: float = 1) -> None:
+        assert amount >= 0, f"counter decrement ({amount})"
+        with self._lock:
+            self._v += amount
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._v = value
+
+    def value(self) -> float:
+        return self._v
+
+    def view(self) -> float:
+        return self._v
+
+    def reset(self) -> None:
+        self._v = 0.0
+
+
+class Counter(Metric):
+    kind = "counter"
+
+    def _new_child(self):
+        return _CounterChild(self._lock)
+
+    # label-less convenience surface (the common case in the engines)
+    def inc(self, amount: float = 1, **labels) -> None:
+        self.labels(**labels).inc(amount)
+
+    def set(self, value: float, **labels) -> None:
+        self.labels(**labels).set(value)
+
+    def value(self, **labels) -> float:
+        return self.labels(**labels).value()
+
+
+class _GaugeChild:
+    __slots__ = ("_v", "_fn", "_lock")
+
+    def __init__(self, lock):
+        self._v = 0.0
+        self._fn: Optional[Callable[[], float]] = None
+        self._lock = lock
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._v = float(value)
+            self._fn = None
+
+    def set_fn(self, fn: Callable[[], float]) -> None:
+        with self._lock:
+            self._fn = fn
+
+    def value(self) -> float:
+        fn = self._fn
+        return float(fn()) if fn is not None else self._v
+
+    def view(self) -> float:
+        return self.value()
+
+    def reset(self) -> None:
+        if self._fn is None:
+            self._v = 0.0
+
+
+class Gauge(Metric):
+    kind = "gauge"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._collector: Optional[Callable[[], Dict[Tuple[str, ...], float]]] = None
+
+    def _new_child(self):
+        return _GaugeChild(self._lock)
+
+    def set(self, value: float, **labels) -> None:
+        self.labels(**labels).set(value)
+
+    def set_fn(self, fn: Callable[[], float], **labels) -> None:
+        """Bind a zero-arg callable; resolved at snapshot/exposition time."""
+        self.labels(**labels).set_fn(fn)
+
+    def set_collector(
+            self, fn: Callable[[], Dict[Tuple[str, ...], float]]) -> None:
+        """For dynamic label sets: ``fn`` returns the ENTIRE current family
+        as ``{label_values_tuple: value}`` — e.g. active slots keyed by
+        adapter name, where adapters register after engine construction."""
+        with self._lock:
+            self._collector = fn
+
+    def value(self, **labels) -> float:
+        return self.labels(**labels).value()
+
+    def samples(self):
+        coll = self._collector
+        if coll is None:
+            return super().samples()
+        out = dict(super().samples())
+        for key, v in coll().items():
+            key = tuple(str(k) for k in key)
+            assert len(key) == len(self.labelnames), (key, self.labelnames)
+            out[key] = float(v)
+        return sorted(out.items())
+
+
+class _HistogramChild:
+    __slots__ = ("_edges", "_counts", "_sum", "_n", "_lock")
+
+    def __init__(self, edges, lock):
+        self._edges = edges
+        self._counts = [0] * (len(edges) + 1)     # last bucket = +inf
+        self._sum = 0.0
+        self._n = 0
+        self._lock = lock
+
+    def observe(self, x: float) -> None:
+        with self._lock:
+            i = 0
+            for i, edge in enumerate(self._edges):
+                if x <= edge:
+                    break
+            else:
+                i = len(self._edges)
+            self._counts[i] += 1
+            self._sum += x
+            self._n += 1
+
+    def view(self) -> Dict[str, Any]:
+        """{count, sum, buckets: [[le, cumulative count], ...]} — cumulative
+        ``le`` semantics, +inf as the final bucket, like Prometheus."""
+        with self._lock:
+            cum, out = 0, []
+            for edge, c in zip(self._edges, self._counts):
+                cum += c
+                out.append([edge, cum])
+            out.append(["+Inf", cum + self._counts[-1]])
+            return {"count": self._n, "sum": self._sum, "buckets": out}
+
+    def reset(self) -> None:
+        self._counts = [0] * (len(self._edges) + 1)
+        self._sum = 0.0
+        self._n = 0
+
+
+class Histogram(Metric):
+    kind = "histogram"
+
+    def __init__(self, name, help, unit, labelnames, lock,
+                 buckets: Tuple[float, ...] = LATENCY_BUCKETS):
+        super().__init__(name, help, unit, labelnames, lock)
+        edges = tuple(float(b) for b in buckets)
+        assert edges == tuple(sorted(edges)) and len(set(edges)) == len(edges), \
+            f"{name}: bucket edges must be strictly increasing ({edges})"
+        assert edges and math.isfinite(edges[-1]), \
+            f"{name}: +inf bucket is implicit, declare finite edges only"
+        self.buckets = edges
+
+    def _new_child(self):
+        return _HistogramChild(self.buckets, self._lock)
+
+    def observe(self, x: float, **labels) -> None:
+        self.labels(**labels).observe(x)
+
+    def count(self, **labels) -> int:
+        return self.labels(**labels).view()["count"]
+
+
+class MetricsRegistry:
+    """Named metrics with get-or-create semantics (re-declaring a name with
+    the same kind returns the existing instrument; a kind clash raises —
+    silent shadowing is how telemetry lies)."""
+
+    def __init__(self, constant_labels: Optional[Dict[str, str]] = None):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, Metric] = {}
+        self.constant_labels = dict(constant_labels or {})
+
+    def _get_or_create(self, cls, name, help, unit, labelnames, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                if not isinstance(m, cls):
+                    raise ValueError(
+                        f"metric {name!r} already registered as {m.kind}")
+                return m
+            m = cls(name, help, unit, tuple(labelnames), self._lock, **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "", unit: str = "",
+                labelnames: Iterable[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, unit, labelnames)
+
+    def gauge(self, name: str, help: str = "", unit: str = "",
+              labelnames: Iterable[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, unit, labelnames)
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  labelnames: Iterable[str] = (),
+                  buckets: Tuple[float, ...] = LATENCY_BUCKETS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, unit, labelnames,
+                                   buckets=buckets)
+
+    def get(self, name: str) -> Metric:
+        return self._metrics[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def metrics(self) -> List[Metric]:
+        with self._lock:
+            return list(self._metrics.values())
+
+    def reset(self) -> None:
+        """Zero every counter and histogram (bench warm-up hygiene); plain
+        gauges zero too, callable-backed gauges keep their bindings."""
+        for m in self.metrics():
+            m.reset()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Schema-stable dict of everything (see obs/snapshot.schema.json):
+        ``{name: {type, help, unit, labelnames, samples: [...]}}`` where each
+        sample is ``{labels: {...}, value}`` for counters/gauges and
+        ``{labels, count, sum, buckets}`` for histograms.  Constant labels
+        are merged into every sample."""
+        out: Dict[str, Any] = {}
+        for m in self.metrics():
+            samples = []
+            for key, view in m.samples():
+                labels = dict(self.constant_labels)
+                labels.update(zip(m.labelnames, key))
+                if m.kind == "histogram":
+                    samples.append({"labels": labels, **view})
+                else:
+                    samples.append({"labels": labels, "value": view})
+            out[m.name] = {"type": m.kind, "help": m.help, "unit": m.unit,
+                           "labelnames": list(m.labelnames),
+                           "samples": samples}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# latency summaries (pure math — previously duplicated in serve_bench)
+# ---------------------------------------------------------------------------
+
+def percentile(xs: Iterable[float], q: float) -> float:
+    """Exact linear-interpolated percentile over raw samples (numpy
+    semantics, without requiring numpy on this host-only path)."""
+    xs = sorted(float(x) for x in xs)
+    assert xs, "percentile of empty sample set"
+    if len(xs) == 1:
+        return xs[0]
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def latency_summary(ttfts_s: Iterable[float], e2es_s: Iterable[float],
+                    suffix: str = "") -> Dict[str, float]:
+    """``{ttft,e2e}_{p50,p99}[suffix]_ms`` over per-request seconds — the
+    exact field names BENCH_serving.json has carried since PR 4."""
+    ttfts_s, e2es_s = list(ttfts_s), list(e2es_s)
+    return {
+        f"ttft_p50{suffix}_ms": round(percentile(ttfts_s, 50) * 1e3, 3),
+        f"ttft_p99{suffix}_ms": round(percentile(ttfts_s, 99) * 1e3, 3),
+        f"e2e_p50{suffix}_ms": round(percentile(e2es_s, 50) * 1e3, 3),
+        f"e2e_p99{suffix}_ms": round(percentile(e2es_s, 99) * 1e3, 3),
+    }

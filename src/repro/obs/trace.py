@@ -1,0 +1,96 @@
+"""Low-overhead per-tick tracer: host wall-clock spans in a ring buffer.
+
+The serving engines wrap each scheduling phase — ``admit``, ``chunk``
+(chunked-prefill dispatch), ``tick`` (decode), ``round`` (speculative
+draft→verify), ``cow`` (copy-on-write sweep) — in :meth:`TickTracer.span`.
+Each span records host wall-clock start and duration into a bounded
+``deque`` (old spans fall off; telemetry must never grow with uptime), and
+also opens a :class:`jax.profiler.TraceAnnotation` with the same
+``serve/<name>`` label so the host spans line up with XLA device traces when
+a profile is being captured.
+
+Host wall-clock measures DISPATCH time — the engines never block their hot
+loop, so a span closes when the jitted call returns, not when the device
+finishes.  For latency work that needs device-complete timing, construct the
+tracer with ``sync_fn`` (and ``ServeConfig.obs_device_sync=True``): every
+span then ends with a ``block_until_ready`` on the engine's tick state,
+trading pipelining for honest per-phase numbers — the same trade
+``benchmarks/serve_bench.run_latency`` makes explicitly.
+
+A disabled tracer (``enabled=False``) costs one attribute check per span —
+the on/off token-identity tests in ``tests/test_obs.py`` pin that neither
+mode can perturb engine output.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+try:                                  # the annotation is cosmetic; the
+    from jax.profiler import TraceAnnotation   # tracer works without jax
+except Exception:                     # pragma: no cover - jax is baked in
+    TraceAnnotation = None
+
+
+class Span(NamedTuple):
+    name: str
+    t0: float          # host clock at span open (time.perf_counter domain)
+    dur_s: float
+
+
+class TickTracer:
+    def __init__(self, capacity: int = 512, *, enabled: bool = True,
+                 sync_fn: Optional[Callable[[], Any]] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.enabled = enabled
+        self.sync_fn = sync_fn
+        self.clock = clock
+        self._spans: deque = deque(maxlen=capacity)
+        self.n_recorded = 0            # total ever, incl. those evicted
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        if not self.enabled:
+            yield
+            return
+        ann = (TraceAnnotation(f"serve/{name}")
+               if TraceAnnotation is not None else contextlib.nullcontext())
+        t0 = self.clock()
+        try:
+            with ann:
+                yield
+        finally:
+            if self.sync_fn is not None:
+                self.sync_fn()
+            self._spans.append(Span(name, t0, self.clock() - t0))
+            self.n_recorded += 1
+
+    # -- introspection -------------------------------------------------------
+
+    def spans(self, name: Optional[str] = None) -> List[Span]:
+        if name is None:
+            return list(self._spans)
+        return [s for s in self._spans if s.name == name]
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-name aggregate over the spans still in the ring:
+        ``{name: {count, total_s, mean_s, max_s, last_s}}``."""
+        agg: Dict[str, Dict[str, float]] = {}
+        for s in self._spans:
+            a = agg.setdefault(s.name, {"count": 0, "total_s": 0.0,
+                                        "max_s": 0.0, "last_s": 0.0})
+            a["count"] += 1
+            a["total_s"] += s.dur_s
+            a["max_s"] = max(a["max_s"], s.dur_s)
+            a["last_s"] = s.dur_s
+        for a in agg.values():
+            a["mean_s"] = a["total_s"] / a["count"]
+        return agg
+
+    def clear(self) -> None:
+        self._spans.clear()
+        self.n_recorded = 0

@@ -6,6 +6,14 @@ exceeding ``threshold × EWMA`` raises :class:`StragglerAlarm`, which the
 Trainer converts into checkpoint-and-reschedule (in a real deployment the
 launcher replaces the slow host; here the policy hook is unit-tested with a
 fake clock).
+
+The serving tick loop reuses the same detector with a different policy: a
+serving stall must be SURFACED, not crash the engine mid-stream.  Passing
+``on_alarm`` routes the alarm to a callback instead of raising — the engines
+count it (``serve_stalls_total``) and log a ``stall`` event
+(``ServeConfig.tick_watchdog``); after the callback the straggler step
+feeds the EWMA like any other, so a sustained slowdown becomes the new
+baseline instead of alarming forever.
 """
 from __future__ import annotations
 
@@ -24,11 +32,14 @@ class StragglerAlarm(RuntimeError):
 
 class StepWatchdog:
     def __init__(self, *, alpha: float = 0.2, threshold: float = 5.0,
-                 warmup_steps: int = 5, clock: Callable[[], float] = time.monotonic):
+                 warmup_steps: int = 5,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_alarm: Optional[Callable[[StragglerAlarm], None]] = None):
         self.alpha = alpha
         self.threshold = threshold
         self.warmup_steps = warmup_steps
         self.clock = clock
+        self.on_alarm = on_alarm      # None → raise (trainer policy)
         self.ewma: Optional[float] = None
         self._t0: Optional[float] = None
         self._n = 0
@@ -45,6 +56,9 @@ class StepWatchdog:
             self.ewma = elapsed
         else:
             if self._n > self.warmup_steps and elapsed > self.threshold * self.ewma:
-                raise StragglerAlarm(step, elapsed, self.ewma)
+                alarm = StragglerAlarm(step, elapsed, self.ewma)
+                if self.on_alarm is None:
+                    raise alarm
+                self.on_alarm(alarm)
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * elapsed
         return elapsed

@@ -125,6 +125,9 @@ from repro.core.recovery import merge_lora
 from repro.distributed import sharding
 from repro.models.model import (Plan, init_cache, init_paged_cache,
                                 ring_pages)
+from repro.obs.events import EventLog
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TickTracer
 from repro.runtime.steps import (admit_update, attn_window_map,
                                  make_copy_page, make_decode_step,
                                  make_multi_adapter_decode_step,
@@ -132,11 +135,25 @@ from repro.runtime.steps import (admit_update, attn_window_map,
                                  make_paged_prefill_into_slot,
                                  make_prefill_into_slot, make_prefill_step,
                                  make_state_ops, request_key)
-from repro.serving.adapters import AdapterRegistry
+from repro.runtime.watchdog import StepWatchdog, StragglerAlarm
+from repro.serving.adapters import BASE_ADAPTER, AdapterRegistry
 from repro.serving.pages import (PageAllocator, PoolExhausted, bucket_len,
                                  pages_for)
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.serving.tickstate import TickState
+
+
+def _counter_property(child: str, doc: str) -> property:
+    """Legacy counter accessor: ``eng.n_x`` reads the registry child,
+    ``eng.n_x = 0`` is the benchmark warm-up reset hook (Counter.set)."""
+
+    def fget(self):
+        return int(getattr(self, child).value())
+
+    def fset(self, value):
+        getattr(self, child).set(value)
+
+    return property(fget, fset, doc=doc)
 
 
 def _resolve_mesh(cfg: ServeConfig, mesh):
@@ -204,6 +221,19 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_step(
             plan, lora_scale=lora_scale, with_lora=lora is not None),
             donate_argnums=(2 if lora is None else 3,))
+        # minimal obs surface (the continuous engines carry the full set)
+        self.metrics = MetricsRegistry(constant_labels={"engine": "sync"})
+        self.tracer = TickTracer(cfg.obs_trace_capacity, enabled=cfg.obs)
+        self.events = EventLog(cfg.obs_event_capacity, enabled=cfg.obs)
+        self._c_prefill_tokens = self.metrics.counter(
+            "serve_prefill_tokens_total", "prompt tokens through prefill",
+            unit="tokens").labels()
+        self._c_decode_tokens = self.metrics.counter(
+            "serve_decode_tokens_total", "tokens emitted by decode steps",
+            unit="tokens").labels()
+        self._c_completed = self.metrics.counter(
+            "serve_requests_completed_total", "finished generate() batches",
+            unit="requests").labels()
 
     def _call_prefill(self, tokens, cache, frontend=None):
         if self.lora is not None:
@@ -237,10 +267,11 @@ class ServeEngine:
                     sharding.serve_cache_specs(cache, self.mesh, paged=False),
                     self.mesh))
             t0 = time.perf_counter()
-            logits, cache, pos = self._call_prefill(
-                jnp.asarray(prompts), cache,
-                None if frontend is None else jnp.asarray(frontend))
-            jax.block_until_ready(logits)
+            with self.tracer.span("prefill"):
+                logits, cache, pos = self._call_prefill(
+                    jnp.asarray(prompts), cache,
+                    None if frontend is None else jnp.asarray(frontend))
+                jax.block_until_ready(logits)
             t1 = time.perf_counter()
 
             rng = jax.random.PRNGKey(seed)
@@ -249,18 +280,22 @@ class ServeEngine:
             out_buf = jnp.zeros((B, max_new_tokens), jnp.int32)
             tok = _sample(logits, temperature, top_p, rng)
             out_buf = out_buf.at[:, 0].set(tok)
-            for i in range(1, max_new_tokens):
-                rng = jax.random.fold_in(rng, i)
-                logits, cache = self._call_decode(
-                    tok, cache, jnp.asarray(pos + i - 1, jnp.int32))
-                tok = _sample(logits, temperature, top_p, rng)
-                out_buf = out_buf.at[:, i].set(tok)
-            jax.block_until_ready(out_buf)
+            with self.tracer.span("decode"):
+                for i in range(1, max_new_tokens):
+                    rng = jax.random.fold_in(rng, i)
+                    logits, cache = self._call_decode(
+                        tok, cache, jnp.asarray(pos + i - 1, jnp.int32))
+                    tok = _sample(logits, temperature, top_p, rng)
+                    out_buf = out_buf.at[:, i].set(tok)
+                jax.block_until_ready(out_buf)
             t2 = time.perf_counter()
         gen = np.asarray(out_buf)
         # honest accounting: the first token comes out of prefill, so the
         # decode window covers only max_new_tokens - 1 steps
         decode_toks = B * max(max_new_tokens - 1, 0)
+        self._c_prefill_tokens.inc(B * S_prompt)
+        self._c_decode_tokens.inc(decode_toks)
+        self._c_completed.inc(B)
         return GenerationResult(
             tokens=gen, prefill_s=t1 - t0, decode_s=t2 - t1,
             tokens_per_s=B * max_new_tokens / max(t2 - t0, 1e-9),
@@ -325,7 +360,6 @@ class ContinuousServeEngine:
             self._slot_pos = [0] * S        # next write position per slot
             self._admit_seq = [-1] * S      # admission order (newest preempts)
             self._seq_counter = 0
-            self.n_preemptions = 0
             # chunked-prefill progress (slot → host-side context)
             self._prefill_ctx: Dict[int, Dict[str, Any]] = {}
             # prefix registry: (prefix_id, adapter_id) → PrefixEntry,
@@ -421,18 +455,10 @@ class ContinuousServeEngine:
                 self.mesh, self.params, self.cache, paged=self.paged)
             self._st = jax.device_put(self._st,
                                       self._st.shardings(self.mesh))
-        # aggregate counters for benchmarks / monitoring
-        self.n_prefill_tokens = 0
-        self.n_decode_tokens = 0
-        self.n_completed = 0
-        # chunked-prefill / prefix-sharing telemetry
-        self.n_prefill_chunks = 0          # chunk dispatches run
-        self.n_ticks_during_prefill = 0    # decode ticks that ran while a
-                                           # prompt was still streaming in —
-                                           # the no-stall proof
-        self.n_prefix_hits = 0
-        self.n_prefix_tokens_saved = 0     # prompt tokens NOT recomputed
-        self.n_prefix_pages_shared = 0
+        # observability (repro.obs): metrics registry (backing the n_*
+        # accessor properties below), span tracer, lifecycle event log,
+        # optional tick watchdog — all host-side, never inside jit
+        self._init_obs()
         # per-request wall-clock (submit → first token → eviction); results
         # carry ttft_s / latency_s computed from these.  First-token stamps
         # are taken at DISPATCH return — the engine never blocks its hot
@@ -441,6 +467,202 @@ class ContinuousServeEngine:
         # at the barrier (benchmarks/serve_bench.run_latency does)
         self._t_submit: Dict[int, float] = {}
         self._t_first: Dict[int, float] = {}
+
+    # -- observability ------------------------------------------------------
+
+    _obs_engine = "continuous"        # registry constant label value
+
+    def _init_obs(self) -> None:
+        """Build the obs surface: ``self.metrics`` / ``self.tracer`` /
+        ``self.events``.  Counters replace the old ad-hoc integer
+        attributes (reachable through the n_* properties below); gauges
+        bind to live scheduler/allocator/engine state and resolve only at
+        snapshot time, so the hot loop never pays for them."""
+        cfg = self.cfg
+        self.metrics = MetricsRegistry(
+            constant_labels={"engine": self._obs_engine})
+        self.tracer = TickTracer(
+            cfg.obs_trace_capacity, enabled=cfg.obs,
+            sync_fn=((lambda: jax.block_until_ready(self._st))
+                     if cfg.obs_device_sync else None))
+        self.events = EventLog(cfg.obs_event_capacity, enabled=cfg.obs)
+        self._sched.on_event = self._sched_event
+        m = self.metrics
+
+        def counter(name, help_, unit):
+            return m.counter(name, help_, unit=unit).labels()
+
+        self._c_prefill_tokens = counter(
+            "serve_prefill_tokens_total",
+            "prompt tokens through prefill (incl. re-prefill after "
+            "preemption; prefix-hit tokens count when mapped)", "tokens")
+        self._c_decode_tokens = counter(
+            "serve_decode_tokens_total",
+            "tokens emitted by decode ticks / accepted by verify", "tokens")
+        self._c_completed = counter(
+            "serve_requests_completed_total", "finalized requests",
+            "requests")
+        self._c_prefill_chunks = counter(
+            "serve_prefill_chunks_total", "chunked-prefill dispatches",
+            "chunks")
+        self._c_ticks = counter(
+            "serve_ticks_total", "jitted decode-tick dispatches", "ticks")
+        self._c_ticks_during_prefill = counter(
+            "serve_ticks_during_prefill_total",
+            "decode ticks run while a prompt was still streaming in — the "
+            "no-stall proof", "ticks")
+        self._c_prefix_hits = counter(
+            "serve_prefix_hits_total",
+            "admissions that mapped a shared prefix", "requests")
+        self._c_prefix_tokens_saved = counter(
+            "serve_prefix_tokens_saved_total",
+            "prompt tokens NOT recomputed thanks to prefix hits", "tokens")
+        self._c_prefix_pages_shared = counter(
+            "serve_prefix_pages_shared_total",
+            "KV pages mapped copy-on-write instead of allocated", "pages")
+        self._c_preemptions = counter(
+            "serve_preemptions_total",
+            "slots evicted under page pressure and requeued", "requests")
+        self._c_stalls = counter(
+            "serve_stalls_total", "watchdog-flagged straggler ticks",
+            "ticks")
+        self._h_ttft = m.histogram(
+            "serve_ttft_seconds", "submit → first-token dispatch",
+            unit="seconds").labels()
+        self._h_e2e = m.histogram(
+            "serve_e2e_latency_seconds", "submit → eviction",
+            unit="seconds").labels()
+
+        def gauge(name, help_, unit, fn):
+            m.gauge(name, help_, unit=unit).labels().set_fn(fn)
+
+        gauge("serve_slots_occupied", "slots holding any request", "slots",
+              lambda: len(self._sched.occupied_slots()))
+        gauge("serve_slots_active", "slots actively decoding", "slots",
+              lambda: len(self._sched.active_slots()))
+        gauge("serve_queue_depth", "submitted but not admitted", "requests",
+              lambda: self._sched.queued)
+        if self.paged:
+            gauge("serve_pages_in_use", "pool pages currently mapped",
+                  "pages", lambda: self.pages.pages_in_use)
+            gauge("serve_pages_free", "pool pages on the free list",
+                  "pages", lambda: self.pages.free_pages)
+            gauge("serve_pages_peak_in_use",
+                  "high-water mark of mapped pages", "pages",
+                  lambda: self.pages.peak_in_use)
+            gauge("serve_pages_pool_size",
+                  "pool capacity incl. the trash page", "pages",
+                  lambda: self.pages.n_pages)
+        m.gauge("serve_adapter_active_slots",
+                "active slots per adapter name", unit="slots",
+                labelnames=("adapter",)).set_collector(
+            self._adapter_slot_collector)
+        m.gauge("hbm_bytes",
+                "per-device HBM attribution for the serving working set",
+                unit="bytes",
+                labelnames=("component", "device")).set_collector(
+            self._hbm_collector)
+        self._watchdog = None
+        if cfg.tick_watchdog:
+            self._watchdog = StepWatchdog(on_alarm=self._on_stall)
+            gauge("serve_tick_ewma_s", "EWMA of tick wall-clock", "seconds",
+                  lambda: self._watchdog.ewma or 0.0)
+
+    # legacy counter accessors — same names the engines exposed as plain
+    # ints before the registry existed; assignment (the benchmark's warm-up
+    # `eng.n_x = 0` idiom) resets the underlying counter
+    n_prefill_tokens = _counter_property(
+        "_c_prefill_tokens", "prompt tokens through prefill")
+    n_decode_tokens = _counter_property(
+        "_c_decode_tokens", "tokens emitted by decode ticks")
+    n_completed = _counter_property(
+        "_c_completed", "finalized requests")
+    n_prefill_chunks = _counter_property(
+        "_c_prefill_chunks", "chunked-prefill dispatches")
+    n_ticks_during_prefill = _counter_property(
+        "_c_ticks_during_prefill", "decode ticks overlapped with prefill")
+    n_prefix_hits = _counter_property(
+        "_c_prefix_hits", "admissions that mapped a shared prefix")
+    n_prefix_tokens_saved = _counter_property(
+        "_c_prefix_tokens_saved", "prompt tokens not recomputed")
+    n_prefix_pages_shared = _counter_property(
+        "_c_prefix_pages_shared", "KV pages mapped copy-on-write")
+    n_preemptions = _counter_property(
+        "_c_preemptions", "slots evicted under page pressure")
+    n_stalls = _counter_property(
+        "_c_stalls", "watchdog-flagged straggler ticks")
+
+    def _sched_event(self, kind: str, slot: int, req: Request) -> None:
+        """Scheduler transition hook — the one place every admission /
+        preemption path reports through, regardless of which engine
+        subclass or prefill mode performed it."""
+        if kind == "admit":
+            self.events.emit("admit", req.uid, slot=slot,
+                             adapter=req.adapter, n_prompt=len(req.prompt))
+        elif kind == "preempt":
+            # fired before the pages are released — the count is what the
+            # preemption is about to hand back
+            pages = (len(self.pages.slot_pages(slot)) if self.paged else 0)
+            self.events.emit("preempt", req.uid, slot=slot,
+                             pages_freed=pages)
+
+    def _stamp_first_token(self, req: Request) -> None:
+        """First-token wall-clock, written AT MOST ONCE per uid: a request
+        preempted after its first token keeps its original stamp on
+        re-admission (its TTFT already happened — the re-run only recovers
+        lost decode progress)."""
+        t = time.perf_counter()
+        if self._t_first.setdefault(req.uid, t) is t:
+            self.events.emit("first_token", req.uid, t=t)
+
+    def _on_stall(self, alarm: StragglerAlarm) -> None:
+        self._c_stalls.inc()
+        self.events.emit("stall", -1, elapsed_s=alarm.elapsed,
+                         ewma_s=alarm.ewma)
+
+    def _adapter_slot_collector(self) -> Dict[tuple, float]:
+        tally: Dict[tuple, float] = {}
+        for slot in self._sched.active_slots():
+            req = self._sched.slot_request(slot)
+            if req is None:
+                continue
+            name = (self.registry.name_of(req.adapter_id)
+                    if self.registry is not None else None) or BASE_ADAPTER
+            tally[(name,)] = tally.get((name,), 0) + 1
+        return tally
+
+    def _hbm_components(self) -> Dict[str, list]:
+        comps = {"weights": [self.params], "kv_cache": [self.cache]}
+        if self.registry is not None:
+            comps["adapter_bank"] = [self.registry.bank]
+        return comps
+
+    def _hbm_collector(self) -> Dict[tuple, float]:
+        """Per-(component, device) bytes from each array's addressable
+        shards — under a mesh this reports the actual per-device split,
+        single-device it degenerates to logical sizes.  Shard enumeration
+        reads layout metadata only (no transfers)."""
+        out: Dict[tuple, float] = {}
+        for comp, trees in self._hbm_components().items():
+            for tree in trees:
+                if tree is None:
+                    continue
+                for leaf in jax.tree.leaves(tree):
+                    shards = getattr(leaf, "addressable_shards", None)
+                    if shards is None:
+                        continue
+                    for sh in shards:
+                        key = (comp, str(sh.device.id))
+                        out[key] = out.get(key, 0) + sh.data.nbytes
+        return out
+
+    def reset_telemetry(self) -> None:
+        """Zero counters/histograms and drop recorded spans + events
+        (benchmark warm-up boundary).  Gauges are live-bound and need no
+        reset; in-flight request stamps are untouched."""
+        self.metrics.reset()
+        self.tracer.clear()
+        self.events.clear()
 
     # -- intake -------------------------------------------------------------
 
@@ -499,7 +721,10 @@ class ContinuousServeEngine:
                       prefix_len=prefix_len)
         if temperature > 0.0:
             self._n_hot += 1
-        self._t_submit[req.uid] = time.perf_counter()
+        t = time.perf_counter()
+        self._t_submit[req.uid] = t
+        self.events.emit("submit", req.uid, t=t, n_prompt=len(prompt),
+                         adapter=req.adapter)
         return self._sched.submit(req)
 
     # -- progress -----------------------------------------------------------
@@ -518,22 +743,24 @@ class ContinuousServeEngine:
                 # admitted request is always the newest slot and the first
                 # preemption victim, wasting its just-run prefill
                 self._ensure_growth(lookahead=1)
-            while True:
-                adm = self._sched.next_admission(
-                    gate=self._admission_gate if self.paged else None,
-                    prefill=self._chunked_path if progressive else None)
-                if adm is None:
-                    break
-                slot, req = adm
-                if progressive and self._chunked_path(req):
-                    self._admit_chunked(slot, req)
-                else:
-                    self._admit(slot, req)
+            with self.tracer.span("admit"):
+                while True:
+                    adm = self._sched.next_admission(
+                        gate=self._admission_gate if self.paged else None,
+                        prefill=self._chunked_path if progressive else None)
+                    if adm is None:
+                        break
+                    slot, req = adm
+                    if progressive and self._chunked_path(req):
+                        self._admit_chunked(slot, req)
+                    else:
+                        self._admit(slot, req)
             if progressive:
                 # one bounded chunk per prefilling slot, oldest first — the
                 # decode tick below runs regardless, so a long prompt never
                 # stalls in-flight traffic
-                self._prefill_tick()
+                with self.tracer.span("chunk"):
+                    self._prefill_tick()
             # single-token requests finish at prefill, before any tick
             for slot in self._sched.completed_slots():
                 done.append(self._finalize(slot))
@@ -547,11 +774,13 @@ class ContinuousServeEngine:
                 # on a shared page — fork any such entry first.  Only slots
                 # that mapped a prefix can hold shared pages, so plain
                 # traffic skips the sweep entirely
-                for slot in self._sched.active_slots():
-                    if (slot in self._slot_prefix
-                            and self._sched.slot_request(slot) is not None):
-                        self._cow_range(slot, self._slot_pos[slot],
-                                        self._slot_pos[slot] + 1)
+                with self.tracer.span("cow"):
+                    for slot in self._sched.active_slots():
+                        if (slot in self._slot_prefix
+                                and self._sched.slot_request(slot)
+                                is not None):
+                            self._cow_range(slot, self._slot_pos[slot],
+                                            self._slot_pos[slot] + 1)
             active = self._sched.active_slots()
             if active:
                 tick = self._tick_sample if self._n_hot else self._tick_greedy
@@ -559,11 +788,17 @@ class ContinuousServeEngine:
                 # hot-swap after construction takes effect (same shapes →
                 # no recompile)
                 bank = None if self.registry is None else self.registry.bank
-                self.cache, self._st = tick(
-                    self.params, bank, self.cache, self._st)
+                if self._watchdog is not None:
+                    self._watchdog.start()
+                with self.tracer.span("tick"):
+                    self.cache, self._st = tick(
+                        self.params, bank, self.cache, self._st)
+                if self._watchdog is not None:
+                    self._watchdog.stop(self._n_ticks)
                 self._n_ticks += 1
+                self._c_ticks.inc()
                 if self._sched.prefilling_slots():
-                    self.n_ticks_during_prefill += 1
+                    self._c_ticks_during_prefill.inc()
                 if self.paged:
                     for slot in active:
                         self._slot_pos[slot] += 1
@@ -758,8 +993,10 @@ class ContinuousServeEngine:
             req, slot, jnp.asarray(tokens[None]), jnp.asarray(row[None]),
             pos0, valid, ctx["state"])
         self._slot_pos[slot] = end
-        self.n_prefill_tokens += valid
-        self.n_prefill_chunks += 1
+        self._c_prefill_tokens.inc(valid)
+        self._c_prefill_chunks.inc()
+        self.events.emit("prefill_chunk", req.uid, slot=slot, start=pos0,
+                         n_tokens=valid)
         self._sched.advance_prefill(slot, valid)
         if cap_at is not None and end == cap_at:
             self._capture_prefix(slot, ctx)
@@ -771,7 +1008,7 @@ class ContinuousServeEngine:
             self._activate(slot, req, first)
             self._set_table_row(slot, self.pages.slot_pages(slot))
             self._sched.start_decode(slot)
-            self._t_first[req.uid] = time.perf_counter()
+            self._stamp_first_token(req)
             del self._prefill_ctx[slot]
 
     def _grow_for_prefill(self, slot: int, end: int) -> bool:
@@ -800,9 +1037,14 @@ class ContinuousServeEngine:
         self._slot_prefix[slot] = pid
         self._slot_pos[slot] = entry.n_tokens
         self._sched.advance_prefill(slot, entry.n_tokens)
-        self.n_prefix_hits += 1
-        self.n_prefix_tokens_saved += entry.n_tokens
-        self.n_prefix_pages_shared += len(entry.pages)
+        self._c_prefix_hits.inc()
+        self._c_prefix_tokens_saved.inc(entry.n_tokens)
+        self._c_prefix_pages_shared.inc(len(entry.pages))
+        req = self._sched.slot_request(slot)
+        if req is not None:
+            self.events.emit("prefix_hit", req.uid, slot=slot,
+                             tokens_saved=entry.n_tokens,
+                             pages_shared=len(entry.pages))
         return entry.state
 
     def _capture_prefix(self, slot: int, ctx: Dict[str, Any]) -> None:
@@ -970,7 +1212,7 @@ class ContinuousServeEngine:
         self._release_slot_pages(slot)
         self._st = self._st.replace(
             active=self._st.active.at[slot].set(False))
-        self.n_preemptions += 1
+        self._c_preemptions.inc()
 
     def _ensure_growth(self, lookahead: int):
         """Back positions ``slot_pos .. slot_pos+lookahead-1`` of every
@@ -1048,8 +1290,8 @@ class ContinuousServeEngine:
                                                self.cache, slot)
         first = self._first_token(logits[0], req)
         self._activate(slot, req, first)
-        self.n_prefill_tokens += len(req.prompt)
-        self._t_first[req.uid] = time.perf_counter()
+        self._c_prefill_tokens.inc(len(req.prompt))
+        self._stamp_first_token(req)
 
     @staticmethod
     def _first_token(logits, req: Request):
@@ -1072,17 +1314,22 @@ class ContinuousServeEngine:
         req_evicted = self._sched.evict(slot)
         if req_evicted.temperature > 0.0:
             self._n_hot -= 1
-        self.n_decode_tokens += n - 1
-        self.n_completed += 1
+        self._c_decode_tokens.inc(n - 1)
+        self._c_completed.inc()
         name = (self.registry.name_of(req.adapter_id)
                 if self.registry is not None else None)
         t_end = time.perf_counter()
         t_sub = self._t_submit.pop(req.uid, t_end)
         t_first = self._t_first.pop(req.uid, t_end)
+        ttft = max(t_first - t_sub, 0.0)
+        latency = max(t_end - t_sub, 0.0)
+        self._h_ttft.observe(ttft)
+        self._h_e2e.observe(latency)
+        self.events.emit("complete", req.uid, t=t_end, slot=slot,
+                         n_generated=n)
         return RequestResult(uid=req.uid, tokens=row, adapter=name,
                              prompt_len=len(req.prompt), n_generated=n,
-                             ttft_s=max(t_first - t_sub, 0.0),
-                             latency_s=max(t_end - t_sub, 0.0))
+                             ttft_s=ttft, latency_s=latency)
 
 
 def _sample(logits, temperature, top_p, rng):

@@ -74,12 +74,21 @@ class _Slot:
 
 
 class Scheduler:
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int,
+                 on_event: Optional[Callable[[str, int, Request],
+                                             None]] = None):
         assert max_slots >= 1
         self.max_slots = max_slots
         self._queue: Deque[Request] = deque()
         self._slots: List[_Slot] = [_Slot() for _ in range(max_slots)]
         self._uids = itertools.count()
+        # observation hook, fired AFTER each slot-table transition:
+        # ("admit", slot, request) and ("preempt", slot, request).  Keeping
+        # it here — not at the engines' call sites — guarantees every
+        # admission path (monolithic, chunked, speculative) reports
+        # identically.  Plain attribute so the engine can attach it after
+        # construction; policy never reads it.
+        self.on_event = on_event
 
     # -- intake -------------------------------------------------------------
 
@@ -127,6 +136,8 @@ class Scheduler:
                     slot.prefilling = False
                     slot.generated = 1
                     slot.steps_left = req.max_new_tokens - 1
+                if self.on_event is not None:
+                    self.on_event("admit", i, req)
                 return i, req
         return None
 
@@ -145,6 +156,8 @@ class Scheduler:
         s.prefilling = False
         s.prefill_pos = 0
         self._queue.appendleft(req)
+        if self.on_event is not None:
+            self.on_event("preempt", slot, req)
         return req
 
     # -- chunked prefill ----------------------------------------------------

@@ -53,7 +53,8 @@ from repro.runtime.steps import (attn_window_map, make_copy_page,
                                  make_verify_step, request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.draft import DraftModel
-from repro.serving.engine import ContinuousServeEngine, _null
+from repro.serving.engine import (ContinuousServeEngine, _counter_property,
+                                  _null)
 from repro.serving.pages import pages_for
 from repro.serving.scheduler import RequestResult
 from repro.serving.tickstate import TickState
@@ -718,10 +719,44 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         # repro.runtime.steps.admit_update verbatim: the TickState built by
         # _init_tick_state carries spec/max_new leaves, so the shared trace
         # updates them too — no speculative admission closure exists anymore
-        # speculation telemetry
-        self.n_rounds = 0
-        self.n_proposed = 0
-        self.n_accepted = 0
+        # speculation telemetry (the registry itself was built by the base
+        # constructor's _init_obs with engine="speculative")
+        m = self.metrics
+        self._c_rounds = m.counter(
+            "spec_rounds_total", "draft→verify→commit rounds",
+            unit="rounds").labels()
+        self._c_proposed = m.counter(
+            "spec_tokens_proposed_total", "draft tokens proposed",
+            unit="tokens").labels()
+        self._c_accepted = m.counter(
+            "spec_tokens_accepted_total", "draft tokens the target accepted",
+            unit="tokens").labels()
+        m.gauge("spec_gamma", "current draft length γ",
+                unit="tokens").labels().set_fn(lambda: self.gamma)
+        m.gauge("spec_acceptance_ema",
+                "GammaController EMA acceptance (lifetime accepted/proposed "
+                "when autotune is off)", unit="ratio").labels().set_fn(
+            lambda: (self._gamma_ctl.acceptance
+                     if self._gamma_ctl is not None
+                     else self.acceptance_rate))
+
+    _obs_engine = "speculative"       # registry constant label value
+
+    # legacy speculation counters, registry-backed like the base engine's
+    n_rounds = _counter_property(
+        "_c_rounds", "draft→verify→commit rounds")
+    n_proposed = _counter_property(
+        "_c_proposed", "draft tokens proposed")
+    n_accepted = _counter_property(
+        "_c_accepted", "draft tokens the target accepted")
+
+    def _hbm_components(self):
+        comps = super()._hbm_components()
+        comps["weights"].append(self.draft.params)
+        comps["kv_cache"].append(self.draft_cache)
+        if not self._draft_base_only:
+            comps.setdefault("adapter_bank", []).append(self.draft.bank)
+        return comps
 
     def _init_tick_state(self, S, cfg):
         """The speculative leaves (per-request opt-in + γ-round emit budget)
@@ -877,8 +912,8 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 self.cache, self.draft_cache, slot)
         first = self._first_token(logits[0], req)
         self._activate(slot, req, first)
-        self.n_prefill_tokens += len(req.prompt)
-        self._t_first[req.uid] = time.perf_counter()
+        self._c_prefill_tokens.inc(len(req.prompt))
+        self._stamp_first_token(req)
 
     def step(self) -> List[RequestResult]:
         """Admit whatever fits, run a batch of draft→verify→commit rounds,
@@ -894,21 +929,23 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 # a fresh admission isn't the first preemption victim of its
                 # own step (wasting the fused target+draft prefill)
                 self._ensure_growth(lookahead=self.gamma)
-            while True:
-                adm = self._sched.next_admission(
-                    gate=self._admission_gate if self.paged else None,
-                    prefill=self._chunked_path if progressive else None)
-                if adm is None:
-                    break
-                slot, req = adm
-                if progressive and self._chunked_path(req):
-                    self._admit_chunked(slot, req)
-                else:
-                    self._admit(slot, req)
+            with self.tracer.span("admit"):
+                while True:
+                    adm = self._sched.next_admission(
+                        gate=self._admission_gate if self.paged else None,
+                        prefill=self._chunked_path if progressive else None)
+                    if adm is None:
+                        break
+                    slot, req = adm
+                    if progressive and self._chunked_path(req):
+                        self._admit_chunked(slot, req)
+                    else:
+                        self._admit(slot, req)
             if progressive:
                 # one bounded prefill chunk per streaming slot between
                 # speculative rounds — rounds never stall behind a prompt
-                self._prefill_tick()
+                with self.tracer.span("chunk"):
+                    self._prefill_tick()
             for slot in self._sched.completed_slots():
                 done.append(self._finalize(slot))
             active = self._sched.active_slots()
@@ -933,11 +970,12 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                     # verify commits and draft-loop writes must never land
                     # on a shared page — fork every shared entry the batch's
                     # worst-case k·γ positions (incl. windowed rings) touch
-                    for slot in list(active):
-                        if self._sched.slot_request(slot) is not None:
-                            self._cow_range(
-                                slot, self._slot_pos[slot],
-                                self._slot_pos[slot] + k * self.gamma)
+                    with self.tracer.span("cow"):
+                        for slot in list(active):
+                            if self._sched.slot_request(slot) is not None:
+                                self._cow_range(
+                                    slot, self._slot_pos[slot],
+                                    self._slot_pos[slot] + k * self.gamma)
                     active = self._sched.active_slots()
                 if not active:
                     return done
@@ -945,15 +983,21 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                        else self._round_greedy)
                 dbank = None if self._draft_base_only else self.draft.bank
                 infos = []
-                for _ in range(k):
-                    self.cache, self.draft_cache, self._st, info = rnd(
-                        self.params, bank, self.draft.params, dbank,
-                        self.cache, self.draft_cache, self._st)
-                    infos.append(info)
+                if self._watchdog is not None:
+                    self._watchdog.start()
+                with self.tracer.span("round"):
+                    for _ in range(k):
+                        self.cache, self.draft_cache, self._st, info = rnd(
+                            self.params, bank, self.draft.params, dbank,
+                            self.cache, self.draft_cache, self._st)
+                        infos.append(info)
+                if self._watchdog is not None:
+                    self._watchdog.stop(self._n_ticks)
                 self._n_ticks += k
-                self.n_rounds += k
+                self._c_ticks.inc(k)
+                self._c_rounds.inc(k)
                 if self._sched.prefilling_slots():
-                    self.n_ticks_during_prefill += k
+                    self._c_ticks_during_prefill.inc(k)
                 batch_accepted = batch_proposed = 0
                 for info in jax.device_get(infos):
                     batch_proposed += int(info["proposed"].sum())
@@ -965,8 +1009,8 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                                 and self._sched.advance(
                                     slot, int(info["emitted"][slot]))):
                             done.append(self._finalize(slot))
-                self.n_proposed += batch_proposed
-                self.n_accepted += batch_accepted
+                self._c_proposed.inc(batch_proposed)
+                self._c_accepted.inc(batch_accepted)
                 if self._gamma_ctl is not None:
                     self._gamma_ctl.update(batch_accepted, batch_proposed)
                     new_gamma = self._gamma_ctl.propose(self.gamma)
