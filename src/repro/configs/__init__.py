@@ -3,6 +3,7 @@ from repro.configs.base import (  # noqa: F401
     LoRAConfig,
     LoRAMConfig,
     ModelConfig,
+    QuantPolicy,
     ServeConfig,
     Stage,
     StageDims,

@@ -283,6 +283,31 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class QuantPolicy:
+    """Serving-time quantization (the QLoRAM "infer large" half).
+
+    weights: "none" | "nf4" — NF4-quantize the frozen base projections at
+             engine load; the decode tick then runs them through the fused
+             dequant-matmul kernel (repro.kernels.nf4_matmul).  Embeddings,
+             norms, lm_head and the LoRA banks always stay fp.
+    kv:      "none" | "int8" — store the paged attention K/V pool as int8
+             codes + per-row absmax scales (repro.quant.kv); requires
+             kv_paging.
+    block:   NF4 scale-block length along d_in (64 = the kernel's QBLOCK).
+    targets: which projection names quantize under weights="nf4".
+    """
+
+    weights: str = "none"
+    kv: str = "none"
+    block: int = 64
+    targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+    def __post_init__(self):
+        assert self.weights in ("none", "nf4"), self.weights
+        assert self.kv in ("none", "int8"), self.kv
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     batch: int = 1
     max_seq_len: int = 4096
@@ -337,6 +362,9 @@ class ServeConfig:
     # runtime.watchdog.StepWatchdog; a straggler tick is COUNTED
     # (serve_stalls_total + a "stall" event), never raised
     tick_watchdog: bool = False
+    # serving-time quantization (QLoRAM): NF4 base weights through the fused
+    # kernel and/or int8 paged KV pool — see QuantPolicy
+    quant: QuantPolicy = QuantPolicy()
 
 
 def round_to(x: int, mult: int) -> int:

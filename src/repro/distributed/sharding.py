@@ -336,7 +336,11 @@ def serve_cache_specs(cache, mesh: Mesh, *, paged: bool):
     def visit(path, leaf):
         keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
         sp: list = [None] * leaf.ndim
-        if keys and keys[-1] in ("k", "v") and leaf.ndim == 5:
+        # int8 pools carry per-row scale pools (..., K, 1) beside the codes;
+        # they MUST shard identically on the head axis so per-shard kernel
+        # dispatch sees aligned pool + scale slices (hd fallback self-gates:
+        # a scale leaf's trailing dim is 1, which never divides model > 1)
+        if keys and keys[-1] in ("k", "v", "k_sc", "v_sc") and leaf.ndim == 5:
             if not paged and leaf.shape[1] % dp_size(mesh) == 0 \
                     and leaf.shape[1] >= dp_size(mesh):
                 sp[1] = dp

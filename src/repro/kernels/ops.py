@@ -18,7 +18,6 @@ partition it however the surrounding jit demands.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -73,61 +72,86 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
     return _ref.flash_attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
 
 
-def _paged_decode_local(q, pool_k, pool_v, table, pos, *, window, force):
+def _paged_decode_local(q, pool_k, pool_v, table, pos, k_scale, v_scale,
+                        *, window, force):
     if force == "pallas" or (force is None and _on_tpu()):
-        return _paged_pallas(q, pool_k, pool_v, table, pos, window=window,
+        return _paged_pallas(q, pool_k, pool_v, table, pos,
+                             k_scale=k_scale, v_scale=v_scale, window=window,
                              interpret=not _on_tpu())
     return _ref.paged_decode_attention_ref(q, pool_k, pool_v, table, pos,
+                                           k_scale=k_scale, v_scale=v_scale,
                                            window=window)
 
 
-def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *,
+                           k_scale=None, v_scale=None, window: int = 0,
                            force: Optional[str] = None):
     """Single-token attention through a paged KV cache.  q: (B, H, D);
     pools: (n_pages, page, K, D); table: (B, R) page ids; pos: (B,).
+    int8 pools pass their per-row scale pools (n_pages, page, K, 1) as
+    ``k_scale``/``v_scale``; dequantization then happens in-kernel.
     Inside an eligible mesh scope the kernel runs per model-parallel shard
-    (heads split, block table / positions replicated)."""
+    (heads split, scale pools sharded with their pools, block table /
+    positions replicated)."""
     mesh = _tp_mesh(q.shape[1], pool_k.shape[2])
-    fn = functools.partial(_paged_decode_local, window=window, force=force)
+    quant = k_scale is not None
     if mesh is not None:
         heads = P(None, "model", None)
         pool = P(None, None, "model", None)
-        return shard_map(
-            fn, mesh=mesh,
-            in_specs=(heads, pool, pool, P(None, None), P(None)),
-            out_specs=heads, check_rep=False)(q, pool_k, pool_v, table, pos)
-    return fn(q, pool_k, pool_v, table, pos)
+        args = (q, pool_k, pool_v, table, pos)
+        specs = (heads, pool, pool, P(None, None), P(None))
+        if quant:
+            args += (k_scale, v_scale)
+            specs += (pool, pool)     # scales shard WITH their pools (K axis)
+        fn = (lambda q, pk, pv, t, p, ks=None, vs=None:
+              _paged_decode_local(q, pk, pv, t, p, ks, vs,
+                                  window=window, force=force))
+        return shard_map(fn, mesh=mesh, in_specs=specs,
+                         out_specs=heads, check_rep=False)(*args)
+    return _paged_decode_local(q, pool_k, pool_v, table, pos,
+                               k_scale, v_scale, window=window, force=force)
 
 
 def _paged_chunk_local(q, k_new, v_new, pool_k, pool_v, table, pos,
-                       *, window, force):
+                       k_scale, v_scale, *, window, force):
     if force == "pallas" or (force is None and _on_tpu()):
         return _paged_chunk_pallas(q, k_new, v_new, pool_k, pool_v, table,
-                                   pos, window=window,
-                                   interpret=not _on_tpu())
+                                   pos, k_scale=k_scale, v_scale=v_scale,
+                                   window=window, interpret=not _on_tpu())
     return _ref.paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v,
-                                          table, pos, window=window)
+                                          table, pos, k_scale=k_scale,
+                                          v_scale=v_scale, window=window)
 
 
 def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
-                          window: int = 0, force: Optional[str] = None):
+                          k_scale=None, v_scale=None, window: int = 0,
+                          force: Optional[str] = None):
     """Chunk-query attention through a paged KV cache (chunked prefill):
     q: (B, C, H, D) at positions pos..pos+C-1; k_new/v_new: (B, C, K, D)
-    the chunk's own keys/values; pools: (n_pages, page, K, D); table:
-    (B, R) page ids; pos: (B,).  Inside an eligible mesh scope the kernel
-    runs per model-parallel shard (heads split, table/pos replicated)."""
+    the chunk's own keys/values (always fp — they are quantized at the
+    scatter AFTER the call); pools: (n_pages, page, K, D); table: (B, R)
+    page ids; pos: (B,).  int8 pools pass per-row scale pools
+    (n_pages, page, K, 1) as ``k_scale``/``v_scale``.  Inside an eligible
+    mesh scope the kernel runs per model-parallel shard (heads split,
+    scale pools sharded with their pools, table/pos replicated)."""
     mesh = _tp_mesh(q.shape[2], pool_k.shape[2])
-    fn = functools.partial(_paged_chunk_local, window=window, force=force)
+    quant = k_scale is not None
     if mesh is not None:
         qh = P(None, None, "model", None)
         kv = P(None, None, "model", None)
         pool = P(None, None, "model", None)
-        return shard_map(
-            fn, mesh=mesh,
-            in_specs=(qh, kv, kv, pool, pool, P(None, None), P(None)),
-            out_specs=qh, check_rep=False)(
-                q, k_new, v_new, pool_k, pool_v, table, pos)
-    return fn(q, k_new, v_new, pool_k, pool_v, table, pos)
+        args = (q, k_new, v_new, pool_k, pool_v, table, pos)
+        specs = (qh, kv, kv, pool, pool, P(None, None), P(None))
+        if quant:
+            args += (k_scale, v_scale)
+            specs += (pool, pool)     # scales shard WITH their pools (K axis)
+        fn = (lambda q, kn, vn, pk, pv, t, p, ks=None, vs=None:
+              _paged_chunk_local(q, kn, vn, pk, pv, t, p, ks, vs,
+                                 window=window, force=force))
+        return shard_map(fn, mesh=mesh, in_specs=specs,
+                         out_specs=qh, check_rep=False)(*args)
+    return _paged_chunk_local(q, k_new, v_new, pool_k, pool_v, table, pos,
+                              k_scale, v_scale, window=window, force=force)
 
 
 def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,

@@ -34,9 +34,24 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-            l_ref, *, page: int, n_r: int, window: int, scale: float,
-            groups: int):
+def _load_page(ref, sc_ref):
+    """One pool page from VMEM — int8 codes dequantize against their
+    per-row absmax scales ((page, K, 1), broadcast over D) exactly like
+    ``repro.quant.kv.dequantize_rows``, so in-kernel and gather-site
+    readers reconstruct bit-identical values."""
+    x = ref[0]                                     # (page, K, D)
+    if sc_ref is not None:
+        return x.astype(jnp.float32) * sc_ref[0].astype(jnp.float32)
+    return x
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, *rest, page: int,
+            n_r: int, window: int, scale: float, groups: int, quant: bool):
+    if quant:
+        ksc_ref, vsc_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ksc_ref = vsc_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     r = pl.program_id(1)
 
@@ -47,8 +62,8 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0]                                   # (H, D)
-    k = k_ref[0]                                   # (page, K, D)
-    v = v_ref[0]
+    k = _load_page(k_ref, ksc_ref)                 # (page, K, D)
+    v = _load_page(v_ref, vsc_ref)
     H, D = q.shape
     K = k.shape[1]
     qg = q.reshape(K, groups, D)
@@ -91,8 +106,13 @@ def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
 
 
 def _chunk_kernel(tbl_ref, pos_ref, q_ref, kc_ref, vc_ref, k_ref, v_ref,
-                  o_ref, acc_ref, m_ref, l_ref, *, page: int, n_r: int,
-                  chunk: int, window: int, scale: float, groups: int):
+                  *rest, page: int, n_r: int, chunk: int, window: int,
+                  scale: float, groups: int, quant: bool):
+    if quant:
+        ksc_ref, vsc_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ksc_ref = vsc_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     r = pl.program_id(1)
 
@@ -125,8 +145,8 @@ def _chunk_kernel(tbl_ref, pos_ref, q_ref, kc_ref, vc_ref, k_ref, v_ref,
 
     @pl.when(r < n_r)
     def _pool_page():
-        k = k_ref[0]                               # (page, K, D)
-        v = v_ref[0]
+        k = _load_page(k_ref, ksc_ref)             # (page, K, D)
+        v = _load_page(v_ref, vsc_ref)
         kk = jnp.swapaxes(k, 0, 1)                 # (K, page, D)
         vv = jnp.swapaxes(v, 0, 1)
         s = lax.dot_general(
@@ -186,34 +206,48 @@ def _chunk_kernel(tbl_ref, pos_ref, q_ref, kc_ref, vc_ref, k_ref, v_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
-                          window: int = 0, interpret: bool = False):
+                          k_scale=None, v_scale=None, window: int = 0,
+                          interpret: bool = False):
     """Chunk-query variant for chunked prefill: q (B, C, H, D) at positions
     ``pos .. pos+C-1`` attends the slot's committed pages (the same block
     table / online-softmax sweep as the decode kernel, swept per page) plus
     the chunk's own K/V ``(B, C, K, D)`` causally within the chunk — the
     final grid step.  Returns (B, C, H, D); the caller scatters the chunk
-    K/V into pages afterwards."""
+    K/V into pages afterwards.
+
+    ``k_scale`` / ``v_scale`` ((n_pages, page, K, 1)) mark an int8 pool:
+    committed pages dequantize in-kernel against their per-row scales; the
+    chunk's own K/V stays fp."""
     B, C, H, D = q.shape
     _, page, K, _ = pool_k.shape
     R = table.shape[1]
     scale = 1.0 / (D ** 0.5)
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "k_scale/v_scale go together"
+
+    def page_spec(width):
+        # the final grid step re-DMAs the last page (its index map must
+        # stay in range); the kernel never reads it there
+        return pl.BlockSpec(
+            (1, page, K, width),
+            lambda b, r, tbl, p: (tbl[b, jnp.minimum(r, R - 1)], 0, 0, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, C, H, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+        pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+        pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
+        page_spec(D),
+        page_spec(D),
+    ]
+    operands = (table, pos, q, k_new, v_new, pool_k, pool_v)
+    if quant:
+        in_specs += [page_spec(1), page_spec(1)]
+        operands += (k_scale, v_scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, R + 1),
-        in_specs=[
-            pl.BlockSpec((1, C, H, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
-            pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
-            pl.BlockSpec((1, C, K, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
-            # the final grid step re-DMAs the last page (its index map must
-            # stay in range); the kernel never reads it there
-            pl.BlockSpec((1, page, K, D),
-                         lambda b, r, tbl, p: (tbl[b, jnp.minimum(r, R - 1)],
-                                               0, 0, 0)),
-            pl.BlockSpec((1, page, K, D),
-                         lambda b, r, tbl, p: (tbl[b, jnp.minimum(r, R - 1)],
-                                               0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, H, D), lambda b, r, tbl, p: (b, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((K, H // K, C, D), jnp.float32),
@@ -223,33 +257,47 @@ def paged_chunk_attention(q, k_new, v_new, pool_k, pool_v, table, pos, *,
     )
     return pl.pallas_call(
         functools.partial(_chunk_kernel, page=page, n_r=R, chunk=C,
-                          window=window, scale=scale, groups=H // K),
+                          window=window, scale=scale, groups=H // K,
+                          quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
         interpret=interpret,
-    )(table, pos, q, k_new, v_new, pool_k, pool_v)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
+def paged_decode_attention(q, pool_k, pool_v, table, pos, *, k_scale=None,
+                           v_scale=None, window: int = 0,
                            interpret: bool = False):
     """q: (B, H, D); pools: (n_pages, page, K, D); table: (B, R) int32 page
-    ids (the layer's ring pages); pos: (B,) int32.  Returns (B, H, D)."""
+    ids (the layer's ring pages); pos: (B,) int32.  Returns (B, H, D).
+    ``k_scale`` / ``v_scale`` ((n_pages, page, K, 1)) mark an int8 pool
+    dequantized in-kernel against its per-row absmax scales."""
     B, H, D = q.shape
     _, page, K, _ = pool_k.shape
     R = table.shape[1]
     scale = 1.0 / (D ** 0.5)
+    quant = k_scale is not None
+    assert quant == (v_scale is not None), "k_scale/v_scale go together"
+
+    def page_spec(width):
+        return pl.BlockSpec((1, page, K, width),
+                            lambda b, r, tbl, p: (tbl[b, r], 0, 0, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, H, D), lambda b, r, tbl, p: (b, 0, 0)),
+        page_spec(D),
+        page_spec(D),
+    ]
+    operands = (table, pos, q, pool_k, pool_v)
+    if quant:
+        in_specs += [page_spec(1), page_spec(1)]
+        operands += (k_scale, v_scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, R),
-        in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, r, tbl, p: (b, 0, 0)),
-            pl.BlockSpec((1, page, K, D),
-                         lambda b, r, tbl, p: (tbl[b, r], 0, 0, 0)),
-            pl.BlockSpec((1, page, K, D),
-                         lambda b, r, tbl, p: (tbl[b, r], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, D), lambda b, r, tbl, p: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((K, H // K, D), jnp.float32),
@@ -259,8 +307,8 @@ def paged_decode_attention(q, pool_k, pool_v, table, pos, *, window: int = 0,
     )
     return pl.pallas_call(
         functools.partial(_kernel, page=page, n_r=R, window=window,
-                          scale=scale, groups=H // K),
+                          scale=scale, groups=H // K, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
-    )(table, pos, q, pool_k, pool_v)
+    )(*operands)

@@ -54,7 +54,19 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
 NEG_INF = -1e30
 
 
-def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *, window: int = 0):
+def _gather_pool(pool, scale, table, B, S, K, D):
+    """Gather a slot's pages from the pool; int8 pools (``scale`` given,
+    (n_pages, page, K, 1)) dequantize against their per-row absmax scales —
+    the same reconstruction as the in-kernel ``_load_page``."""
+    c = pool[table].reshape(B, S, K, D)
+    if scale is not None:
+        c = (c.astype(jnp.float32)
+             * scale[table].reshape(B, S, K, 1).astype(jnp.float32))
+    return c
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *,
+                               k_scale=None, v_scale=None, window: int = 0):
     """Single-token attention against a PAGED K/V cache (gather-then-flash).
 
     q: (B, H, D) — the new token's roped query per slot;
@@ -73,8 +85,8 @@ def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *, window: int = 0
     page = pool_k.shape[1]
     K = pool_k.shape[2]
     S = table.shape[1] * page
-    ck = pool_k[table].reshape(B, S, K, D)
-    cv = pool_v[table].reshape(B, S, K, D)
+    ck = _gather_pool(pool_k, k_scale, table, B, S, K, D)
+    cv = _gather_pool(pool_v, v_scale, table, B, S, K, D)
     karange = jnp.arange(S)
     if window:
         # ring semantics: each token slot holds the largest position <= pos
@@ -95,7 +107,7 @@ def paged_decode_attention_ref(q, pool_k, pool_v, table, pos, *, window: int = 0
 
 
 def paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v, table, pos, *,
-                              window: int = 0):
+                              k_scale=None, v_scale=None, window: int = 0):
     """Chunk-query attention against a PAGED K/V cache (chunked prefill).
 
     q: (B, C, H, D) — the chunk's roped queries at absolute positions
@@ -118,8 +130,8 @@ def paged_chunk_attention_ref(q, k_new, v_new, pool_k, pool_v, table, pos, *,
     page = pool_k.shape[1]
     K = pool_k.shape[2]
     S = table.shape[1] * page
-    ck = pool_k[table].reshape(B, S, K, D)
-    cv = pool_v[table].reshape(B, S, K, D)
+    ck = _gather_pool(pool_k, k_scale, table, B, S, K, D)
+    cv = _gather_pool(pool_v, v_scale, table, B, S, K, D)
     karange = jnp.arange(S)
     qpos = pos[:, None] + jnp.arange(C)[None, :]                   # (B, C)
     # absolute position held by each ring slot before this chunk ran

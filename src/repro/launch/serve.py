@@ -37,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_arch, get_smoke
+from repro.configs import (LoRAConfig, LoRAMConfig, QuantPolicy, ServeConfig,
+                           get_arch, get_smoke)
 from repro.core import loram
 from repro.models import init_params, make_plan
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
@@ -57,6 +58,18 @@ def _export_metrics(args, eng, results=None) -> None:
             str(uid): {"ttft_s": r.ttft_s, "latency_s": r.latency_s,
                        "n_generated": r.n_generated}
             for uid, r in results.items()}}
+    quant = getattr(eng, "cfg", None) and eng.cfg.quant
+    if quant and (quant.weights != "none" or quant.kv != "none"):
+        from repro.quant import nf4
+        extra = dict(extra or {})
+        extra["quant"] = {
+            "weights": quant.weights,
+            "kv": quant.kv,
+            "weight_bytes_packed": int(nf4.param_bytes(eng.params)),
+            "weight_bytes_logical": int(nf4.param_bytes_logical(eng.params)),
+            "kv_cache_bytes": int(eng.kv_cache_bytes())
+            if hasattr(eng, "kv_cache_bytes") else 0,
+        }
     obs.write_snapshot(args.metrics_json, eng.metrics, eng.tracer,
                        eng.events, extra=extra)
     print(f"[serve] metrics snapshot -> {args.metrics_json}")
@@ -101,6 +114,15 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="shared-prefix length in tokens (with "
                          "--prefix-sharing; 0 → half the prompt)")
+    ap.add_argument("--quant-weights", choices=("none", "nf4"),
+                    default="none",
+                    help="NF4-quantize the frozen base projections at engine "
+                         "load; the decode tick runs them through the fused "
+                         "dequant-matmul kernel (QLoRAM serving; implies "
+                         "--continuous --no-merge)")
+    ap.add_argument("--quant-kv", choices=("none", "int8"), default="none",
+                    help="store the paged attention K/V pool as int8 codes "
+                         "+ per-row absmax scales (implies --paged)")
     ap.add_argument("--mesh", type=str, default="1,1", metavar="DATA,MODEL",
                     help="serve over a DATAxMODEL device mesh (batch over "
                          "data, heads/experts over model); 1,1 = no mesh")
@@ -119,9 +141,11 @@ def main():
         mesh_data, mesh_model = (int(v) for v in args.mesh.split(","))
     except ValueError:
         ap.error("--mesh wants two comma-separated ints, e.g. --mesh 1,2")
+    if args.quant_kv != "none":
+        args.paged = True
     if args.prefill_chunk or args.prefix_sharing:
         args.paged = True
-    if args.speculative or args.paged:
+    if args.speculative or args.paged or args.quant_weights != "none":
         args.continuous = True
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -151,7 +175,8 @@ def main():
             kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
             prefix_sharing=args.prefix_sharing,
             mesh_data=mesh_data, mesh_model=mesh_model,
-            tick_watchdog=args.tick_watchdog)
+            tick_watchdog=args.tick_watchdog,
+            quant=QuantPolicy(weights=args.quant_weights, kv=args.quant_kv))
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)
@@ -187,6 +212,14 @@ def main():
         if args.speculative:
             print(f"[serve] γ={args.gamma}, acceptance "
                   f"{eng.acceptance_rate:.1%}, {eng.n_rounds} rounds")
+        if args.quant_weights != "none" or args.quant_kv != "none":
+            from repro.quant import nf4
+            packed = nf4.param_bytes(eng.params)
+            logical = nf4.param_bytes_logical(eng.params)
+            print(f"[serve] quant: weights={args.quant_weights} "
+                  f"({logical / max(packed, 1):.1f}x packed), "
+                  f"kv={args.quant_kv} "
+                  f"(pool {eng.kv_cache_bytes() / 2**20:.1f} MiB)")
         if args.prefill_chunk:
             print(f"[serve] chunked prefill: {eng.n_prefill_chunks} chunks, "
                   f"{eng.n_ticks_during_prefill} decode ticks ran during "

@@ -15,9 +15,35 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.distributed import sharding
+from repro.kernels import nf4_matmul as _nf4k
+from repro.kernels import ops as kops
 from repro.quant import nf4
 
 Array = jax.Array
+
+
+def _nf4_fusable(q: nf4.QTensor, M: int, mask) -> bool:
+    """Can this projection run through the fused NF4 matmul kernel?
+
+    2-D codes only (stacked stage params become 2-D inside the decode-tick
+    ``lax.scan``, so the serving hot path qualifies), plain (not
+    double-quantized) scales, no sparsity mask, and tile-divisible shapes —
+    the Pallas kernel clamps each block dim to the array dim but requires
+    the remainder to divide evenly.  Anything else falls back to
+    dequantize-then-matmul.
+    """
+    if q.codes.ndim != 2 or mask is not None:
+        return False
+    if isinstance(q.scales, nf4.DQScales):
+        return False
+    K = q.codes.shape[0] * 2
+    N = q.codes.shape[1]
+    if q.scales.shape[0] * _nf4k.QBLOCK != K:
+        return False
+    return (M % min(_nf4k.DEFAULT_BM, M) == 0
+            and N % min(_nf4k.DEFAULT_BN, N) == 0
+            and K % min(_nf4k.DEFAULT_BK, K) == 0
+            and min(_nf4k.DEFAULT_BK, K) % _nf4k.QBLOCK == 0)
 
 # ---------------------------------------------------------------------------
 # Normalisation
@@ -54,17 +80,33 @@ def dense(
     is routed to adapter ``adapter_ids[row]`` via a gather, so one batched
     matmul serves K different LoRAM-recovered adapters at once.
     """
-    if isinstance(w, nf4.QTensor):
-        wd = (nf4.dequantize_stacked(w, dtype=x.dtype) if w.codes.ndim == 3
-              else nf4.dequantize(w, dtype=x.dtype))
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    if isinstance(w, nf4.QTensor) and _nf4_fusable(w, M, mask):
+        # QLoRAM serving hot path: the frozen base matmul runs fused —
+        # packed codes stream from HBM and dequantize in-kernel (VREG
+        # unpack + codebook selection tree), never materialising the fp
+        # weight.  kernels/ops dispatches Pallas on TPU, the jnp oracle
+        # elsewhere; numerics match dequantize-then-matmul (tested in
+        # tests/test_quant.py).
+        out_dt = jnp.float32 if accum_fp32 else x.dtype
+        y = kops.nf4_matmul(x.reshape(M, x.shape[-1]), w.codes, w.scales,
+                            out_dtype=out_dt)
+        y = y.reshape(*lead, w.codes.shape[1])
     else:
-        wd = w.astype(x.dtype) if w.dtype != x.dtype else w
-    if mask is not None:
-        wd = wd * mask.astype(wd.dtype)
-    if accum_fp32:
-        y = jnp.matmul(x, wd, preferred_element_type=jnp.float32)
-    else:
-        y = x @ wd
+        if isinstance(w, nf4.QTensor):
+            wd = (nf4.dequantize_stacked(w, dtype=x.dtype)
+                  if w.codes.ndim == 3 else nf4.dequantize(w, dtype=x.dtype))
+        else:
+            wd = w.astype(x.dtype) if w.dtype != x.dtype else w
+        if mask is not None:
+            wd = wd * mask.astype(wd.dtype)
+        if accum_fp32:
+            y = jnp.matmul(x, wd, preferred_element_type=jnp.float32)
+        else:
+            y = x @ wd
     if lora is not None:
         a = lora["a"].astype(x.dtype)    # (r, d_in) or (K, r, d_in)
         b = lora["b"].astype(x.dtype)    # (d_out, r) or (K, d_out, r)

@@ -30,7 +30,7 @@ from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.moe import moe_mlp
 from repro.models.ssm import mamba_block
-from repro.quant import nf4
+from repro.quant import kv as qkv, nf4
 
 Array = jax.Array
 PyTree = Any
@@ -371,13 +371,24 @@ def _attn_block(
             if paged:
                 # gather the slot's pages into the virtual dense ring; the
                 # verify pass is read-only, so no scatter-back is needed —
-                # the engine commits pending rows into pages itself
+                # the engine commits pending rows into pages itself.  int8
+                # pools dequantize here against their per-row scales (the
+                # shared reconstruction every reader uses).
                 ck = cache["k"][tbl].reshape(B, cache_size, K, hd)
                 cv = cache["v"][tbl].reshape(B, cache_size, K, hd)
+                if qkv.quant_cache_keys(cache):
+                    ck = qkv.dequantize_rows(
+                        ck, cache["k_sc"][tbl].reshape(B, cache_size, K, 1))
+                    cv = qkv.dequantize_rows(
+                        cv, cache["v_sc"][tbl].reshape(B, cache_size, K, 1))
             else:
                 ck, cv = cache["k"], cache["v"]
-            kw = k.astype(ck.dtype)
-            vw = v.astype(cv.dtype)
+            # pending rows stay fp — the engine's commit scatter quantizes
+            # the accepted prefix itself (quantize-on-commit)
+            pend_dt = (jnp.float32 if qkv.quant_cache_keys(cache)
+                       else cache["k"].dtype)
+            kw = k.astype(pend_dt)
+            vw = v.astype(pend_dt)
             lo = jnp.einsum("bkgtd,bskd->bkgts", qg,
                             ck.astype(qg.dtype)).astype(jnp.float32) * scale
             lb = jnp.einsum("bkgtd,bjkd->bkgtj", qg,
@@ -405,11 +416,22 @@ def _attn_block(
             # mapping, last-writer-wins inside a wrapped windowed ring).
             assert paged, "chunked prefill requires a paged cache"
             pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-            out = _shard_heads(kops.paged_chunk_attention(
-                q, k.astype(cache["k"].dtype), v.astype(cache["v"].dtype),
-                cache["k"], cache["v"], tbl, pos_v, window=window))
-            new_cache = {"k": k.astype(cache["k"].dtype),
-                         "v": v.astype(cache["v"].dtype)}
+            if qkv.quant_cache_keys(cache):
+                # int8 pool: the committed pages dequantize in-kernel; the
+                # chunk's own K/V stays fp here and in the pending rows —
+                # steps.make_paged_prefill_chunk quantizes at the scatter
+                kc, vc = k.astype(jnp.float32), v.astype(jnp.float32)
+                out = _shard_heads(kops.paged_chunk_attention(
+                    q, kc, vc, cache["k"], cache["v"], tbl, pos_v,
+                    k_scale=cache["k_sc"], v_scale=cache["v_sc"],
+                    window=window))
+            else:
+                kc = k.astype(cache["k"].dtype)
+                vc = v.astype(cache["v"].dtype)
+                out = _shard_heads(kops.paged_chunk_attention(
+                    q, kc, vc, cache["k"], cache["v"], tbl, pos_v,
+                    window=window))
+            new_cache = {"k": kc, "v": vc}
         elif q.shape[1] == 1 and paged:  # decode step, paged pool
             # scatter the new token's K/V into the slot's current page, then
             # attend through the block table (gather-then-flash — the Pallas
@@ -418,11 +440,31 @@ def _attn_block(
             # reserved trash page and can never corrupt a live slot.
             pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
             pg, off = paged_pos_to_page(block_table, pos_v, window, page)
-            ck = cache["k"].at[pg, off].set(k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[pg, off].set(v[:, 0].astype(cache["v"].dtype))
-            new_cache = {"k": ck, "v": cv}
-            out = kops.paged_decode_attention(q[:, 0], ck, cv, tbl, pos_v,
-                                              window=window)
+            if qkv.quant_cache_keys(cache):
+                # quantize-on-write: the new token's row is coded through the
+                # one shared quantizer, scattered beside its per-row scale,
+                # and the kernel dequantizes in-flight — the token attends
+                # its own QUANTIZED key, same as every later reader sees it
+                kq, ksc = qkv.quantize_rows(k[:, 0])
+                vq, vsc = qkv.quantize_rows(v[:, 0])
+                ck = cache["k"].at[pg, off].set(kq)
+                cv = cache["v"].at[pg, off].set(vq)
+                cks = cache["k_sc"].at[pg, off].set(
+                    ksc.astype(cache["k_sc"].dtype))
+                cvs = cache["v_sc"].at[pg, off].set(
+                    vsc.astype(cache["v_sc"].dtype))
+                new_cache = {"k": ck, "v": cv, "k_sc": cks, "v_sc": cvs}
+                out = kops.paged_decode_attention(
+                    q[:, 0], ck, cv, tbl, pos_v,
+                    k_scale=cks, v_scale=cvs, window=window)
+            else:
+                ck = cache["k"].at[pg, off].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[pg, off].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                new_cache = {"k": ck, "v": cv}
+                out = kops.paged_decode_attention(q[:, 0], ck, cv, tbl, pos_v,
+                                                  window=window)
             out = _shard_heads(out[:, None])
         elif q.shape[1] == 1:  # decode step
             # pos may be a scalar (whole batch at one position — legacy
@@ -772,13 +814,18 @@ def init_cache(plan: Plan, batch: int, max_len: int, dtype=jnp.bfloat16) -> PyTr
 
 
 def init_paged_cache(plan: Plan, batch: int, n_pages: int, page_size: int,
-                     dtype=jnp.bfloat16) -> PyTree:
+                     dtype=jnp.bfloat16, quant_kv: bool = False) -> PyTree:
     """Paged variant of :func:`init_cache`: attention K/V live in a global
     pool of fixed-size pages (``n_pages`` × ``page_size`` tokens per layer,
     page 0 reserved as the trash page free slots write into), indexed through
     a per-slot block table held by the serving engine.  Recurrent state (SSM
     conv/ssm) is O(1) per slot and stays dense — paging it would buy nothing.
-    Cross-attention caches stay dense too (encoder length is fixed)."""
+    Cross-attention caches stay dense too (encoder length is fixed).
+
+    ``quant_kv=True`` (ServeConfig.quant.kv == "int8") stores the attention
+    pools as int8 codes plus per-row absmax scale pools ``"k_sc"``/``"v_sc"``
+    of shape (n_rep, n_pages, page, K, 1) — every scatter site writes codes
+    and scales together (see repro.quant.kv)."""
     cfg = plan.cfg
     caches = {}
     for st in plan.stages:
@@ -786,12 +833,19 @@ def init_paged_cache(plan: Plan, batch: int, n_pages: int, page_size: int,
         stage_cache = {}
         for spec in st.superblock:
             if spec.kind == "attn":
+                pool = (st.n_rep, n_pages, page_size,
+                        d.n_kv_heads, d.head_dim)
+                pool_dt = jnp.int8 if quant_kv else dtype
                 stage_cache[spec.name] = {
-                    "k": jnp.zeros((st.n_rep, n_pages, page_size,
-                                    d.n_kv_heads, d.head_dim), dtype),
-                    "v": jnp.zeros((st.n_rep, n_pages, page_size,
-                                    d.n_kv_heads, d.head_dim), dtype),
+                    "k": jnp.zeros(pool, pool_dt),
+                    "v": jnp.zeros(pool, pool_dt),
                 }
+                if quant_kv:
+                    sc = pool[:3] + (d.n_kv_heads, 1)
+                    stage_cache[spec.name]["k_sc"] = jnp.zeros(
+                        sc, qkv.KV_SCALE_DTYPE)
+                    stage_cache[spec.name]["v_sc"] = jnp.zeros(
+                        sc, qkv.KV_SCALE_DTYPE)
             elif spec.kind == "cross_attn":
                 stage_cache[spec.name] = {
                     "k": jnp.zeros((st.n_rep, batch, cfg.enc_len, d.n_kv_heads, d.head_dim), dtype),

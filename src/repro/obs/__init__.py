@@ -85,6 +85,16 @@ snapshot time, so the hot loop never pays for them):
 ``hbm_bytes{component,device}`` (bytes)
     Per-device HBM attribution for ``weights`` / ``kv_cache`` /
     ``adapter_bank`` under the mesh — the LoRAM resource story, live.
+    Reports PACKED bytes: under ``ServeConfig.quant`` the weight shards are
+    NF4 codes + scales and the KV shards int8 codes + scale pools, so the
+    gauge shrinks with the storage, not the logical shapes.
+``serve_weight_bytes_packed`` / ``serve_weight_bytes_logical`` (bytes)
+    Physical base-weight bytes (QTensors counted packed) vs. the
+    fp32-equivalent footprint — ``logical / packed`` is the QLoRAM weight
+    storage-reduction ratio BENCH_serving.json reports.
+``serve_kv_cache_bytes`` (bytes)
+    Attention K/V reservation: paged pool + block table (int8 pools
+    include their per-row scale pools) or the dense per-slot reservation.
 
 Histograms (fixed ``LATENCY_BUCKETS`` edges, seconds):
 

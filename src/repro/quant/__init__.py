@@ -1,1 +1,1 @@
-from repro.quant import nf4  # noqa: F401
+from repro.quant import kv, nf4  # noqa: F401

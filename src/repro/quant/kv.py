@@ -1,0 +1,56 @@
+"""Symmetric int8 row quantization for the paged KV pool.
+
+``ServeConfig.quant.kv == "int8"`` stores the attention page pool as int8
+codes plus one absmax scale per (page row, token, kv-head) — the scales ride
+in the cache dict beside the pool under ``"k_sc"`` / ``"v_sc"`` with the
+head dim collapsed to 1, so every scatter site (prefill, chunk commit,
+decode write, speculative commit/rollback, COW page copy) indexes codes and
+scales identically.
+
+Per-ROW scales (not per-page) are the load-bearing choice: every writer —
+a single decode token, a verify commit of γ rows, a prefill chunk — can
+quantize its own rows locally without reading back what else lives on the
+page, so quantize-on-commit stays a pure scatter and the engine's
+determinism argument (same fp row → same codes, wherever it was written
+from) survives preemption/re-run and COW forks.
+
+Dequantization happens in-kernel (``repro.kernels.paged_attention`` reads
+the codes and scales per page) or at the gather sites (`ref.py` oracles,
+the verify branch) via :func:`dequantize_rows` — one shared definition, so
+every reader reconstructs bit-identical values.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# int8 symmetric range; 127 keeps the code space symmetric around the exact
+# zero (-128 is never emitted)
+KV_LEVELS = 127.0
+
+# fp32 scales: the pool is the bandwidth bill, the scales are 1/hd of it —
+# spending 4 bytes per row keeps the commit→read round trip exact
+KV_SCALE_DTYPE = jnp.float32
+
+
+def quantize_rows(x, scale_dtype=KV_SCALE_DTYPE):
+    """(..., hd) fp rows → (int8 codes (..., hd), scales (..., 1)).
+
+    Deterministic: every scatter site quantizes through this one function,
+    so a row holds the same codes no matter which path wrote it."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scales = jnp.maximum(absmax, 1e-12) / KV_LEVELS
+    codes = jnp.clip(jnp.round(xf / scales), -KV_LEVELS, KV_LEVELS)
+    return codes.astype(jnp.int8), scales.astype(scale_dtype)
+
+
+def dequantize_rows(codes, scales, dtype=jnp.float32):
+    """Inverse of :func:`quantize_rows` (scales broadcast over the head
+    dim) — the single reconstruction every reader shares."""
+    return (codes.astype(jnp.float32)
+            * scales.astype(jnp.float32)).astype(dtype)
+
+
+def quant_cache_keys(bc) -> bool:
+    """Does this per-block cache dict hold a quantized attention pool?"""
+    return "k_sc" in bc

@@ -37,11 +37,70 @@ DEFAULT_BLOCK = 64
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class DQScales:
+    """Double-quantized per-block scales (QLoRA §3): every block's absmax is
+    itself int8-quantized per group of ``group`` blocks, with one fp32
+    second-level absmax per group.  Rides in :attr:`QTensor.scales` wherever
+    a plain scales array would."""
+
+    codes: jax.Array          # int8 (n_blocks, d_out)
+    absmax: jax.Array         # fp32 (ceil(n_blocks / group), d_out)
+    group: int
+
+    def tree_flatten(self):
+        return (self.codes, self.absmax), (self.group,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def dtype(self):
+        return self.absmax.dtype
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codes.size
+                   + self.absmax.size * self.absmax.dtype.itemsize)
+
+
+def _scales_f32(scales) -> jax.Array:
+    """Per-block fp32 scales from either storage form."""
+    if isinstance(scales, DQScales):
+        nb = scales.codes.shape[-2]
+        meta = jnp.repeat(scales.absmax.astype(jnp.float32) / 127.0,
+                          scales.group, axis=-2)[..., :nb, :]
+        return scales.codes.astype(jnp.float32) * meta
+    return scales.astype(jnp.float32)
+
+
+def quantize_scales(scales: jax.Array, group: int = 256) -> DQScales:
+    """Double quantization of a (n_blocks, d_out) absmax-scales array."""
+    nb, d_out = scales.shape
+    ng = -(-nb // group)
+    sf = scales.astype(jnp.float32)
+    pad = ng * group - nb
+    if pad:
+        sf = jnp.concatenate([sf, jnp.zeros((pad, d_out), jnp.float32)])
+    sf = sf.reshape(ng, group, d_out)
+    meta = jnp.maximum(jnp.max(jnp.abs(sf), axis=1), 1e-12)       # (ng, d_out)
+    codes = jnp.clip(jnp.round(sf / (meta[:, None, :] / 127.0)), -127, 127)
+    codes = codes.reshape(ng * group, d_out)[:nb].astype(jnp.int8)
+    return DQScales(codes, meta, group)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class QTensor:
     """Packed NF4 tensor.  Logical shape (d_in, d_out); codes packed on d_in."""
 
     codes: jax.Array          # uint8 (d_in // 2, d_out), two 4-bit codes/byte
-    scales: jax.Array         # fp16/fp32 (d_in // block, d_out) absmax per block
+    scales: jax.Array         # fp16/fp32 (ceil(d_in / block), d_out) absmax
+                              # per block — or a DQScales (double quantized)
     shape: tuple              # logical (d_in, d_out)
     block: int
 
@@ -54,12 +113,20 @@ class QTensor:
         return cls(codes, scales, aux[0], aux[1])
 
     @property
-    def dtype(self):  # duck-types jnp arrays for repro.models.layers.dense
-        return jnp.bfloat16
+    def dtype(self):
+        # duck-types jnp arrays for repro.models.layers.dense and the
+        # sharding-spec inference: the natural carrier dtype of the
+        # dequantized values is the stored scale dtype (codebook values are
+        # exact in fp32; the scales bound the precision), NOT a hard-coded
+        # bfloat16 — a float32-scaled QTensor dequantizes losslessly to f32.
+        return jnp.dtype(self.scales.dtype)
 
     @property
     def nbytes_logical(self) -> int:
-        return int(np.prod(self.shape)) // 2 + int(np.prod(self.scales.shape)) * self.scales.dtype.itemsize
+        sc = self.scales
+        sc_bytes = (sc.nbytes if isinstance(sc, DQScales)
+                    else int(np.prod(sc.shape)) * sc.dtype.itemsize)
+        return int(np.prod(self.shape)) // 2 + int(sc_bytes)
 
 
 def _codebook(dtype=jnp.float32):
@@ -67,20 +134,32 @@ def _codebook(dtype=jnp.float32):
 
 
 def quantize(w: jax.Array, block: int = DEFAULT_BLOCK,
-             scale_dtype=jnp.float16) -> QTensor:
-    """Quantize (d_in, d_out) weights to NF4, blocked along d_in."""
+             scale_dtype=jnp.float16, double_quant: bool = False) -> QTensor:
+    """Quantize (d_in, d_out) weights to NF4, blocked along d_in.
+
+    ``d_in`` need not be a multiple of ``block``: a trailing partial block
+    carries its own absmax like any full block (codes still pack 2/byte, so
+    ``d_in`` must stay even).  ``double_quant=True`` int8-compresses the
+    per-block scales themselves (:class:`DQScales`)."""
     d_in, d_out = w.shape
-    assert d_in % block == 0 and d_in % 2 == 0, (w.shape, block)
-    wf = w.astype(jnp.float32).reshape(d_in // block, block, d_out)
+    assert d_in % 2 == 0, (w.shape, block)
+    nb = -(-d_in // block)
+    wf = w.astype(jnp.float32)
+    pad = nb * block - d_in
+    if pad:
+        wf = jnp.concatenate([wf, jnp.zeros((pad, d_out), jnp.float32)])
+    wf = wf.reshape(nb, block, d_out)
     absmax = jnp.max(jnp.abs(wf), axis=1, keepdims=True)
     absmax = jnp.maximum(absmax, 1e-12)
     normed = wf / absmax                                          # in [-1, 1]
     # nearest codebook entry
     dist = jnp.abs(normed[..., None] - _codebook()[None, None, None, :])
     codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)           # (nb, block, d_out)
-    codes = codes.reshape(d_in, d_out)
+    codes = codes.reshape(nb * block, d_out)[:d_in]
     packed = (codes[0::2, :] | (codes[1::2, :] << 4)).astype(jnp.uint8)
-    scales = absmax[:, 0, :].astype(scale_dtype)                  # (nb, d_out)
+    scales = absmax[:, 0, :]                                      # (nb, d_out)
+    scales = (quantize_scales(scales) if double_quant
+              else scales.astype(scale_dtype))
     return QTensor(packed, scales, (d_in, d_out), block)
 
 
@@ -95,9 +174,14 @@ def dequantize(q: QTensor, dtype=jnp.bfloat16) -> jax.Array:
         hi = (q.codes >> 4).astype(jnp.int32)
         codes = jnp.stack([lo, hi], axis=1).reshape(d_in, d_out)  # interleave rows
         vals = _codebook()[codes]                                 # (d_in, d_out) f32
-        vals = vals.reshape(d_in // q.block, q.block, d_out)
-        vals = vals * q.scales.astype(jnp.float32)[:, None, :]
-        return vals.reshape(d_in, d_out).astype(dtype)
+        nb = -(-d_in // q.block)
+        pad = nb * q.block - d_in
+        if pad:
+            vals = jnp.concatenate(
+                [vals, jnp.zeros((pad, d_out), jnp.float32)])
+        vals = vals.reshape(nb, q.block, d_out)
+        vals = vals * _scales_f32(q.scales)[:, None, :]
+        return vals.reshape(nb * q.block, d_out)[:d_in].astype(dtype)
 
 
 def quantize_tree(params, block: int = DEFAULT_BLOCK, min_size: int = 4096,
@@ -125,7 +209,8 @@ def quantize_tree(params, block: int = DEFAULT_BLOCK, min_size: int = 4096,
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
-def quantize_stacked(w: jax.Array, block: int = DEFAULT_BLOCK) -> "QTensor":
+def quantize_stacked(w: jax.Array, block: int = DEFAULT_BLOCK,
+                     scale_dtype=jnp.float16) -> "QTensor":
     """Quantize (..., d_in, d_out) stacked weights (scan layers and/or MoE
     experts) — vmapped over all leading dims."""
     assert w.ndim >= 3
@@ -134,7 +219,7 @@ def quantize_stacked(w: jax.Array, block: int = DEFAULT_BLOCK) -> "QTensor":
     flat = w.reshape((-1, d_in, d_out))
 
     def q1(wi):
-        t = quantize(wi, block=block)
+        t = quantize(wi, block=block, scale_dtype=scale_dtype)
         return t.codes, t.scales
 
     codes, scales = jax.vmap(q1)(flat)
@@ -164,12 +249,61 @@ def maybe_dequant(w, dtype=jnp.bfloat16):
     return w
 
 
+# frozen-base projection names the serving QuantPolicy targets by default:
+# attention + FFN matmuls (the storage/bandwidth bill); embeddings, norms,
+# routers, SSM mixers and LoRA banks stay fp (LoRA's design point,
+# arXiv:2106.09685)
+SERVING_QUANT_TARGETS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+def _path_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", last)))
+
+
+def quantize_by_name(params, targets=SERVING_QUANT_TARGETS,
+                     block: int = DEFAULT_BLOCK, scale_dtype=jnp.float16):
+    """NF4-quantize every pytree leaf whose dict key is in ``targets`` —
+    the engine-load step behind ``ServeConfig.quant.weights == "nf4"``.
+    Stacked (≥3-D) stage weights quantize per layer slice; leaves whose
+    contraction dim is not block-aligned (or odd) stay fp."""
+    def visit(path, leaf):
+        if not isinstance(leaf, jax.Array) or leaf.ndim < 2:
+            return leaf
+        if _path_name(path) not in targets:
+            return leaf
+        d_in = leaf.shape[-2]
+        if d_in % block or d_in % 2:
+            return leaf
+        if leaf.ndim >= 3:
+            return quantize_stacked(leaf, block=block, scale_dtype=scale_dtype)
+        return quantize(leaf, block=block, scale_dtype=scale_dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
 def param_bytes(tree) -> int:
     """Physical parameter storage in bytes (QTensors counted packed)."""
     total = 0
     for leaf in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
         if isinstance(leaf, QTensor):
-            total += leaf.codes.size * 1 + leaf.scales.size * leaf.scales.dtype.itemsize
+            sc = leaf.scales
+            total += leaf.codes.size + (
+                sc.nbytes if isinstance(sc, DQScales)
+                else sc.size * sc.dtype.itemsize)
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total
+
+
+def param_bytes_logical(tree, itemsize: int = 4) -> int:
+    """What the same pytree would occupy unquantized (QTensors counted at
+    their logical fp shape × ``itemsize``) — the numerator of the packed
+    storage-reduction ratio in BENCH_serving.json."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += 2 * leaf.codes.size * itemsize
         elif hasattr(leaf, "nbytes"):
             total += leaf.nbytes
     return total

@@ -23,6 +23,7 @@ from repro.models.model import (Plan, decode_step as model_decode, forward,
                                 ring_pages, verify_step as model_verify)
 from repro.optim.adamw import AdamWState, adamw_update
 from repro.optim.schedule import warmup_cosine
+from repro.quant import kv as qkv
 
 
 def make_train_step(
@@ -223,9 +224,13 @@ def make_paged_prefill_into_slot(plan: Plan, bucket: int, page_size: int,
                     rowlen = min(
                         bucket,
                         ring_pages(spec.window, n_tbl, page_size) * page_size)
+                    # the scratch row always runs fp — int8 pools quantize
+                    # at the page scatter below (quantize-on-commit)
+                    row_dt = (jnp.float32 if qkv.quant_cache_keys(bc)
+                              else bc["k"].dtype)
                     st_row[spec.name] = {
                         n: jnp.zeros((st.n_rep, 1, rowlen) + bc[n].shape[3:],
-                                     bc[n].dtype)
+                                     row_dt)
                         for n in ("k", "v")
                     }
                 else:                                  # mamba: dense per slot
@@ -246,13 +251,28 @@ def make_paged_prefill_into_slot(plan: Plan, bucket: int, page_size: int,
                 rowc = row[st.name][spec.name]
                 if spec.kind == "attn":
                     rown = rowc["k"].shape[2] // page_size
-                    st_new[spec.name] = {
-                        n: bc[n].at[:, pids[:rown]].set(
-                            rowc[n].reshape(
-                                (bc[n].shape[0], rown) + bc[n].shape[2:]
-                            ).astype(bc[n].dtype))
-                        for n in ("k", "v")
-                    }
+                    if qkv.quant_cache_keys(bc):
+                        # quantize-on-commit: code each row through the one
+                        # shared quantizer and land codes + per-row scales
+                        # on the same pages
+                        ent = {}
+                        for n in ("k", "v"):
+                            vals = rowc[n].reshape(
+                                (bc[n].shape[0], rown) + bc[n].shape[2:])
+                            codes, sc = qkv.quantize_rows(vals)
+                            ent[n] = bc[n].at[:, pids[:rown]].set(codes)
+                            ent[n + "_sc"] = bc[n + "_sc"].at[
+                                :, pids[:rown]].set(
+                                    sc.astype(bc[n + "_sc"].dtype))
+                        st_new[spec.name] = ent
+                    else:
+                        st_new[spec.name] = {
+                            n: bc[n].at[:, pids[:rown]].set(
+                                rowc[n].reshape(
+                                    (bc[n].shape[0], rown) + bc[n].shape[2:]
+                                ).astype(bc[n].dtype))
+                            for n in ("k", "v")
+                        }
                 else:
                     st_new[spec.name] = jax.tree.map(
                         lambda b, s: _write_row(b, s, slot), bc, rowc)
@@ -342,11 +362,23 @@ def make_paged_prefill_chunk(plan: Plan, chunk_len: int, page_size: int,
                     # masked rows go OUT OF BOUNDS and drop — same scatter
                     # discipline as the speculative paged commit
                     pg_w = jnp.where(keep, pg, bc["k"].shape[1])
-                    st_new[spec.name] = {
-                        n: bc[n].at[:, pg_w, off].set(
-                            oc[n][:, 0].astype(bc[n].dtype), mode="drop")
-                        for n in ("k", "v")
-                    }
+                    if qkv.quant_cache_keys(bc):
+                        ent = {}
+                        for n in ("k", "v"):
+                            codes, sc = qkv.quantize_rows(oc[n][:, 0])
+                            ent[n] = bc[n].at[:, pg_w, off].set(
+                                codes, mode="drop")
+                            ent[n + "_sc"] = bc[n + "_sc"].at[
+                                :, pg_w, off].set(
+                                    sc.astype(bc[n + "_sc"].dtype),
+                                    mode="drop")
+                        st_new[spec.name] = ent
+                    else:
+                        st_new[spec.name] = {
+                            n: bc[n].at[:, pg_w, off].set(
+                                oc[n][:, 0].astype(bc[n].dtype), mode="drop")
+                            for n in ("k", "v")
+                        }
                 else:
                     # recurrent rows stay in the side channel until the
                     # engine activates the slot
@@ -399,8 +431,10 @@ def make_copy_page(plan: Plan) -> Callable:
         new = {stn: dict(stc) for stn, stc in cache.items()}
         for stn, bn in attn:
             bc = cache[stn][bn]
+            # int8 pools fork codes AND scales — a byte-for-byte page copy,
+            # so COW sharers reconstruct identical values
             new[stn][bn] = {n: bc[n].at[:, dst].set(bc[n][:, src])
-                            for n in ("k", "v")}
+                            for n in bc}
         return new
 
     return jax.jit(copy, donate_argnums=(0,))
@@ -543,10 +577,10 @@ def make_paged_draft_loop(plan: Plan, gamma: int, page_size: int, n_tbl: int,
                     if "k" in bc and windows[stn][bn]:
                         pg, off = paged_pos_to_page(
                             block_table, pos + j, windows[stn][bn], page_size)
+                        # int8 pools snapshot scales beside codes — rollback
+                        # restores the row byte-for-byte
                         pre.setdefault(stn, {})[bn] = {
-                            "k": bc["k"][:, pg, off],
-                            "v": bc["v"][:, pg, off],
-                        }
+                            n: bc[n][:, pg, off] for n in bc}
             logits, dc = decode(params, bank, tok, dc, pos + j, adapter_ids,
                                 block_table)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)

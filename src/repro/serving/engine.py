@@ -128,6 +128,7 @@ from repro.models.model import (Plan, init_cache, init_paged_cache,
 from repro.obs.events import EventLog
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import TickTracer
+from repro.quant import nf4
 from repro.runtime.steps import (admit_update, attn_window_map,
                                  make_copy_page, make_decode_step,
                                  make_multi_adapter_decode_step,
@@ -317,6 +318,19 @@ class ContinuousServeEngine:
         self.plan = plan
         self.params = params
         self.cfg = cfg
+        if cfg.quant.kv == "int8" and not cfg.kv_paging:
+            raise ValueError(
+                "quant.kv='int8' requires kv_paging=True — the int8 codes "
+                "and per-row scales live in the page pool")
+        self._quant_weights = cfg.quant.weights == "nf4"
+        self._quant_kv = cfg.quant.kv == "int8"
+        if self._quant_weights:
+            # QLoRAM serving: the frozen base projections quantize ONCE at
+            # engine load; the decode tick streams the packed codes through
+            # the fused dequant-matmul kernel.  Embeddings, norms, lm_head
+            # and every LoRA bank stay fp (see configs.base.QuantPolicy).
+            self.params = nf4.quantize_by_name(
+                params, targets=cfg.quant.targets, block=cfg.quant.block)
         self.registry = registry
         self.mesh = _resolve_mesh(cfg, mesh)
         if self.mesh is not None:
@@ -441,7 +455,8 @@ class ContinuousServeEngine:
         if self.paged:
             self.cache = init_paged_cache(plan, S, self.pages.n_pages,
                                           self._page,
-                                          jnp.dtype(cfg.kv_cache_dtype))
+                                          jnp.dtype(cfg.kv_cache_dtype),
+                                          quant_kv=self._quant_kv)
         else:
             self.cache = init_cache(plan, S, cfg.max_seq_len,
                                     jnp.dtype(cfg.kv_cache_dtype))
@@ -553,6 +568,21 @@ class ContinuousServeEngine:
             gauge("serve_pages_pool_size",
                   "pool capacity incl. the trash page", "pages",
                   lambda: self.pages.n_pages)
+        # serving-time quantization (ServeConfig.quant): packed-vs-logical
+        # byte attribution.  hbm_bytes below already reports PACKED bytes
+        # for quantized tensors (shard nbytes of int8/uint8 storage); these
+        # gauges add the fp-equivalent numerator the reduction ratio needs.
+        gauge("serve_weight_bytes_packed",
+              "physical base-weight bytes (NF4 codes + scales when "
+              "quant.weights='nf4')", "bytes",
+              lambda: nf4.param_bytes(self.params))
+        gauge("serve_weight_bytes_logical",
+              "fp32-equivalent base-weight bytes", "bytes",
+              lambda: nf4.param_bytes_logical(self.params))
+        gauge("serve_kv_cache_bytes",
+              "attention K/V reservation (pool + block table; int8 pools "
+              "count their scale pools)", "bytes",
+              lambda: float(self.kv_cache_bytes()))
         m.gauge("serve_adapter_active_slots",
                 "active slots per adapter name", unit="slots",
                 labelnames=("adapter",)).set_collector(
@@ -1255,13 +1285,14 @@ class ContinuousServeEngine:
 
     def kv_cache_bytes(self) -> int:
         """Device bytes reserved for attention K/V (the paged pool + block
-        table, or the dense per-slot reservation) — what the serving bench
-        compares across engines."""
+        table, or the dense per-slot reservation; int8 pools count their
+        per-row scale pools too) — what the serving bench compares across
+        engines."""
         total = 0
         for stc in self.cache.values():
             for bc in stc.values():
                 if "k" in bc:
-                    total += bc["k"].nbytes + bc["v"].nbytes
+                    total += sum(bc[n].nbytes for n in bc)
         if self.paged:
             total += self._st.block_table.nbytes
         return total

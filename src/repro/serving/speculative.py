@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.configs.base import ServeConfig
 from repro.distributed import sharding
 from repro.models.model import init_cache, init_paged_cache, ring_pages
+from repro.quant import kv as qkv
 from repro.runtime.steps import (attn_window_map, make_copy_page,
                                  make_draft_loop, make_paged_draft_loop,
                                  make_paged_prefill_chunk,
@@ -368,10 +369,32 @@ def _commit_kv_paged(pool, pend, pos, n_keep, table, window, page_size,
     return pool.at[:, pg_w, off].set(mixed, mode="drop")
 
 
+def _commit_kv_paged_quant(pool, sc_pool, pend, pos, n_keep, table, window,
+                           page_size, n_tbl):
+    """:func:`_commit_kv_paged` for an int8 pool: the accepted fp pending
+    rows quantize at the commit (the one shared quantizer — a row gets the
+    same codes here as from any other writer) and codes + per-row scales
+    land together.  Returns (new_pool, new_sc_pool)."""
+    T = pend.shape[2]
+    pg, off, in_ring = _paged_pg_off(table, pos, T, window, page_size, n_tbl)
+    codes, sc = qkv.quantize_rows(pend)
+    old = pool[:, pg, off]
+    old_sc = sc_pool[:, pg, off]
+    keep = (jnp.arange(T)[None, :] < n_keep[:, None]) & in_ring
+    keep = keep[None, :, :, None, None]
+    mixed = jnp.where(keep, codes, old)
+    mixed_sc = jnp.where(keep, sc.astype(sc_pool.dtype), old_sc)
+    pg_w = jnp.where(in_ring, pg, pool.shape[1])                # OOB → drop
+    return (pool.at[:, pg_w, off].set(mixed, mode="drop"),
+            sc_pool.at[:, pg_w, off].set(mixed_sc, mode="drop"))
+
+
 def _restore_kv_paged(pool, old, pos, n_keep, table, window, page_size,
                       n_tbl):
     """Paged :func:`_restore_kv`: roll a windowed ring's draft-loop writes at
-    rows j >= n_keep[b] back to their saved pre-write values."""
+    rows j >= n_keep[b] back to their saved pre-write values.  Works
+    unchanged on int8 code and scale pools — the saved rows restore
+    byte-for-byte."""
     G = old.shape[0]
     pg, off, _ = _paged_pg_off(table, pos, G, window, page_size, n_tbl)
     cur = pool[:, pg, off]
@@ -395,12 +418,22 @@ def commit_cache_paged(cache, pending, pos, n_keep, table, windows,
             pend = pending[stn][bn]
             if "k" in bc:
                 w = windows[stn][bn]
-                out[stn][bn] = {
-                    "k": _commit_kv_paged(bc["k"], pend["k"], pos, n_keep,
-                                          table, w, page_size, n_tbl),
-                    "v": _commit_kv_paged(bc["v"], pend["v"], pos, n_keep,
-                                          table, w, page_size, n_tbl),
-                }
+                if qkv.quant_cache_keys(bc):
+                    nk, nks = _commit_kv_paged_quant(
+                        bc["k"], bc["k_sc"], pend["k"], pos, n_keep, table,
+                        w, page_size, n_tbl)
+                    nv, nvs = _commit_kv_paged_quant(
+                        bc["v"], bc["v_sc"], pend["v"], pos, n_keep, table,
+                        w, page_size, n_tbl)
+                    out[stn][bn] = {"k": nk, "v": nv,
+                                    "k_sc": nks, "v_sc": nvs}
+                else:
+                    out[stn][bn] = {
+                        "k": _commit_kv_paged(bc["k"], pend["k"], pos, n_keep,
+                                              table, w, page_size, n_tbl),
+                        "v": _commit_kv_paged(bc["v"], pend["v"], pos, n_keep,
+                                              table, w, page_size, n_tbl),
+                    }
             else:
                 out[stn][bn] = {
                     "conv": _commit_state(bc["conv"], pend["conv"], n_keep),
@@ -424,13 +457,13 @@ def commit_draft_cache_paged(cache, undo, pos, n_keep, table, windows,
                 if ud is None:
                     out[stn][bn] = bc
                 else:
+                    # the undo snapshot carries every pool leaf the block
+                    # holds (codes AND scales for int8 pools)
                     w = windows[stn][bn]
                     out[stn][bn] = {
-                        "k": _restore_kv_paged(bc["k"], ud["k"], pos, n_keep,
-                                               table, w, page_size, n_tbl),
-                        "v": _restore_kv_paged(bc["v"], ud["v"], pos, n_keep,
-                                               table, w, page_size, n_tbl),
-                    }
+                        n: _restore_kv_paged(bc[n], ud[n], pos, n_keep,
+                                             table, w, page_size, n_tbl)
+                        for n in bc}
             else:
                 out[stn][bn] = {
                     "conv": _commit_state(
@@ -649,7 +682,8 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             # physically smaller anyway: its pruned pages are narrower.
             self.draft_cache = init_paged_cache(
                 draft.plan, S, self.pages.n_pages, self._page,
-                jnp.dtype(cfg.kv_cache_dtype))
+                jnp.dtype(cfg.kv_cache_dtype),
+                quant_kv=cfg.quant.kv == "int8")
             # the draft loop writes through the SAME block table — its ring
             # patterns join the pre-write COW sweep, and a forked page id
             # must be cloned in the draft's pools too
