@@ -40,6 +40,12 @@ over one system prompt) reporting prefill tokens and KV pages saved by
 copy-on-write prefix sharing, with token identity asserted against the
 unshared run.
 
+An OVERLOAD section bursts ~3x the engine's capacity into a bounded submit
+queue with the graceful-degradation ladder armed (``ResilienceConfig``):
+shed-oldest admission control drops the overflow, every submitted request
+still terminates with a typed status, and the JSON records shed rate,
+deadline-miss rate, the ladder's peak level, and degraded-vs-healthy tok/s.
+
 Results are printed AND written to ``BENCH_serving.json`` (see ``--json``)
 so the serving-perf trajectory is tracked across PRs.  ``--smoke`` is the
 CI guard: a seconds-scale run of the dense + paged engines (plus the
@@ -62,8 +68,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import (LoRAConfig, LoRAMConfig, QuantPolicy, ServeConfig,
-                           get_smoke)
+from repro.configs import (LoRAConfig, LoRAMConfig, QuantPolicy,
+                           ResilienceConfig, ServeConfig, get_smoke)
 from repro.core import loram, recovery
 from repro.core.pruning import zero_prunable_tail
 from repro.models import init_params, make_plan
@@ -336,6 +342,19 @@ def validate_results(results):
     assert q["token_match_kv_int8"] >= 0.4, (
         f"too few int8-KV streams identical to fp paged end to end "
         f"(exact match {q['token_match_kv_int8']})")
+    # resilience under overload: a 3x burst into a bounded queue must shed
+    # deterministically, and the status tally must account for EVERY
+    # submitted request (the zero-lost-requests invariant)
+    ov = results.get("overload")
+    assert isinstance(ov, dict), "overload section missing"
+    for key in ("submitted", "completed_ok", "shed", "timeout", "shed_rate",
+                "deadline_miss_rate", "queue_limit", "tok_s_healthy",
+                "tok_s_degraded", "degradation_level_max", "statuses"):
+        assert key in ov, f"overload missing {key}"
+    assert sum(ov["statuses"].values()) == ov["submitted"], (
+        f"overload statuses {ov['statuses']} don't partition "
+        f"{ov['submitted']} submitted requests")
+    assert ov["shed"] > 0, "3x-burst overload run shed nothing"
     assert isinstance(results.get("speedups"), dict)
     # registry-derived telemetry: present for both continuous engines, with
     # counters consistent with the lifecycle-event log
@@ -486,6 +505,68 @@ def run_prefix(plan, params, registry, work, slots, lora_scale, shared):
     for r in eng.stream():
         results[r.uid] = r
     return results, eng
+
+
+def run_overload(plan, params, registry, work, slots, lora_scale, kv_pages,
+                 page_size, tok_s_healthy):
+    """Burst ~3x the engine's capacity into a bounded queue with the
+    degradation ladder armed (repro.serving.resilience): shed-oldest
+    admission control drops the overflow deterministically at submit,
+    queue pressure walks the ladder up, and every submitted request still
+    terminates with exactly one typed ``RequestResult.status``.  Reports
+    the shed / deadline-miss rates and the degraded throughput next to
+    the healthy paged engine's — the load-shedding trajectory line in
+    BENCH_serving.json."""
+    resil = ResilienceConfig(
+        queue_limit=slots * 2, queue_policy="shed-oldest", deadline_s=120.0,
+        degradation=True, degrade_high=0.5, degrade_low=0.25,
+        degrade_up_ticks=1)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=MAX_SEQ_LEN, max_slots=slots,
+                    max_adapters=registry.max_adapters, max_new_tokens=64,
+                    kv_cache_dtype="float32", kv_paging=True,
+                    kv_page_size=page_size, kv_pages=kv_pages,
+                    resilience=resil),
+        registry, lora_scale=lora_scale)
+    # warm-up below capacity (compiles the tick variants without shedding),
+    # then zero the telemetry so the reported run is the burst alone
+    for prompt, adapter, n_new in work[:slots]:
+        eng.submit(prompt, max_new_tokens=n_new, adapter=adapter)
+    eng.run()
+    eng.reset_telemetry()
+    # the warm-up saturated the page pool, so the ladder latched high
+    # (down_ticks debounce outlives the drain); the burst should start
+    # from a HEALTHY engine, not inherit the warm-up's pressure history
+    ctl = eng._degrade_ctl
+    ctl.level = ctl.peak_level = 0
+    ctl._above = ctl._below = 0
+    eng._apply_degradation(0)
+    for prompt, adapter, n_new in work:
+        eng.submit(prompt, max_new_tokens=n_new, adapter=adapter)
+    t0 = time.perf_counter()
+    results = eng.run()
+    dt = time.perf_counter() - t0
+    statuses = defaultdict(int)
+    for r in results.values():
+        statuses[r.status] += 1
+    n = len(results)
+    ok_tok = sum(r.n_generated for r in results.values() if r.status == "ok")
+    assert n == len(work), (n, len(work))  # nothing lost, nothing invented
+    assert eng.pages.pages_in_use == 0, "overload run leaked pages"
+    return {
+        "submitted": n,
+        "completed_ok": statuses["ok"],
+        "shed": statuses["shed"],
+        "timeout": statuses["timeout"],
+        "shed_rate": round(statuses["shed"] / max(n, 1), 4),
+        "deadline_miss_rate": round(statuses["timeout"] / max(n, 1), 4),
+        "queue_limit": slots * 2,
+        "tok_s_healthy": tok_s_healthy,
+        "tok_s_degraded": round(ok_tok / max(dt, 1e-9), 1),
+        "degradation_level_max": eng._degrade_ctl.peak_level,
+        "statuses": dict(statuses),
+    }
 
 
 def run_speculative(plan, params, registry, draft, work, slots, gamma,
@@ -793,6 +874,19 @@ def main():
           f"{pmatch_kv:.2f} prefix vs fp, nf4+int8 {match_q:.2f}; "
           f"spec acceptance {acc_fp:.1%} → {acc_q:.1%} under quant")
 
+    # ---- overload: bounded queue + degradation ladder under a 3x burst ----
+    ov_work = make_workload(args.requests * 3, cfg.vocab_size, seed=23)
+    overload = run_overload(plan, params, registry, ov_work, args.slots,
+                            lora_cfg.scale, kv_pages, args.page_size,
+                            round(paged_tps, 1))
+    print(f"[serve_bench] overload    : {overload['submitted']} submitted → "
+          f"{overload['completed_ok']} ok, {overload['shed']} shed, "
+          f"{overload['timeout']} timeout (shed rate "
+          f"{overload['shed_rate']:.0%}, ladder peak "
+          f"{overload['degradation_level_max']}); "
+          f"{overload['tok_s_degraded']:.1f} tok/s degraded vs "
+          f"{overload['tok_s_healthy']:.1f} healthy")
+
     results = {
         "bench": "serving",
         "config": {
@@ -868,6 +962,7 @@ def main():
                 "acceptance_drift": round(acc_fp - acc_q, 4),
             },
         },
+        "overload": overload,
         "speedups": {"paged_vs_continuous": round(paged_tps / cont_tps, 3)},
         # registry-derived telemetry (same source as --metrics-json): the
         # schema guard cross-checks these counters against the event log

@@ -4,6 +4,7 @@ from repro.configs.base import (  # noqa: F401
     LoRAMConfig,
     ModelConfig,
     QuantPolicy,
+    ResilienceConfig,
     ServeConfig,
     Stage,
     StageDims,

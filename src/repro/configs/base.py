@@ -308,6 +308,73 @@ class QuantPolicy:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Serving resilience policy (repro.serving.resilience).
+
+    Admission control, deadlines, the graceful-degradation ladder and
+    tick-retry/watchdog escalation are all host-side: with the default
+    (disabled) policy the engines behave bit-identically to a build
+    without the resilience layer, and nothing here adds TickState leaves.
+
+    queue_limit:  bound on the scheduler submit queue (0 → unbounded).
+    queue_policy: what happens when the queue is full —
+                  "reject" sheds the NEW request, "shed-oldest" evicts
+                  the oldest queued request to make room.
+    ttft_deadline_s: fail a request with status="timeout" if its first
+                  token has not been produced this many seconds after
+                  submit (0 → no TTFT deadline).
+    deadline_s:   end-to-end deadline from submit; on expiry the request
+                  terminates with status="timeout" and whatever tokens
+                  it generated so far (0 → no deadline).
+    degradation:  enable the hysteresis degradation ladder
+                  (level 0 healthy → 1 shrink-γ → 2 disable speculation
+                  → 3 evict idle prefixes → 4 shrink prefill chunk
+                  → 5 shed load), driven by queue depth, page-pool
+                  occupancy and watchdog stalls.
+    degrade_high/degrade_low: pressure thresholds (fractions) with
+                  hysteresis — step up above high, step down below low.
+    degrade_up_ticks/degrade_down_ticks: consecutive observations
+                  required before moving a level (debounce).
+    tick_retries: bounded retries (with linear backoff) when a decode
+                  tick dispatch raises a transient fault; exhaustion
+                  escalates to snapshot-and-restart.
+    retry_backoff_s: base sleep between retries (attempt-scaled).
+    stall_degrade_after: watchdog stalls before forcing the degradation
+                  ladder up one level (0 → never).
+    stall_restart_after: watchdog stalls before a snapshot-and-restart
+                  (0 → never).
+    """
+
+    queue_limit: int = 0
+    queue_policy: str = "reject"
+    ttft_deadline_s: float = 0.0
+    deadline_s: float = 0.0
+    degradation: bool = False
+    degrade_high: float = 0.85
+    degrade_low: float = 0.50
+    degrade_up_ticks: int = 2
+    degrade_down_ticks: int = 8
+    tick_retries: int = 2
+    retry_backoff_s: float = 0.0
+    stall_degrade_after: int = 0
+    stall_restart_after: int = 0
+
+    def __post_init__(self):
+        assert self.queue_policy in ("reject", "shed-oldest"), self.queue_policy
+        assert self.queue_limit >= 0 and self.tick_retries >= 0
+        assert self.ttft_deadline_s >= 0.0 and self.deadline_s >= 0.0
+        assert 0.0 < self.degrade_low <= self.degrade_high
+        assert self.degrade_up_ticks >= 1 and self.degrade_down_ticks >= 1
+
+    @property
+    def enabled(self) -> bool:
+        """Anything beyond pure pass-through behavior switched on?"""
+        return bool(self.queue_limit or self.ttft_deadline_s
+                    or self.deadline_s or self.degradation
+                    or self.stall_degrade_after or self.stall_restart_after)
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     batch: int = 1
     max_seq_len: int = 4096
@@ -365,6 +432,10 @@ class ServeConfig:
     # serving-time quantization (QLoRAM): NF4 base weights through the fused
     # kernel and/or int8 paged KV pool — see QuantPolicy
     quant: QuantPolicy = QuantPolicy()
+    # serving resilience: bounded admission, deadlines, load shedding,
+    # degradation ladder, retry/restart escalation — see ResilienceConfig.
+    # The default policy is fully disabled (pass-through).
+    resilience: ResilienceConfig = ResilienceConfig()
 
 
 def round_to(x: int, mult: int) -> int:

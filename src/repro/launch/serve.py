@@ -26,6 +26,20 @@ results, see ``repro.obs``) after the run, validated against the checked-in
 ``repro/obs/snapshot.schema.json``.  ``--metrics-port PORT`` additionally
 serves live Prometheus text at ``/metrics`` (JSON at ``/metrics.json``)
 while the process runs.
+
+Resilience (``repro.serving.resilience``; continuous engines only):
+``--queue-limit N`` bounds the pre-admission queue (``--queue-policy``
+picks ``reject`` — shed the NEW request — or ``shed-oldest``);
+``--deadline-ms`` attaches an end-to-end deadline to every request
+(``--ttft-deadline-ms`` separately bounds time-to-first-token);
+``--degrade`` arms the graceful-degradation ladder.  Every request then
+terminates with a typed ``RequestResult.status`` (``ok``/``timeout``/
+``shed``/``cancelled``/``failed``) that the metrics snapshot carries
+per-request.  ``--fault-plan JSON_OR_PATH`` installs a deterministic,
+seeded fault-injection plan (``repro.testing.faults.FaultPlan``) — e.g.
+``'{"seed": 7, "tick": {"p": 0.3, "max_fires": 4}}'`` — which the engine
+absorbs via bounded tick retries, preemption, degradation and
+snapshot-and-restart; CI asserts no request is ever lost under it.
 """
 from __future__ import annotations
 
@@ -37,8 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.configs import (LoRAConfig, LoRAMConfig, QuantPolicy, ServeConfig,
-                           get_arch, get_smoke)
+from repro.configs import (LoRAConfig, LoRAMConfig, QuantPolicy,
+                           ResilienceConfig, ServeConfig, get_arch, get_smoke)
 from repro.core import loram
 from repro.models import init_params, make_plan
 from repro.serving import (AdapterRegistry, ContinuousServeEngine,
@@ -56,7 +70,8 @@ def _export_metrics(args, eng, results=None) -> None:
     if results is not None:
         extra = {"requests": {
             str(uid): {"ttft_s": r.ttft_s, "latency_s": r.latency_s,
-                       "n_generated": r.n_generated}
+                       "n_generated": r.n_generated,
+                       "status": getattr(r, "status", "ok")}
             for uid, r in results.items()}}
     quant = getattr(eng, "cfg", None) and eng.cfg.quant
     if quant and (quant.weights != "none" or quant.kv != "none"):
@@ -136,6 +151,27 @@ def main():
     ap.add_argument("--tick-watchdog", action="store_true",
                     help="count straggler ticks via the step watchdog "
                          "(serve_stalls_total / serve_tick_ewma_s)")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="bound the pre-admission queue; overflow is shed "
+                         "per --queue-policy (0 → unbounded)")
+    ap.add_argument("--queue-policy", choices=("reject", "shed-oldest"),
+                    default="reject",
+                    help="full-queue behaviour: shed the NEW request "
+                         "(reject) or the oldest queued one (shed-oldest)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="end-to-end deadline per request; expired requests "
+                         "finish with status=timeout (0 → none)")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0.0,
+                    help="time-to-first-token deadline (0 → none)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="arm the graceful-degradation ladder (shrink γ → "
+                         "no spec → drop idle prefixes → shrink prefill "
+                         "chunk → shed)")
+    ap.add_argument("--fault-plan", type=str, default=None,
+                    metavar="JSON_OR_PATH",
+                    help="install a seeded deterministic fault-injection "
+                         "plan (repro.testing.faults.FaultPlan JSON, inline "
+                         "or a file path)")
     args = ap.parse_args()
     try:
         mesh_data, mesh_model = (int(v) for v in args.mesh.split(","))
@@ -146,6 +182,13 @@ def main():
     if args.prefill_chunk or args.prefix_sharing:
         args.paged = True
     if args.speculative or args.paged or args.quant_weights != "none":
+        args.continuous = True
+    resil = ResilienceConfig(
+        queue_limit=args.queue_limit, queue_policy=args.queue_policy,
+        deadline_s=args.deadline_ms / 1e3,
+        ttft_deadline_s=args.ttft_deadline_ms / 1e3,
+        degradation=args.degrade)
+    if resil.enabled or args.fault_plan:
         args.continuous = True
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -176,7 +219,8 @@ def main():
             prefix_sharing=args.prefix_sharing,
             mesh_data=mesh_data, mesh_model=mesh_model,
             tick_watchdog=args.tick_watchdog,
-            quant=QuantPolicy(weights=args.quant_weights, kv=args.quant_kv))
+            quant=QuantPolicy(weights=args.quant_weights, kv=args.quant_kv),
+            resilience=resil)
         if args.speculative:
             # the SAME pruned artifacts the adapter was trained on now draft
             draft = draft_from_setup(setup, max_adapters=2)
@@ -185,6 +229,9 @@ def main():
                                          draft)
         else:
             eng = ContinuousServeEngine(plan, params, serve_cfg, registry)
+        if args.fault_plan:
+            from repro.testing.faults import FaultPlan
+            eng.install_faults(FaultPlan.from_json(args.fault_plan))
         server = (obs.serve_http(eng.metrics, args.metrics_port, eng.tracer,
                                  eng.events) if args.metrics_port else None)
         t0 = time.perf_counter()
@@ -212,6 +259,15 @@ def main():
         if args.speculative:
             print(f"[serve] γ={args.gamma}, acceptance "
                   f"{eng.acceptance_rate:.1%}, {eng.n_rounds} rounds")
+        if resil.enabled or args.fault_plan:
+            tally: dict = {}
+            for r in results.values():
+                tally[r.status] = tally.get(r.status, 0) + 1
+            line = (f"[serve] resilience: statuses={tally}, "
+                    f"degradation_level={eng._degrade_level}")
+            if eng._faults is not None:
+                line += f", faults={eng._faults.report()}"
+            print(line)
         if args.quant_weights != "none" or args.quant_kv != "none":
             from repro.quant import nf4
             packed = nf4.param_bytes(eng.params)

@@ -59,6 +59,23 @@ legacy ``eng.n_* = 0`` property setters kept for the benchmark warm-up):
 ``serve_stalls_total`` (ticks)
     Watchdog-flagged straggler ticks (``ServeConfig.tick_watchdog``); the
     alarm is counted, never raised, in serving.
+``serve_shed_total`` (requests)
+    Requests dropped by admission control (bounded queue) or the
+    degradation ladder's shed level.  Terminal status ``shed``.
+``serve_deadline_miss_total`` (requests)
+    Requests terminated at a TTFT or end-to-end deadline
+    (``ResilienceConfig.ttft_deadline_s`` / ``deadline_s``).  Terminal
+    status ``timeout``; partial tokens still ship in the result.
+``serve_cancelled_total`` (requests)
+    Requests terminated via ``engine.cancel(uid)``.
+``serve_failed_total`` (requests)
+    Requests that could never run (impossible admission, admission-
+    livelock breaker) or were failed by injected faults.
+    ``completed + shed + deadline_miss + cancelled + failed`` partitions
+    every submitted request exactly once.
+``serve_restores_total`` (restores)
+    Snapshot-and-restart cycles (tick-retry exhaustion, stall-streak
+    escalation, or an explicit ``engine.restore``).
 ``spec_rounds_total`` / ``spec_tokens_proposed_total`` /
 ``spec_tokens_accepted_total``
     Speculative engine only: draft→verify rounds, γ-sized proposals, and
@@ -82,6 +99,9 @@ snapshot time, so the hot loop never pays for them):
     ``GammaController`` EMA acceptance and the γ it currently proposes.
 ``serve_tick_ewma_s`` (seconds)
     ``StepWatchdog`` EWMA of tick wall-clock (watchdog enabled only).
+``serve_degradation_level`` (level)
+    Current rung of the graceful-degradation ladder (0 = healthy …
+    5 = shed load), live from ``repro.serving.resilience``.
 ``hbm_bytes{component,device}`` (bytes)
     Per-device HBM attribution for ``weights`` / ``kv_cache`` /
     ``adapter_bank`` under the mesh — the LoRAM resource story, live.
@@ -103,6 +123,9 @@ Histograms (fixed ``LATENCY_BUCKETS`` edges, seconds):
     ``RequestResult.ttft_s``).
 ``serve_e2e_latency_seconds``
     Submit-to-complete latency per request.
+``serve_tick_retries`` (retries; same bucket edges, unit ``retries``)
+    Tick-dispatch attempts burned before a snapshot-and-restart was
+    triggered (fault injection / ``ResilienceConfig.tick_retries``).
 
 Event log reference
 ===================
@@ -123,6 +146,19 @@ stamps, so ``EventLog.derive_ttft(uid) == RequestResult.ttft_s`` exactly.
                 the request is requeued at the head.
 ``stall``       watchdog straggler tick; uid is -1 (engine-scoped).
 ``complete``    finalized; ``slot``, ``n_generated``.
+``timeout``     TTFT / end-to-end deadline expired; ``slot`` (-1 if still
+                queued), ``n_generated`` (partial tokens still shipped).
+``shed``        dropped by the bounded queue or the ladder's shed level;
+                always ``slot`` -1, ``n_generated`` 0.
+``cancel``      ``engine.cancel(uid)``; queued or in-flight.
+``failed``      impossible admission, livelock breaker, or injected
+                adapter fault.
+                Exactly ONE of {complete, timeout, shed, cancel, failed}
+                per submitted uid — the terminal kinds mirror
+                ``RequestResult.status``.
+``degrade``     ladder level change; uid -1, ``level``, ``prev``.
+``restore``     snapshot-and-restart re-queued work; uid -1,
+                ``n_requests``.
 """
 from repro.obs.events import EVENT_KINDS, EventLog
 from repro.obs.export import (metric_value, render_prometheus, serve_http,

@@ -5,7 +5,11 @@ request from ``submit`` through ``admit``, ``prefix_hit``,
 ``prefill_chunk`` × N, ``first_token``, ``preempt`` (with implicit
 requeue-at-head), ``stall`` (watchdog), to ``complete`` — each carrying the
 uid plus whatever attribution the engine knows at that instant (slot,
-adapter, prefix hit, pages held, tokens).  This is what lets a TTFT or p99
+adapter, prefix hit, pages held, tokens).  Under the resilience layer a
+request may instead terminate as ``timeout`` / ``shed`` / ``cancel`` /
+``failed`` (one terminal record per uid, mirroring
+``RequestResult.status``), and the engine itself logs ``degrade`` /
+``restore`` transitions with uid=-1.  This is what lets a TTFT or p99
 regression be blamed on SCHEDULING (admission waited on pages; prefill
 yielded to decode ticks; a preemption restarted the prompt) instead of being
 re-derived from benchmark harness stamps after the fact.
@@ -30,9 +34,14 @@ from collections import deque
 from typing import Any, Dict, List, Optional
 
 # the full lifecycle vocabulary — exported so tests and the snapshot schema
-# agree on what may appear in a record's "kind"
+# agree on what may appear in a record's "kind".  The second line is the
+# resilience layer (repro.serving.resilience): "complete"/"timeout"/"shed"/
+# "cancel"/"failed" are the TERMINAL kinds — every submitted uid gets
+# exactly one of them; "degrade" (ladder level change) and "restore"
+# (snapshot-and-restart) are engine-scoped records carrying uid=-1
 EVENT_KINDS = ("submit", "admit", "prefix_hit", "prefill_chunk",
-               "first_token", "preempt", "stall", "complete")
+               "first_token", "preempt", "stall", "complete",
+               "timeout", "shed", "cancel", "failed", "degrade", "restore")
 
 
 class EventLog:

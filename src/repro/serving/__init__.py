@@ -5,6 +5,9 @@ from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401
                                   GenerationResult, PrefixEntry, ServeEngine)
 from repro.serving.pages import (PageAllocator, PoolExhausted,  # noqa: F401
                                  auto_pool_pages, bucket_len, pages_for)
+from repro.serving.resilience import (STATUSES,  # noqa: F401
+                                      DegradationController, engine_restore,
+                                      engine_snapshot)
 from repro.serving.scheduler import (Request, RequestResult,  # noqa: F401
                                      Scheduler)
 from repro.serving.speculative import (GammaController,  # noqa: F401

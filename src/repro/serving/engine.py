@@ -138,10 +138,17 @@ from repro.runtime.steps import (admit_update, attn_window_map,
                                  make_state_ops, request_key)
 from repro.runtime.watchdog import StepWatchdog, StragglerAlarm
 from repro.serving.adapters import BASE_ADAPTER, AdapterRegistry
+from repro.serving.resilience import (DEGRADE_DROP_PREFIXES, DEGRADE_NO_SPEC,
+                                      DEGRADE_SHED, DEGRADE_SHRINK_CHUNK,
+                                      STATUS_CANCELLED, STATUS_FAILED,
+                                      STATUS_OK, STATUS_SHED, STATUS_TIMEOUT,
+                                      TERMINAL_EVENT, DegradationController,
+                                      engine_restore, engine_snapshot)
 from repro.serving.pages import (PageAllocator, PoolExhausted, bucket_len,
                                  pages_for)
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.serving.tickstate import TickState
+from repro.testing.faults import TransientFault
 
 
 def _counter_property(child: str, doc: str) -> property:
@@ -346,6 +353,26 @@ class ContinuousServeEngine:
         self._n_ticks = 0
         self._lora_scale = lora_scale
 
+        # ---- resilience (ServeConfig.resilience; all host-side) ----
+        r = cfg.resilience
+        self._resil = r
+        self._faults = None               # install_faults(FaultPlan)
+        self._degrade_ctl = (DegradationController(
+            high=r.degrade_high, low=r.degrade_low,
+            up_ticks=r.degrade_up_ticks, down_ticks=r.degrade_down_ticks)
+            if r.degradation else None)
+        self._degrade_level = 0
+        self._chunk_eff = cfg.prefill_chunk   # shrinks at ladder level 4
+        self._deadline_abs: Dict[int, float] = {}       # uid → abs e2e
+        self._ttft_deadline_abs: Dict[int, float] = {}  # uid → abs TTFT
+        self._terminal_info: Dict[int, tuple] = {}      # uid → staged
+                                                        # (status, n, t_end)
+        self._pending_results: List[RequestResult] = []  # terminals produced
+                                                         # outside step()
+        self._stalls_seen = 0.0
+        self._stall_streak = 0
+        self._want_restart = False
+
         # ---- paged KV cache plumbing (ServeConfig.kv_paging) ----
         self.paged = cfg.kv_paging
         self._page = cfg.kv_page_size
@@ -541,6 +568,34 @@ class ContinuousServeEngine:
         self._c_stalls = counter(
             "serve_stalls_total", "watchdog-flagged straggler ticks",
             "ticks")
+        # resilience terminal-status counters (repro.serving.resilience):
+        # serve_requests_completed_total counts status="ok" only, so
+        # completed + shed + deadline_miss + cancelled + failed covers
+        # every submitted request exactly once
+        self._c_shed = counter(
+            "serve_shed_total",
+            "requests dropped by admission control / load shedding",
+            "requests")
+        self._c_deadline_miss = counter(
+            "serve_deadline_miss_total",
+            "requests terminated at a TTFT or end-to-end deadline",
+            "requests")
+        self._c_cancelled = counter(
+            "serve_cancelled_total", "requests cancelled via engine.cancel",
+            "requests")
+        self._c_failed = counter(
+            "serve_failed_total",
+            "requests failed (impossible admission / injected faults)",
+            "requests")
+        self._c_restores = counter(
+            "serve_restores_total",
+            "snapshot-and-restart cycles (watchdog/retry escalation or "
+            "explicit restore)", "restores")
+        self._h_retries = m.histogram(
+            "serve_tick_retries",
+            "retry attempts absorbed per transient-fault tick dispatch "
+            "(observed only when a dispatch needed retries)",
+            unit="retries").labels()
         self._h_ttft = m.histogram(
             "serve_ttft_seconds", "submit → first-token dispatch",
             unit="seconds").labels()
@@ -557,6 +612,10 @@ class ContinuousServeEngine:
               lambda: len(self._sched.active_slots()))
         gauge("serve_queue_depth", "submitted but not admitted", "requests",
               lambda: self._sched.queued)
+        gauge("serve_degradation_level",
+              "graceful-degradation ladder position (0 = healthy, "
+              "5 = shedding)", "level",
+              lambda: float(self._degrade_level))
         if self.paged:
             gauge("serve_pages_in_use", "pool pages currently mapped",
                   "pages", lambda: self.pages.pages_in_use)
@@ -635,6 +694,65 @@ class ContinuousServeEngine:
             pages = (len(self.pages.slot_pages(slot)) if self.paged else 0)
             self.events.emit("preempt", req.uid, slot=slot,
                              pages_freed=pages)
+        elif kind == "evict":
+            # EVERY terminal slot transition funnels through
+            # Scheduler.evict, so this is where the terminal event is
+            # emitted — the engine stages (status, n_generated, t_end)
+            # in _terminal_info just before evicting; a transition that
+            # forgot to stage still reports (as a plain completion)
+            status, n, t_end = self._terminal_info.pop(
+                req.uid, (STATUS_OK, 0, time.perf_counter()))
+            self._emit_terminal(req.uid, slot, status, n, t_end)
+
+    def _emit_terminal(self, uid: int, slot: int, status: str, n: int,
+                       t_end: float) -> None:
+        """One terminal event + one terminal-status counter bump per
+        request — completed + shed + deadline_miss + cancelled + failed
+        partitions every submitted uid."""
+        self.events.emit(TERMINAL_EVENT[status], uid, t=t_end, slot=slot,
+                         n_generated=n)
+        if status == STATUS_OK:
+            self._c_completed.inc()
+        elif status == STATUS_TIMEOUT:
+            self._c_deadline_miss.inc()
+        elif status == STATUS_SHED:
+            self._c_shed.inc()
+        elif status == STATUS_CANCELLED:
+            self._c_cancelled.inc()
+        else:
+            self._c_failed.inc()
+
+    def _result_for(self, req: Request, n: int, row: np.ndarray,
+                    status: str, t_end: float) -> RequestResult:
+        """Build the typed result and settle the request's host-side
+        accounting (hot-slot count, wall-clock stamps, deadlines).
+        Latency histograms record clean completions only — shed/timeout
+        latencies would poison the SLO percentiles they feed."""
+        if req.temperature > 0.0:
+            self._n_hot -= 1
+        name = (self.registry.name_of(req.adapter_id)
+                if self.registry is not None else None)
+        t_sub = self._t_submit.pop(req.uid, t_end)
+        t_first = self._t_first.pop(req.uid, t_end)
+        self._deadline_abs.pop(req.uid, None)
+        self._ttft_deadline_abs.pop(req.uid, None)
+        ttft = max(t_first - t_sub, 0.0)
+        latency = max(t_end - t_sub, 0.0)
+        if status == STATUS_OK:
+            self._h_ttft.observe(ttft)
+            self._h_e2e.observe(latency)
+        return RequestResult(uid=req.uid, tokens=row, adapter=name,
+                             prompt_len=len(req.prompt), n_generated=n,
+                             ttft_s=ttft, latency_s=latency, status=status)
+
+    def _queue_terminal(self, req: Request, status: str) -> RequestResult:
+        """Terminate a request that never held a slot (shed at submit,
+        deadline-expired in queue, cancelled while queued, impossible
+        admission): emits the terminal event with slot=-1."""
+        t_end = time.perf_counter()
+        self._emit_terminal(req.uid, -1, status, 0, t_end)
+        return self._result_for(req, 0, np.zeros(0, np.int32), status,
+                                t_end)
 
     def _stamp_first_token(self, req: Request) -> None:
         """First-token wall-clock, written AT MOST ONCE per uid: a request
@@ -649,6 +767,16 @@ class ContinuousServeEngine:
         self._c_stalls.inc()
         self.events.emit("stall", -1, elapsed_s=alarm.elapsed,
                          ewma_s=alarm.ewma)
+        # escalation ladder: repeated stalls force-degrade, a long streak
+        # schedules snapshot-and-restart (ServeConfig.resilience)
+        r = self._resil
+        self._stall_streak += 1
+        if (r.stall_degrade_after and self._degrade_ctl is not None
+                and self._stall_streak % r.stall_degrade_after == 0):
+            self._apply_degradation(self._degrade_ctl.force_up())
+        if r.stall_restart_after and self._stall_streak >= r.stall_restart_after:
+            self._want_restart = True
+            self._stall_streak = 0
 
     def _adapter_slot_collector(self) -> Dict[tuple, float]:
         tally: Dict[tuple, float] = {}
@@ -755,36 +883,87 @@ class ContinuousServeEngine:
         self._t_submit[req.uid] = t
         self.events.emit("submit", req.uid, t=t, n_prompt=len(prompt),
                          adapter=req.adapter)
+        # ---- admission control (ServeConfig.resilience) ----
+        r = self._resil
+        if r.deadline_s > 0.0:
+            self._deadline_abs[req.uid] = t + r.deadline_s
+        if r.ttft_deadline_s > 0.0:
+            self._ttft_deadline_abs[req.uid] = t + r.ttft_deadline_s
+        if self._impossible(req):
+            # the request can NEVER hold enough pages, even with the whole
+            # pool to itself — fail it typed instead of letting the
+            # preempt-newest loop livelock on it
+            self._pending_results.append(
+                self._queue_terminal(req, STATUS_FAILED))
+            return req.uid
+        if self._degrade_level >= DEGRADE_SHED and self._sched.queued > 0:
+            # ladder top: shed new arrivals while a backlog exists
+            self._pending_results.append(
+                self._queue_terminal(req, STATUS_SHED))
+            return req.uid
+        if r.queue_limit and self._sched.queued >= r.queue_limit:
+            if r.queue_policy == "reject":
+                self._pending_results.append(
+                    self._queue_terminal(req, STATUS_SHED))
+                return req.uid
+            # shed-oldest: the head has waited longest and is the most
+            # deadline-doomed — drop it, admit the newcomer
+            victim = self._sched.shed_oldest()
+            if victim is not None:
+                self._pending_results.append(
+                    self._queue_terminal(victim, STATUS_SHED))
         return self._sched.submit(req)
+
+    def cancel(self, uid: int) -> Optional[RequestResult]:
+        """Terminate one request wherever it lives — queued (dropped in
+        place) or in-flight (finalized with its partial tokens; pages,
+        prefix refcounts and block-table row release exactly as at
+        completion).  Returns the typed result (``status="cancelled"``)
+        directly, or None if the uid is not live."""
+        req = self._sched.drop_queued(uid)
+        if req is not None:
+            return self._queue_terminal(req, STATUS_CANCELLED)
+        for slot in self._sched.occupied_slots():
+            r = self._sched.slot_request(slot)
+            if r is not None and r.uid == uid:
+                ctx = (sharding.use_mesh(self.mesh, head_shard=True)
+                       if self.mesh is not None else _null())
+                with ctx:
+                    return self._finalize(slot, STATUS_CANCELLED)
+        return None
 
     # -- progress -----------------------------------------------------------
 
     def step(self) -> List[RequestResult]:
         """Admit whatever fits, stream at most one prefill chunk per
         still-prefilling slot, run one decode tick, return newly completed
-        requests (empty list if nothing finished this tick)."""
+        requests (empty list if nothing finished this tick).  With
+        resilience configured the step also drains out-of-band terminals
+        (shed/failed at submit), enforces deadlines, observes the
+        degradation controller, and honors a pending snapshot-and-restart
+        escalation — all host-side, nothing new inside jit."""
+        done: List[RequestResult] = []
+        if self._pending_results:
+            done.extend(self._pending_results)
+            self._pending_results.clear()
+        if self._want_restart:
+            self._self_restart()
         ctx = (sharding.use_mesh(self.mesh, head_shard=True)
                if self.mesh is not None else _null())
-        done: List[RequestResult] = []
         progressive = self.paged and (self._chunking or self._sharing)
         with ctx:
+            if self._resil.enabled:
+                done.extend(self._enforce_deadlines())
+                done.extend(self._break_admission_stall())
+            if self._degrade_ctl is not None:
+                self._degrade_tick()
             if self.paged:
                 # grow EXISTING slots before admitting: otherwise a freshly
                 # admitted request is always the newest slot and the first
                 # preemption victim, wasting its just-run prefill
                 self._ensure_growth(lookahead=1)
             with self.tracer.span("admit"):
-                while True:
-                    adm = self._sched.next_admission(
-                        gate=self._admission_gate if self.paged else None,
-                        prefill=self._chunked_path if progressive else None)
-                    if adm is None:
-                        break
-                    slot, req = adm
-                    if progressive and self._chunked_path(req):
-                        self._admit_chunked(slot, req)
-                    else:
-                        self._admit(slot, req)
+                self._admit_pass(done, progressive)
             if progressive:
                 # one bounded chunk per prefilling slot, oldest first — the
                 # decode tick below runs regardless, so a long prompt never
@@ -820,21 +999,306 @@ class ContinuousServeEngine:
                 bank = None if self.registry is None else self.registry.bank
                 if self._watchdog is not None:
                     self._watchdog.start()
-                with self.tracer.span("tick"):
-                    self.cache, self._st = tick(
-                        self.params, bank, self.cache, self._st)
-                if self._watchdog is not None:
-                    self._watchdog.stop(self._n_ticks)
-                self._n_ticks += 1
-                self._c_ticks.inc()
-                if self._sched.prefilling_slots():
-                    self._c_ticks_during_prefill.inc()
-                if self.paged:
-                    for slot in active:
-                        self._slot_pos[slot] += 1
-                for slot in self._sched.tick():
-                    done.append(self._finalize(slot))
+                if self._pre_dispatch_guard():
+                    with self.tracer.span("tick"):
+                        self.cache, self._st = tick(
+                            self.params, bank, self.cache, self._st)
+                    if self._watchdog is not None:
+                        self._watchdog.stop(self._n_ticks)
+                    self._n_ticks += 1
+                    self._c_ticks.inc()
+                    if self._sched.prefilling_slots():
+                        self._c_ticks_during_prefill.inc()
+                    if self.paged:
+                        for slot in active:
+                            self._slot_pos[slot] += 1
+                    for slot in self._sched.tick():
+                        done.append(self._finalize(slot))
+                # guard False: the dispatch was skipped wholesale (retry
+                # budget exhausted; a restart runs next step) — host
+                # counters and device state both saw nothing, so they
+                # stay consistent
         return done
+
+    def _admit_pass(self, done: List[RequestResult],
+                    progressive: bool) -> None:
+        """Drain admissions into free slots (FCFS).  Consults the fault
+        plan's ``adapter`` site and the degradation ladder per admission."""
+        while True:
+            adm = self._sched.next_admission(
+                gate=self._admission_gate if self.paged else None,
+                prefill=self._chunked_path if progressive else None)
+            if adm is None:
+                break
+            slot, req = adm
+            if (self._faults is not None
+                    and self._faults.adapter_load_fails()):
+                done.append(self._fail_admission(slot, req))
+                continue
+            if self._degrade_level >= DEGRADE_NO_SPEC:
+                # draft-then-verify off under pressure; base engines pin
+                # non-speculative slots to the identical decode path, so
+                # greedy output is unchanged
+                req.speculative = False
+            if progressive and self._chunked_path(req):
+                self._admit_chunked(slot, req)
+            else:
+                self._admit(slot, req)
+
+    def _fail_admission(self, slot: int, req: Request) -> RequestResult:
+        """Adapter-load failure at admission: the slot was claimed but no
+        model work ran yet — release it and terminate the request typed."""
+        if self.paged:
+            self._release_slot_pages(slot)
+        t_end = time.perf_counter()
+        self._terminal_info[req.uid] = (STATUS_FAILED, 0, t_end)
+        self._sched.evict(slot)
+        return self._result_for(req, 0, np.zeros(0, np.int32),
+                                STATUS_FAILED, t_end)
+
+    def _pre_dispatch_guard(self) -> bool:
+        """Consult the fault plan immediately BEFORE a jitted dispatch
+        (injection pre-dispatch means donated buffers are never left
+        half-consumed).  Transient tick faults are absorbed by bounded
+        retry-with-backoff; exhausting the budget schedules a
+        snapshot-and-restart and skips this dispatch entirely."""
+        if self._faults is None:
+            return True
+        self._faults.maybe_stall()
+        attempts = 0
+        while True:
+            try:
+                self._faults.raise_if_tick()
+                if attempts:
+                    self._h_retries.observe(float(attempts))
+                return True
+            except TransientFault:
+                attempts += 1
+                if attempts > self._resil.tick_retries:
+                    self._h_retries.observe(float(attempts))
+                    self._want_restart = True
+                    return False
+                if self._resil.retry_backoff_s:
+                    time.sleep(self._resil.retry_backoff_s * attempts)
+
+    def _enforce_deadlines(self) -> List[RequestResult]:
+        """Expire requests past their absolute deadlines, queued first.
+        An in-flight request times out on its e2e deadline, or on its
+        TTFT deadline while it still has no first-token stamp; partial
+        tokens ship with the timeout result."""
+        out: List[RequestResult] = []
+        if not (self._deadline_abs or self._ttft_deadline_abs):
+            return out
+        now = time.perf_counter()
+
+        def expired(uid: int, in_flight: bool) -> bool:
+            dl = self._deadline_abs.get(uid)
+            if dl is not None and now >= dl:
+                return True
+            tdl = self._ttft_deadline_abs.get(uid)
+            return (tdl is not None and now >= tdl
+                    and not (in_flight and uid in self._t_first))
+
+        for req in self._sched.queued_requests():
+            if expired(req.uid, in_flight=False):
+                self._sched.drop_queued(req.uid)
+                out.append(self._queue_terminal(req, STATUS_TIMEOUT))
+        for slot in list(self._sched.occupied_slots()):
+            req = self._sched.slot_request(slot)
+            if req is not None and expired(req.uid, in_flight=True):
+                out.append(self._finalize(slot, STATUS_TIMEOUT))
+        return out
+
+    def _impossible(self, req: Request) -> bool:
+        """A request whose page demand exceeds the entire usable pool can
+        never be admitted no matter what gets preempted.  The engine
+        constructor guarantees one max-length request fits, so this only
+        trips on config drift — the live variant of the same livelock
+        (pages pinned outside slots) is caught by
+        :meth:`_break_admission_stall`."""
+        if not self.paged:
+            return False
+        sb = bucket_len(len(req.prompt), self._page, self.cfg.max_seq_len)
+        limit = min(len(req.prompt) + req.max_new_tokens,
+                    self.cfg.max_seq_len)
+        need = max(pages_for(sb, self._page), pages_for(limit, self._page))
+        return need > self.pages.n_pages - 1
+
+    def _fits_alone(self, req: Request) -> bool:
+        """Can the request run to completion with the whole free list to
+        itself?  (The strongest guarantee reclaim can ever deliver.)"""
+        sb = bucket_len(len(req.prompt), self._page, self.cfg.max_seq_len)
+        limit = min(len(req.prompt) + req.max_new_tokens,
+                    self.cfg.max_seq_len)
+        need = max(pages_for(sb, self._page), pages_for(limit, self._page))
+        return need <= self.pages.free_pages
+
+    def _break_admission_stall(self) -> List[RequestResult]:
+        """Admission-livelock breaker (the preempt-newest loop's blind
+        spot): the queue has work, every slot is free, yet the head can't
+        complete even with all reclaimable pages — pages are pinned
+        outside the slot table (retained prefixes, external retains).
+        Idle prefixes are dropped first; a head that STILL can't fit
+        alone can never run and fails typed instead of spinning through
+        admit → self-preempt forever."""
+        out: List[RequestResult] = []
+        if not self.paged:
+            return out
+        while self._sched.queued and not self._sched.occupied_slots():
+            head = self._sched.queued_requests()[0]
+            if self._fits_alone(head):
+                break
+            if self._drop_one_idle_prefix():
+                continue
+            self._sched.drop_queued(head.uid)
+            out.append(self._queue_terminal(head, STATUS_FAILED))
+        return out
+
+    # -- graceful degradation ------------------------------------------------
+
+    def _degrade_tick(self) -> None:
+        """One hysteresis-controller observation per engine step.
+        Pressure is the worst of queue depth (vs. the configured limit or
+        4× the slot table), page-pool occupancy, and a fresh watchdog
+        stall (saturates the signal).  Level changes re-apply the ladder
+        immediately; level 3+ additionally keeps idle prefixes drained."""
+        qcap = self._resil.queue_limit or 4 * self.cfg.max_slots
+        pressure = min(self._sched.queued / qcap, 1.0)
+        if self.paged:
+            usable = max(self.pages.n_pages - 1, 1)
+            pressure = max(pressure, self.pages.pages_in_use / usable)
+        stalls = self.n_stalls
+        if stalls > self._stalls_seen:
+            self._stalls_seen = stalls
+            pressure = 1.0
+        lvl = self._degrade_ctl.observe(pressure)
+        if lvl != self._degrade_level:
+            self._apply_degradation(lvl)
+        if self._degrade_level >= DEGRADE_DROP_PREFIXES:
+            while self._drop_one_idle_prefix():
+                pass
+
+    def _apply_degradation(self, level: int) -> None:
+        """Make one ladder level effective (both directions — recovery
+        restores full service).  The base engine owns the chunk-shrink
+        rung; the speculative subclass adds the γ rungs."""
+        prev, self._degrade_level = self._degrade_level, level
+        if self._chunking:
+            self._chunk_eff = (
+                self.cfg.prefill_chunk if level < DEGRADE_SHRINK_CHUNK
+                else max(self._page,
+                         (self.cfg.prefill_chunk // 2 // self._page)
+                         * self._page))
+        self.events.emit("degrade", -1, level=level, prev=prev)
+
+    def _drop_one_idle_prefix(self) -> bool:
+        """Free one cached prefix with no live sharers; False if none."""
+        if not self.paged:
+            return False
+        for pid in list(self._prefix):
+            entry = self._prefix[pid]
+            if entry.active == 0:
+                self.pages.release_ids(entry.pages)
+                del self._prefix[pid]
+                return True
+        return False
+
+    # -- snapshot / restore / fault installation -----------------------------
+
+    def install_faults(self, plan) -> None:
+        """Attach a :class:`repro.testing.faults.FaultPlan`; the engine
+        consults it pre-dispatch (``tick``/``stall``), at page growth
+        (``alloc``) and at admission (``adapter``)."""
+        self._faults = plan
+
+    def snapshot(self) -> dict:
+        """JSON-compatible engine state: in-flight + queued requests (in
+        restart order), wall-clock stamps and absolute deadlines, the uid
+        watermark, the host tick mirror, and the allocator dump."""
+        return engine_snapshot(self)
+
+    def restore(self, snap: dict) -> None:
+        """Load a snapshot into this (idle) engine: every captured
+        request re-queues under its original uid and stamps and re-runs
+        from its prompt — deterministic per-(seed, index) sampling makes
+        the re-run token-identical to the uninterrupted one."""
+        engine_restore(self, snap)
+
+    def _self_restart(self) -> None:
+        """Escalation endpoint (tick-retry exhaustion, stall ladder):
+        snapshot, wipe runtime state, restore into ourselves."""
+        self._want_restart = False
+        snap = engine_snapshot(self)
+        self._reset_runtime_state()
+        engine_restore(self, snap)
+
+    def _reset_runtime_state(self) -> None:
+        """Drop every in-flight structure back to the post-construction
+        state.  Counters, the event log, prefix token declarations and
+        the uid watermark survive; device caches are NOT cleared — the
+        zeroed tick state makes their stale contents unreachable, and
+        restored requests re-prefill exactly like preemption re-runs."""
+        self._sched.reset()
+        S = self.cfg.max_slots
+        if self.paged:
+            peak = self.pages.peak_in_use
+            self.pages = PageAllocator(self.pages.n_pages, self._page,
+                                       self._n_tbl, S)
+            self.pages.peak_in_use = peak
+            self._slot_pos = [0] * S
+            self._admit_seq = [-1] * S
+            self._prefill_ctx.clear()
+            self._prefix.clear()
+            self._prefix_pending.clear()
+            self._slot_prefix.clear()
+        self._n_hot = 0
+        self._terminal_info.clear()
+        st = self._init_tick_state(S, self.cfg)
+        if self.mesh is not None:
+            st = jax.device_put(st, st.shardings(self.mesh))
+        self._st = st
+
+    def _resubmit(self, rd: dict, stamps: dict) -> None:
+        """Re-queue one serialized request under its ORIGINAL uid and
+        wall-clock stamps (deadlines stay absolute, so a request that
+        slept through a restart still times out honestly).  An adapter
+        that no longer resolves fails the request typed instead of
+        poisoning the whole restore."""
+        prompt = np.asarray(rd["prompt"], np.int32)
+        req = Request(uid=int(rd["uid"]), prompt=prompt,
+                      max_new_tokens=int(rd["max_new_tokens"]),
+                      adapter=rd.get("adapter"),
+                      temperature=float(rd.get("temperature", 0.0)),
+                      seed=int(rd.get("seed", 0)),
+                      speculative=bool(rd.get("speculative", True)),
+                      prefix_id=rd.get("prefix_id"),
+                      prefix_len=int(rd.get("prefix_len", 0)))
+        for key, store in (("t_submit", self._t_submit),
+                           ("t_first", self._t_first),
+                           ("deadline", self._deadline_abs),
+                           ("ttft_deadline", self._ttft_deadline_abs)):
+            if stamps.get(key) is not None:
+                store[req.uid] = float(stamps[key])
+        if req.temperature > 0.0:
+            self._n_hot += 1       # _result_for decrements on any terminal
+        if req.adapter is not None:
+            try:
+                if self.registry is None:
+                    raise ValueError("engine has no adapter registry")
+                req.adapter_id = self.registry.resolve(req.adapter)
+            except Exception:
+                self._pending_results.append(
+                    self._queue_terminal(req, STATUS_FAILED))
+                return
+        if (req.prefix_id is not None and self.paged and self._sharing
+                and req.prefix_len):
+            self._prefix_tokens.setdefault(req.prefix_id,
+                                           prompt[:req.prefix_len].copy())
+        self._sched.submit(req)
+
+    def _note_restore(self, n: int) -> None:
+        self._c_restores.inc()
+        self.events.emit("restore", -1, n_requests=n)
 
     def run(self) -> Dict[int, RequestResult]:
         """Drain the queue completely; returns {uid: result}."""
@@ -844,13 +1308,16 @@ class ContinuousServeEngine:
         return out
 
     def stream(self) -> Iterator[RequestResult]:
-        """Yield results as requests complete (streaming consumption)."""
-        while self._sched.has_work:
+        """Yield results as requests complete (streaming consumption).
+        Out-of-band terminals (shed/failed at submit time) drain through
+        the same stream."""
+        while self._pending_results or self._sched.has_work:
             yield from self.step()
 
     @property
     def pending(self) -> int:
-        return self._sched.queued + len(self._sched.occupied_slots())
+        return (self._sched.queued + len(self._sched.occupied_slots())
+                + len(self._pending_results))
 
     # -- internals ----------------------------------------------------------
 
@@ -994,8 +1461,8 @@ class ContinuousServeEngine:
         pos0 = self._sched.slot_prefill_pos(slot)
         cap_at = ctx["capture_at"]
         if self._chunking:
-            chunk_len = self.cfg.prefill_chunk
-        else:
+            chunk_len = self._chunk_eff    # == cfg.prefill_chunk unless
+        else:                              # the degradation ladder shrank it
             # prefix sharing without chunking: one bucket-sized span per
             # call (compiled O(log) times, like monolithic prefill)
             span_end = cap_at if (cap_at is not None and pos0 < cap_at) \
@@ -1048,6 +1515,8 @@ class ContinuousServeEngine:
         need = pages_for(end, self._page)
         while True:
             try:
+                if self._faults is not None:
+                    self._faults.check_alloc()
                 self.pages.ensure(slot, need)
                 return True
             except PoolExhausted:
@@ -1172,12 +1641,8 @@ class ContinuousServeEngine:
         (no live sharers — all its pages come straight back), else preempt
         the NEWEST occupied slot.  Strictly decreases entries + occupied
         slots, so exhaustion handling always terminates."""
-        for pid in list(self._prefix):
-            entry = self._prefix[pid]
-            if entry.active == 0:
-                self.pages.release_ids(entry.pages)
-                del self._prefix[pid]
-                return
+        if self._drop_one_idle_prefix():
+            return
         victims = self._sched.occupied_slots()
         assert victims, "pool exhausted with no occupied slots"
         self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
@@ -1197,7 +1662,7 @@ class ContinuousServeEngine:
             if pid is not None and pid in self._prefix:
                 start = self._prefix[pid].n_tokens
             total = len(req.prompt)
-            first_end = min(start + (self.cfg.prefill_chunk
+            first_end = min(start + (self._chunk_eff
                                      if self._chunking else total), total)
             if req.prefix_len and start == 0:
                 first_end = min(first_end, req.prefix_len)
@@ -1271,6 +1736,8 @@ class ContinuousServeEngine:
                              self._page)
             while True:
                 try:
+                    if self._faults is not None:
+                        self._faults.check_alloc()
                     new = self.pages.ensure(slot, need)
                     break
                 except PoolExhausted:
@@ -1333,34 +1800,28 @@ class ContinuousServeEngine:
             request_key(req.seed, 0),
             logits / req.temperature).astype(jnp.int32)
 
-    def _finalize(self, slot: int) -> RequestResult:
+    def _finalize(self, slot: int, status: str = STATUS_OK) -> RequestResult:
+        """Terminal transition for an occupied slot.  ``status`` defaults
+        to a clean completion; deadline expiry and cancellation finalize
+        the same way (partial tokens are returned) but carry their own
+        status + terminal event.  A still-prefilling slot has generated
+        nothing (``slot_generated == 0``) and returns an empty row."""
         req = self._sched.slot_request(slot)
         n = self._sched.slot_generated(slot)
         # the single device→host transfer for this request
-        row = np.asarray(self._st.out_buf[slot, :n])
+        row = (np.asarray(self._st.out_buf[slot, :n]) if n
+               else np.zeros(0, np.int32))
         self._st = self._st.replace(
             active=self._st.active.at[slot].set(False))
         if self.paged:
             self._release_slot_pages(slot)
-        req_evicted = self._sched.evict(slot)
-        if req_evicted.temperature > 0.0:
-            self._n_hot -= 1
-        self._c_decode_tokens.inc(n - 1)
-        self._c_completed.inc()
-        name = (self.registry.name_of(req.adapter_id)
-                if self.registry is not None else None)
         t_end = time.perf_counter()
-        t_sub = self._t_submit.pop(req.uid, t_end)
-        t_first = self._t_first.pop(req.uid, t_end)
-        ttft = max(t_first - t_sub, 0.0)
-        latency = max(t_end - t_sub, 0.0)
-        self._h_ttft.observe(ttft)
-        self._h_e2e.observe(latency)
-        self.events.emit("complete", req.uid, t=t_end, slot=slot,
-                         n_generated=n)
-        return RequestResult(uid=req.uid, tokens=row, adapter=name,
-                             prompt_len=len(req.prompt), n_generated=n,
-                             ttft_s=ttft, latency_s=latency)
+        # stage the taxonomy for the scheduler's evict hook — the one
+        # choke point every terminal transition reports through
+        self._terminal_info[req.uid] = (status, n, t_end)
+        self._sched.evict(slot)
+        self._c_decode_tokens.inc(max(n - 1, 0))
+        return self._result_for(req, n, row, status, t_end)
 
 
 def _sample(logits, temperature, top_p, rng):

@@ -117,6 +117,36 @@ class PageAllocator:
     def refcount(self, page: int) -> int:
         return self._ref[page]
 
+    # -- snapshot (resilience) -----------------------------------------------
+
+    def state(self) -> dict:
+        """JSON-compatible dump of the allocator: geometry + free list +
+        refcounts + per-slot page lists.  Engine snapshots carry it so a
+        restore can validate pool geometry and audits can reconstruct
+        exactly which pages were live at the kill point (the restore path
+        itself rebuilds a clean pool — re-queued requests re-prefill)."""
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "max_pages_per_slot": self.max_pages_per_slot,
+            "free": list(self._free),
+            "ref": list(self._ref),
+            "slot_pages": [list(p) for p in self._slot_pages],
+            "peak_in_use": self.peak_in_use,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`state` dump into an allocator with identical
+        geometry (exact-resume paths and allocator round-trip tests)."""
+        assert state["n_pages"] == self.n_pages
+        assert state["page_size"] == self.page_size
+        assert state["max_pages_per_slot"] == self.max_pages_per_slot
+        assert len(state["slot_pages"]) == len(self._slot_pages)
+        self._free = list(state["free"])
+        self._ref = list(state["ref"])
+        self._slot_pages = [list(p) for p in state["slot_pages"]]
+        self.peak_in_use = state["peak_in_use"]
+
     # -- allocation ----------------------------------------------------------
 
     def can_alloc(self, n: int) -> bool:

@@ -1,0 +1,213 @@
+"""Serving resilience: degradation ladder + engine snapshot/restore.
+
+Policy knobs live in :class:`repro.configs.ResilienceConfig` (a frozen
+sub-dataclass of ``ServeConfig``, mirroring ``QuantPolicy``); this module
+holds the host-side machinery the engines thread it through:
+
+* the request status taxonomy (``STATUSES``) — every submitted request
+  terminates with exactly one of these in ``RequestResult.status``;
+* :class:`DegradationController` — a debounced hysteresis controller
+  mapping a scalar pressure signal (max of normalized queue depth,
+  page-pool occupancy and recent watchdog stalls) onto the ladder
+  level 0 (healthy) → 5 (shed load).  The controller is pure host
+  state; the *actions* per level live in the engines
+  (``_apply_degradation``);
+* :func:`engine_snapshot` / :func:`engine_restore` — serialize the
+  scheduler (queue + in-flight requests in admission order), the host
+  allocator geometry, and the host mirror of ``TickState`` progress to
+  a JSON-compatible dict.  Restore re-queues every in-flight request
+  into a fresh (or reset) engine; because sampling depends only on
+  ``(request seed, generation index)`` — the same invariant preemption
+  relies on — the restored run completes every request token-identical
+  to an uninterrupted run.  Submit/first-token stamps and absolute
+  deadlines are preserved so restored results report true TTFT.
+
+Everything here is strictly host-side: with the default (disabled)
+policy the engines are bit-identical to a build without this module,
+and ``TickState`` gains no leaves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Terminal status taxonomy for RequestResult.status.
+STATUS_OK = "ok"                # completed normally
+STATUS_TIMEOUT = "timeout"      # TTFT or end-to-end deadline expired
+STATUS_SHED = "shed"            # dropped by admission control / load shedding
+STATUS_CANCELLED = "cancelled"  # engine.cancel(uid)
+STATUS_FAILED = "failed"        # impossible admission or injected failure
+STATUSES = (STATUS_OK, STATUS_TIMEOUT, STATUS_SHED, STATUS_CANCELLED,
+            STATUS_FAILED)
+
+# status → lifecycle event kind emitted at the terminal choke point
+# (obs.events.EVENT_KINDS and snapshot.schema.json carry the same names).
+TERMINAL_EVENT = {
+    STATUS_OK: "complete",
+    STATUS_TIMEOUT: "timeout",
+    STATUS_SHED: "shed",
+    STATUS_CANCELLED: "cancel",
+    STATUS_FAILED: "failed",
+}
+
+# Degradation ladder levels (actions applied cumulatively).
+DEGRADE_HEALTHY = 0
+DEGRADE_SHRINK_GAMMA = 1     # halve the speculative draft length
+DEGRADE_NO_SPEC = 2          # admit new requests non-speculatively
+DEGRADE_DROP_PREFIXES = 3    # proactively evict idle shared-prefix entries
+DEGRADE_SHRINK_CHUNK = 4     # halve the prefill chunk (page-aligned)
+DEGRADE_SHED = 5             # shed queued load on submit
+DEGRADE_MAX = DEGRADE_SHED
+
+
+class DegradationController:
+    """Hysteresis ladder over a scalar pressure signal in [0, 1].
+
+    ``observe(pressure)`` is called once per engine step.  The level
+    steps UP one rung after ``up_ticks`` consecutive observations above
+    ``high`` and DOWN one rung after ``down_ticks`` consecutive
+    observations below ``low`` — the dead band between the thresholds
+    plus the debounce keeps the ladder from flapping on noisy signals.
+    ``force_up()`` (watchdog escalation) bumps the level immediately.
+    """
+
+    def __init__(self, *, high: float = 0.85, low: float = 0.50,
+                 up_ticks: int = 2, down_ticks: int = 8,
+                 max_level: int = DEGRADE_MAX):
+        assert 0.0 < low <= high
+        self.high, self.low = high, low
+        self.up_ticks, self.down_ticks = max(1, up_ticks), max(1, down_ticks)
+        self.max_level = max_level
+        self.level = DEGRADE_HEALTHY
+        self.peak_level = DEGRADE_HEALTHY
+        self._above = 0
+        self._below = 0
+
+    def observe(self, pressure: float) -> int:
+        if pressure > self.high:
+            self._above += 1
+            self._below = 0
+            if self._above >= self.up_ticks and self.level < self.max_level:
+                self.level += 1
+                self._above = 0
+        elif pressure < self.low:
+            self._below += 1
+            self._above = 0
+            if self._below >= self.down_ticks and self.level > 0:
+                self.level -= 1
+                self._below = 0
+        else:  # dead band — hold, reset both debounce counters
+            self._above = self._below = 0
+        self.peak_level = max(self.peak_level, self.level)
+        return self.level
+
+    def force_up(self, n: int = 1) -> int:
+        """Immediate escalation (watchdog stall ladder)."""
+        self.level = min(self.max_level, self.level + n)
+        self.peak_level = max(self.peak_level, self.level)
+        self._above = self._below = 0
+        return self.level
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshot / restore
+# ---------------------------------------------------------------------------
+
+SNAPSHOT_VERSION = 1
+
+
+def serialize_request(req) -> dict:
+    """Request → JSON-compatible dict (prompt devolves to a list of ints)."""
+    return {
+        "uid": int(req.uid),
+        "prompt": [int(t) for t in np.asarray(req.prompt).tolist()],
+        "max_new_tokens": int(req.max_new_tokens),
+        "adapter": req.adapter,
+        "adapter_id": int(req.adapter_id),
+        "temperature": float(req.temperature),
+        "seed": int(req.seed),
+        "speculative": bool(req.speculative),
+        "prefix_id": req.prefix_id,
+        "prefix_len": int(req.prefix_len),
+    }
+
+
+def engine_snapshot(eng) -> dict:
+    """Serialize everything a restarted engine needs to finish the work.
+
+    Captured: the scheduler's queue and in-flight slots (requests in
+    deterministic re-queue order — in-flight by admission order first,
+    then the queue FCFS), the next uid watermark, per-request
+    submit/first-token stamps and absolute deadlines, the host
+    allocator's geometry + live state (diagnostic: restore rebuilds a
+    clean pool, since re-queued requests re-prefill), and the host
+    mirror of TickState progress (slot positions).  Completed results
+    already returned to the caller are not the snapshot's problem.
+    """
+    sched = eng._sched
+    # in-flight first, ordered by admission sequence (paged engines track
+    # _admit_seq; dense engines fall back to slot order — their in-flight
+    # requests are independent, so any stable order preserves tokens)
+    occupied = sched.occupied_slots()
+    seq = getattr(eng, "_admit_seq", None)   # list, paged engines only
+    if seq is not None:
+        occupied = sorted(occupied, key=lambda s: seq[s])
+    inflight = [sched.slot_request(s) for s in occupied]
+    queued = list(sched.queued_requests())
+    reqs = [r for r in inflight + queued if r is not None]
+    stamps = {}
+    for r in reqs:
+        u = r.uid
+        stamps[str(u)] = {
+            "t_submit": eng._t_submit.get(u),
+            "t_first": eng._t_first.get(u),
+            "deadline": eng._deadline_abs.get(u),
+            "ttft_deadline": eng._ttft_deadline_abs.get(u),
+        }
+    snap = {
+        "version": SNAPSHOT_VERSION,
+        "engine": getattr(eng, "_obs_engine", "continuous"),
+        "max_slots": sched.max_slots,
+        "uid_next": sched.uid_watermark,
+        "requests": [serialize_request(r) for r in reqs],
+        "stamps": stamps,
+        "tick_mirror": {  # host mirror of TickState progress (diagnostic)
+            "slot_pos": {str(s): int(p)
+                         for s, p in enumerate(getattr(eng, "_slot_pos",
+                                                       ()))},
+            "generated": {str(s): int(sched.slot_generated(s))
+                          for s in sched.occupied_slots()},
+        },
+    }
+    pages = getattr(eng, "pages", None)
+    if pages is not None:
+        snap["allocator"] = pages.state()
+    return snap
+
+
+def engine_restore(eng, snap: dict) -> int:
+    """Re-queue a snapshot's requests into ``eng``; returns the count.
+
+    ``eng`` must be freshly constructed (or reset via
+    ``eng._reset_runtime_state()``) with the same ``max_slots``; the
+    requests re-run from their prompts, which by the determinism
+    invariant reproduces their token streams exactly.  Adapter ids are
+    re-resolved by name against the engine's registry (the bank may
+    have been rebuilt in a new process).
+    """
+    assert snap.get("version") == SNAPSHOT_VERSION, snap.get("version")
+    sched = eng._sched
+    assert snap["max_slots"] == sched.max_slots, \
+        (snap["max_slots"], sched.max_slots)
+    assert not sched.has_work, "restore target must be idle"
+    pool = snap.get("allocator")
+    if pool is not None and getattr(eng, "pages", None) is not None:
+        assert pool["n_pages"] == eng.pages.n_pages, \
+            (pool["n_pages"], eng.pages.n_pages)
+    sched.set_uid_floor(snap["uid_next"])
+    n = 0
+    for rd in snap["requests"]:
+        stamps = snap["stamps"].get(str(rd["uid"]), {})
+        eng._resubmit(rd, stamps)
+        n += 1
+    eng._note_restore(n)
+    return n

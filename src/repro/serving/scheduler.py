@@ -27,7 +27,6 @@ device→host read; generated tokens stay on device until eviction.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from collections import deque
 from typing import Callable, Deque, List, Optional, Tuple
 
@@ -58,6 +57,9 @@ class RequestResult:
     ttft_s: float = 0.0                # submit → first-token DISPATCH (host
                                        # wall time; the engine never syncs)
     latency_s: float = 0.0             # submit → eviction (host wall time)
+    status: str = "ok"                 # terminal taxonomy — one of
+                                       # resilience.STATUSES: ok | timeout |
+                                       # shed | cancelled | failed
 
 
 @dataclasses.dataclass
@@ -81,13 +83,16 @@ class Scheduler:
         self.max_slots = max_slots
         self._queue: Deque[Request] = deque()
         self._slots: List[_Slot] = [_Slot() for _ in range(max_slots)]
-        self._uids = itertools.count()
+        self._next_uid = 0
         # observation hook, fired AFTER each slot-table transition:
-        # ("admit", slot, request) and ("preempt", slot, request).  Keeping
-        # it here — not at the engines' call sites — guarantees every
-        # admission path (monolithic, chunked, speculative) reports
-        # identically.  Plain attribute so the engine can attach it after
-        # construction; policy never reads it.
+        # ("admit", slot, request), ("preempt", slot, request) and
+        # ("evict", slot, request) — eviction covers EVERY terminal slot
+        # transition (completion, cancel, deadline, failure), so hook
+        # consumers see the full request lifecycle.  Keeping it here — not
+        # at the engines' call sites — guarantees every admission/eviction
+        # path (monolithic, chunked, speculative) reports identically.
+        # Plain attribute so the engine can attach it after construction;
+        # policy never reads it.
         self.on_event = on_event
 
     # -- intake -------------------------------------------------------------
@@ -97,7 +102,39 @@ class Scheduler:
         return request.uid
 
     def new_uid(self) -> int:
-        return next(self._uids)
+        uid = self._next_uid
+        self._next_uid += 1
+        return uid
+
+    @property
+    def uid_watermark(self) -> int:
+        """Next uid to be issued (snapshot/restore carries it across)."""
+        return self._next_uid
+
+    def set_uid_floor(self, n: int) -> None:
+        """Never issue a uid below ``n`` (restore into a fresh scheduler)."""
+        self._next_uid = max(self._next_uid, n)
+
+    # -- queue surgery (admission control / cancel / deadlines) -------------
+
+    def queued_requests(self) -> List[Request]:
+        """FCFS view of the queue (head first).  Read-only by convention."""
+        return list(self._queue)
+
+    def drop_queued(self, uid: int) -> Optional[Request]:
+        """Remove one queued request by uid (cancel / deadline-expiry /
+        impossible-admission paths).  Returns it, or None if not queued."""
+        for req in self._queue:
+            if req.uid == uid:
+                self._queue.remove(req)
+                return req
+        return None
+
+    def shed_oldest(self) -> Optional[Request]:
+        """Pop the OLDEST queued request (the head — under overload it is
+        the most deadline-doomed); admission control's "shed-oldest"
+        policy.  Returns None when the queue is empty."""
+        return self._queue.popleft() if self._queue else None
 
     # -- admission ----------------------------------------------------------
 
@@ -228,6 +265,10 @@ class Scheduler:
         return s.steps_left <= 0
 
     def evict(self, slot: int) -> Request:
+        """Release a slot at a TERMINAL transition (completion, cancel,
+        deadline expiry, failure).  Fires ``on_event("evict", ...)`` — the
+        one choke point every terminal slot transition passes through, so
+        the event log can never undercount terminal states."""
         s = self._slots[slot]
         assert s.request is not None, f"evicting free slot {slot}"
         req = s.request
@@ -236,7 +277,21 @@ class Scheduler:
         s.generated = 0
         s.prefilling = False
         s.prefill_pos = 0
+        if self.on_event is not None:
+            self.on_event("evict", slot, req)
         return req
+
+    def reset(self) -> None:
+        """Silently drop the queue and every slot (no hooks fire) — the
+        snapshot-and-restart path clears state it has already serialized.
+        The uid watermark survives so restored uids never collide."""
+        self._queue.clear()
+        for s in self._slots:
+            s.request = None
+            s.steps_left = 0
+            s.generated = 0
+            s.prefilling = False
+            s.prefill_pos = 0
 
     # -- introspection ------------------------------------------------------
 

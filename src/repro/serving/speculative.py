@@ -54,6 +54,7 @@ from repro.runtime.steps import (attn_window_map, make_copy_page,
                                  make_verify_step, request_key)
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.draft import DraftModel
+from repro.serving.resilience import DEGRADE_SHRINK_GAMMA
 from repro.serving.engine import (ContinuousServeEngine, _counter_property,
                                   _null)
 from repro.serving.pages import pages_for
@@ -659,7 +660,9 @@ class SpeculativeServeEngine(ContinuousServeEngine):
             draft_lora_scale = lora_scale
         self.draft = draft
         self.spec_cfg = spec
-        self.gamma = spec.gamma
+        self.gamma = spec.gamma          # LIVE draft length (γ)
+        self._gamma_target = spec.gamma  # autotune target, ignores the ladder
+        self._gamma_cap = None           # degradation cap (level 1+)
         # a round touches γ consecutive ring slots per layer; γ larger than
         # the smallest windowed ring would alias slots ((pos+j) % window
         # repeats) and make the commit/rollback scatters silently corrupt it
@@ -952,29 +955,30 @@ class SpeculativeServeEngine(ContinuousServeEngine):
     def step(self) -> List[RequestResult]:
         """Admit whatever fits, run a batch of draft→verify→commit rounds,
         return newly completed requests.  Each round advances every active
-        slot by 1..γ tokens (accepted drafts + correction)."""
+        slot by 1..γ tokens (accepted drafts + correction).  The
+        resilience preamble mirrors the base engine's exactly."""
+        done: List[RequestResult] = []
+        if self._pending_results:
+            done.extend(self._pending_results)
+            self._pending_results.clear()
+        if self._want_restart:
+            self._self_restart()
         ctx = (sharding.use_mesh(self.mesh, head_shard=True)
                if self.mesh is not None else _null())
-        done: List[RequestResult] = []
         progressive = self.paged and (self._chunking or self._sharing)
         with ctx:
+            if self._resil.enabled:
+                done.extend(self._enforce_deadlines())
+                done.extend(self._break_admission_stall())
+            if self._degrade_ctl is not None:
+                self._degrade_tick()
             if self.paged:
                 # grow existing slots one round's worth before admitting, so
                 # a fresh admission isn't the first preemption victim of its
                 # own step (wasting the fused target+draft prefill)
                 self._ensure_growth(lookahead=self.gamma)
             with self.tracer.span("admit"):
-                while True:
-                    adm = self._sched.next_admission(
-                        gate=self._admission_gate if self.paged else None,
-                        prefill=self._chunked_path if progressive else None)
-                    if adm is None:
-                        break
-                    slot, req = adm
-                    if progressive and self._chunked_path(req):
-                        self._admit_chunked(slot, req)
-                    else:
-                        self._admit(slot, req)
+                self._admit_pass(done, progressive)
             if progressive:
                 # one bounded prefill chunk per streaming slot between
                 # speculative rounds — rounds never stall behind a prompt
@@ -1019,6 +1023,11 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 infos = []
                 if self._watchdog is not None:
                     self._watchdog.start()
+                if not self._pre_dispatch_guard():
+                    # retry budget exhausted — the whole k-round batch is
+                    # skipped (no accounting either); a restart runs at
+                    # the top of the next step
+                    return done
                 with self.tracer.span("round"):
                     for _ in range(k):
                         self.cache, self.draft_cache, self._st, info = rnd(
@@ -1047,9 +1056,29 @@ class SpeculativeServeEngine(ContinuousServeEngine):
                 self._c_accepted.inc(batch_accepted)
                 if self._gamma_ctl is not None:
                     self._gamma_ctl.update(batch_accepted, batch_proposed)
-                    new_gamma = self._gamma_ctl.propose(self.gamma)
-                    if new_gamma != self.gamma:
-                        self.gamma = new_gamma
-                        self._round_greedy, self._round_sample = (
-                            self._get_rounds(new_gamma))
+                    # the autotuner steers the UNCAPPED target; the ladder
+                    # cap is applied on top, so recovery from degradation
+                    # resumes exactly where the tuner left off
+                    self._gamma_target = self._gamma_ctl.propose(
+                        self._gamma_target)
+                    self._refresh_gamma()
         return done
+
+    # -- graceful degradation (γ rungs) --------------------------------------
+
+    def _apply_degradation(self, level: int) -> None:
+        """Ladder level 1+ halves the draft length (floor 1); the live γ
+        is min(autotune target, cap) and both directions re-apply
+        immediately."""
+        super()._apply_degradation(level)
+        self._gamma_cap = (max(1, self.spec_cfg.gamma // 2)
+                           if level >= DEGRADE_SHRINK_GAMMA else None)
+        self._refresh_gamma()
+
+    def _refresh_gamma(self) -> None:
+        eff = self._gamma_target
+        if self._gamma_cap is not None:
+            eff = min(eff, self._gamma_cap)
+        if eff != self.gamma:
+            self.gamma = eff
+            self._round_greedy, self._round_sample = self._get_rounds(eff)

@@ -1,0 +1,11 @@
+"""Deterministic test harnesses for the serving stack.
+
+repro.testing.faults — seeded fault injection (FaultPlan) consulted by
+the serving engines at their existing host-side choke points.
+"""
+from repro.testing.faults import (  # noqa: F401
+    FAULT_SITES,
+    FaultPlan,
+    FaultSpec,
+    TransientFault,
+)

@@ -1,0 +1,156 @@
+"""Deterministic, seeded fault injection for the serving engines.
+
+A :class:`FaultPlan` bundles one :class:`FaultSpec` per injection site;
+the engines consult it (when installed via ``engine.install_faults``)
+at their existing host-side choke points:
+
+* ``tick``    — raise :class:`TransientFault` immediately BEFORE the
+  jitted decode tick / speculative round dispatch.  The engine's
+  bounded retry-with-backoff absorbs it; exhaustion escalates to
+  snapshot-and-restart.  Injection happens pre-dispatch, so donated
+  device buffers are never left half-consumed.
+* ``alloc``   — raise :class:`repro.serving.pages.PoolExhausted` at the
+  page-growth sites that already handle exhaustion, exercising the
+  reclaim/preempt machinery on demand.
+* ``stall``   — ``time.sleep(spec.sleep_s)`` inside the watchdog's tick
+  window, so the EWMA straggler detector (and its escalation ladder)
+  sees a genuine wall-clock stall.
+* ``adapter`` — fail a request at admission (adapter-load failure); the
+  engine terminates it with ``status="failed"``.
+
+Determinism: each site draws from its own ``random.Random`` stream
+seeded from ``(plan seed, site name)``, advanced once per consult.
+Because the engines consult sites in a deterministic order for a given
+workload, the same plan + workload always fires the same faults.  A
+spec can also name explicit consult indices (``at``), which is the
+sharpest tool for regression tests.  ``max_fires`` bounds any
+probabilistic site (an unbounded p=1.0 ``alloc`` site would starve the
+reclaim loop's progress guarantee).
+
+The plan is JSON-representable for the launcher's ``--fault-plan``::
+
+    {"seed": 7,
+     "tick":  {"p": 0.3, "max_fires": 4},
+     "alloc": {"at": [1, 3]},
+     "stall": {"p": 0.2, "sleep_s": 0.002, "max_fires": 3}}
+"""
+from __future__ import annotations
+
+import json
+import random
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+FAULT_SITES = ("tick", "alloc", "stall", "adapter")
+
+
+class TransientFault(RuntimeError):
+    """Injected transient failure of a tick/round dispatch."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """When one site fires.
+
+    p:         per-consult probability (seeded stream).
+    at:        explicit 1-based consult indices that always fire.
+    max_fires: cap on total fires for this site (0 → unlimited; applies
+               to the probabilistic part AND the explicit indices).
+    sleep_s:   stall duration (``stall`` site only).
+    """
+
+    p: float = 0.0
+    at: Tuple[int, ...] = ()
+    max_fires: int = 0
+    sleep_s: float = 0.0
+
+    def __post_init__(self):
+        assert 0.0 <= self.p <= 1.0, self.p
+        assert all(i >= 1 for i in self.at), self.at
+        assert self.max_fires >= 0 and self.sleep_s >= 0.0
+
+
+class FaultPlan:
+    """Seeded injectors, one stream per site, consult-counted."""
+
+    def __init__(self, seed: int = 0, **sites):
+        self.seed = seed
+        self.specs: Dict[str, FaultSpec] = {}
+        for name, spec in sites.items():
+            assert name in FAULT_SITES, name
+            if isinstance(spec, dict):
+                spec = FaultSpec(p=spec.get("p", 0.0),
+                                 at=tuple(spec.get("at", ())),
+                                 max_fires=spec.get("max_fires", 0),
+                                 sleep_s=spec.get("sleep_s", 0.0))
+            self.specs[name] = spec
+        self._rng = {name: random.Random((seed << 32)
+                                         ^ zlib.crc32(name.encode()))
+                     for name in self.specs}
+        self.consults = {name: 0 for name in FAULT_SITES}
+        self.fires = {name: 0 for name in FAULT_SITES}
+
+    @classmethod
+    def from_json(cls, src) -> "FaultPlan":
+        """Build from a JSON string, a parsed dict, or a file path."""
+        if isinstance(src, str):
+            src = src.strip()
+            if src.startswith("{"):
+                src = json.loads(src)
+            else:
+                with open(src) as f:
+                    src = json.load(f)
+        assert isinstance(src, dict), type(src)
+        src = dict(src)
+        seed = src.pop("seed", 0)
+        return cls(seed, **src)
+
+    # -- consultation -------------------------------------------------------
+    def fire(self, site: str) -> bool:
+        """Advance the site's consult counter; True if the fault fires.
+
+        The RNG stream advances on EVERY consult (fired or not, capped
+        or not) so adding ``max_fires`` never re-times later faults.
+        """
+        self.consults[site] += 1
+        spec = self.specs.get(site)
+        if spec is None:
+            return False
+        i = self.consults[site]
+        draw = self._rng[site].random() if spec.p else 1.0
+        hit = (i in spec.at) or (draw < spec.p)
+        if not hit:
+            return False
+        if spec.max_fires and self.fires[site] >= spec.max_fires:
+            return False
+        self.fires[site] += 1
+        return True
+
+    # -- site-shaped helpers the engines call -------------------------------
+    def raise_if_tick(self):
+        if self.fire("tick"):
+            raise TransientFault(
+                f"injected tick fault #{self.fires['tick']}")
+
+    def check_alloc(self):
+        if self.fire("alloc"):
+            # imported lazily: testing.faults must not drag serving in
+            # at module import time (serving imports are heavyweight)
+            from repro.serving.pages import PoolExhausted
+            raise PoolExhausted(
+                f"injected allocation failure #{self.fires['alloc']}")
+
+    def maybe_stall(self):
+        if self.fire("stall"):
+            time.sleep(self.specs["stall"].sleep_s)
+
+    def adapter_load_fails(self) -> bool:
+        return self.fire("adapter")
+
+    def report(self) -> dict:
+        """Consult/fire tallies (for logs and bench sections)."""
+        return {"seed": self.seed,
+                "consults": dict(self.consults),
+                "fires": dict(self.fires)}
