@@ -355,6 +355,26 @@ def validate_results(results):
         f"overload statuses {ov['statuses']} don't partition "
         f"{ov['submitted']} submitted requests")
     assert ov["shed"] > 0, "3x-burst overload run shed nothing"
+    # paged adapter bank: serving K adapters through bank_slots < K rows
+    # must actually exercise the cache (misses + evictions + streamed
+    # bytes) while staying lossless and token-identical to the dense bank
+    ac = results.get("adapter_cache")
+    assert isinstance(ac, dict), "adapter_cache section missing"
+    for key in ("bank_slots", "registered", "requests", "completed_ok",
+                "hits", "misses", "hit_rate", "evictions", "uploads",
+                "upload_bytes", "tok_s", "tok_s_dense",
+                "token_match_vs_dense"):
+        assert key in ac, f"adapter_cache missing {key}"
+    assert ac["registered"] > ac["bank_slots"] - 1, (
+        f"adapter-cache run isn't oversubscribed: {ac}")
+    assert ac["completed_ok"] == ac["requests"], (
+        f"adapter-cache run lost requests: {ac}")
+    assert ac["misses"] > 0 and ac["evictions"] > 0, (
+        f"bank_slots < K traffic never exercised the cache: {ac}")
+    assert ac["upload_bytes"] > 0 and ac["uploads"] > 0, ac
+    assert 0.0 <= ac["hit_rate"] <= 1.0, ac
+    assert ac["token_match_vs_dense"] == 1.0, (
+        f"residency streaming changed emitted tokens: {ac}")
     assert isinstance(results.get("speedups"), dict)
     # registry-derived telemetry: present for both continuous engines, with
     # counters consistent with the lifecycle-event log
@@ -566,6 +586,73 @@ def run_overload(plan, params, registry, work, slots, lora_scale, kv_pages,
         "tok_s_degraded": round(ok_tok / max(dt, 1e-9), 1),
         "degradation_level_max": eng._degrade_ctl.peak_level,
         "statuses": dict(statuses),
+    }
+
+
+# ---------------------------------------------------------------------------
+# paged adapter bank: bank_slots < K streaming vs the dense-equivalent bank
+# ---------------------------------------------------------------------------
+
+CACHE_BANK_SLOTS = 3        # base row + 2 adapter rows, shared by K adapters
+
+
+def make_cache_workload(n_requests, vocab, names, seed=3):
+    """Mixed traffic across MORE adapters than the device bank holds — the
+    fleet-scale regime the residency manager exists for."""
+    rs = np.random.default_rng(seed)
+    work = []
+    for _ in range(n_requests):
+        prompt = rs.integers(2, vocab, (int(rs.choice((6, 10, 14)),))
+                             ).astype(np.int32)
+        work.append((prompt, str(rs.choice(names)), int(rs.choice((6, 10)))))
+    return work
+
+
+def run_adapter_cache(plan, params, template, adapter_trees, work, slots,
+                      lora_scale):
+    """The paged-adapter-bank trajectory line: serve K adapters through a
+    ``bank_slots``-row device bank (base row + 2 adapter rows) so the
+    residency manager actually streams/evicts, next to a dense-equivalent
+    reference (every adapter resident) over the SAME workload.  Streaming
+    must be lossless AND token-identical — admission blocks, never
+    corrupts — so the section doubles as a correctness gate."""
+    K = len(adapter_trees)
+
+    def serve(bank_slots):
+        reg = AdapterRegistry(template, max_adapters=K + 1,
+                              bank_slots=bank_slots)
+        for name, tree in adapter_trees.items():
+            reg.add(name, tree)
+        eng = ContinuousServeEngine(
+            plan, params,
+            ServeConfig(max_seq_len=MAX_SEQ_LEN, max_slots=slots,
+                        max_adapters=K + 1, adapter_bank_slots=bank_slots,
+                        max_new_tokens=64, kv_cache_dtype="float32"),
+            reg, lora_scale=lora_scale)
+        t0 = time.perf_counter()
+        tok, res = _submit_and_drain(eng, work)
+        return reg, tok, time.perf_counter() - t0, res
+
+    _, dtok, ds, dres = serve(K + 1)                 # dense reference
+    reg, ctok, cs, cres = serve(CACHE_BANK_SLOTS)    # streaming run
+    res_mgr = reg.residency
+    identical = sum(1 for uid in dres
+                    if np.array_equal(dres[uid].tokens, cres[uid].tokens))
+    assert len(cres) == len(work), (len(cres), len(work))
+    return {
+        "bank_slots": CACHE_BANK_SLOTS,
+        "registered": K,
+        "requests": len(cres),
+        "completed_ok": sum(1 for r in cres.values() if r.status == "ok"),
+        "hits": res_mgr.n_hits,
+        "misses": res_mgr.n_misses,
+        "hit_rate": round(res_mgr.hit_rate, 4),
+        "evictions": res_mgr.n_evictions,
+        "uploads": res_mgr.n_uploads,
+        "upload_bytes": int(res_mgr.upload_bytes),
+        "tok_s": round(ctok / max(cs, 1e-9), 1),
+        "tok_s_dense": round(dtok / max(ds, 1e-9), 1),
+        "token_match_vs_dense": round(identical / max(len(dres), 1), 4),
     }
 
 
@@ -887,6 +974,25 @@ def main():
           f"{overload['tok_s_degraded']:.1f} tok/s degraded vs "
           f"{overload['tok_s_healthy']:.1f} healthy")
 
+    # ---- paged adapter bank: K adapters through a 3-row device bank ----
+    cache_trees = dict(adapters)
+    for name, seed in [("law", 33), ("med", 44)]:
+        _, full = mk_adapter(seed)
+        cache_trees[name] = full
+    cache_work = make_cache_workload(max(args.requests, 12), cfg.vocab_size,
+                                     sorted(cache_trees))
+    adapter_cache = run_adapter_cache(plan, params, cache_trees["math"],
+                                      cache_trees, cache_work, args.slots,
+                                      lora_cfg.scale)
+    print(f"[serve_bench] adapter bank: {adapter_cache['registered']} "
+          f"adapters via {CACHE_BANK_SLOTS} rows → hit rate "
+          f"{adapter_cache['hit_rate']:.2f}, "
+          f"{adapter_cache['evictions']} evictions, "
+          f"{adapter_cache['upload_bytes'] / 1e6:.2f} MB streamed; "
+          f"{adapter_cache['tok_s']:.1f} tok/s vs "
+          f"{adapter_cache['tok_s_dense']:.1f} dense (token match "
+          f"{adapter_cache['token_match_vs_dense']:.2f})")
+
     results = {
         "bench": "serving",
         "config": {
@@ -963,6 +1069,7 @@ def main():
             },
         },
         "overload": overload,
+        "adapter_cache": adapter_cache,
         "speedups": {"paged_vs_continuous": round(paged_tps / cont_tps, 3)},
         # registry-derived telemetry (same source as --metrics-json): the
         # schema guard cross-checks these counters against the event log

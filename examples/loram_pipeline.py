@@ -25,7 +25,8 @@ from repro.core.objectives import cross_entropy
 from repro.data import AlignmentCorpus, SFTDataset, batch_iterator
 from repro.models import forward, init_params, make_plan
 from repro.runtime.trainer import Trainer
-from repro.serving import ServeEngine
+from repro.serving import AdapterRegistry, ServeEngine, SpeculativeServeEngine
+from repro.serving.draft import draft_from_setup
 
 
 def main():
@@ -94,6 +95,73 @@ def main():
                        max_new_tokens=16, temperature=0.7)
     print(f"[pipeline] generated {res.tokens.shape} at "
           f"{res.tokens_per_s:.1f} tok/s")
+
+    # ---- serving: hot-registration into a RUNNING engine ----
+    # The paper's fleet deployment: ONE resident full base model, many
+    # cheaply-trained adapters streamed through a fixed device bank.  Build
+    # a speculative engine whose draft is the pruned model itself, register
+    # the first adapter (full-rank recovered tree on the target, its
+    # pruned-width twin on the draft), put traffic in flight — then run the
+    # WHOLE train-small pipeline again for a second task and hot-register
+    # the result into the live engine.  bank_slots=2 (base row + ONE
+    # adapter row) forces the two adapters to stream through a single row,
+    # and the acceptance bar is strict: zero lost requests, no restart, no
+    # recompile (the bank is a fixed-shape tick argument; registration is a
+    # functional row write between ticks).
+    bank_slots = 2
+    registry = AdapterRegistry(lora_full, max_adapters=3,
+                               bank_slots=bank_slots)
+    draft = draft_from_setup(setup, max_adapters=3, bank_slots=bank_slots)
+    live = SpeculativeServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=args.seq_len + 32, max_slots=4,
+                    max_adapters=3, adapter_bank_slots=bank_slots,
+                    max_new_tokens=16, draft_gamma=3,
+                    kv_cache_dtype="float32"),
+        registry, draft, lora_scale=lora_cfg.scale)
+    live.register_adapter("task", lora_full, draft_lora=state.lora)
+
+    rs = np.random.default_rng(1)
+    prompts = [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (12, 9, 14, 7, 11, 8)]
+    uids = [live.submit(p, max_new_tokens=12, adapter=a)
+            for p, a in zip(prompts[:3], ("task", None, "task"))]
+    results = []
+    for _ in range(2):          # slots are mid-decode when "fresh" lands
+        results += live.step()
+
+    # train task #2 at the pruned width (same offline artifacts, new data),
+    # recover, and register into the running engine — no restart
+    steps2 = max(6, args.steps // 5)
+    ds2 = SFTDataset(cfg.vocab_size, args.seq_len, seed=7)
+    tc2 = dataclasses.replace(tc, total_steps=steps2, warmup_steps=2)
+    trainer2 = Trainer(setup.small_plan, setup.small_params, setup.lora0,
+                       tc2, lora_cfg, n_micro=1)
+    state2 = trainer2.train(batch_iterator(ds2, batch_size=args.batch),
+                            steps=steps2, state=trainer2.init_state(),
+                            log_every=steps2)
+    lora2_full, _ = loram.finalize(setup, state2.lora, params)
+    t_reg = time.time()
+    live.register_adapter("fresh", lora2_full, draft_lora=state2.lora)
+    print(f"[pipeline] hot-registered 'fresh' into the live engine in "
+          f"{time.time()-t_reg:.2f}s "
+          f"({len(live._sched.active_slots())} slots in flight)")
+
+    uids += [live.submit(p, max_new_tokens=12, adapter=a)
+             for p, a in zip(prompts[3:], ("fresh", "task", "fresh"))]
+    results += list(live.run().values())
+
+    st = registry.residency.state()
+    print(f"[pipeline] adapter bank: {len(registry)} adapters through "
+          f"{bank_slots} rows — hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} "
+          f"uploaded={st['upload_bytes']/1e6:.2f}MB")
+    lost = [r for r in results if r.status != "ok"]
+    if len(results) != len(uids) or lost:
+        print(f"[pipeline] FAIL: {len(uids)} submitted, "
+              f"{len(results)} finished, lost={[(r.uid, r.status) for r in lost]}")
+        raise SystemExit(1)
+    assert all(len(r.tokens) > 0 for r in results)
     print("[pipeline] OK")
 
 

@@ -384,6 +384,16 @@ class ServeConfig:
     max_slots: int = 8               # fixed decode batch — jit never recompiles
     max_adapters: int = 4            # capacity of the stacked adapter bank
     max_new_tokens: int = 128        # per-slot on-device output buffer length
+    # paged adapter bank (repro.serving.adapters.AdapterResidency): the
+    # device bank holds adapter_bank_slots rows (row 0 reserved for the
+    # base route) streamed host↔HBM on demand, LRU-evicted at refcount 0;
+    # the host-side registry is unbounded.  0 → max_adapters rows, i.e.
+    # the dense-equivalent bank (every registered adapter stays resident)
+    adapter_bank_slots: int = 0
+    # zero-padded rank buckets for mixed-rank adapters sharing one bank:
+    # adapters pad up to the nearest of N even rank steps (1 → everything
+    # pads to the template rank).  Padding is exactly zero-delta.
+    adapter_rank_buckets: int = 1
     # speculative decoding (repro.serving.speculative):
     draft_gamma: int = 0             # draft tokens per round (0 → disabled)
     draft_stage: str = "trained"     # "trained" (pruned base + pruned LoRA)

@@ -353,9 +353,30 @@ def serve_cache_specs(cache, mesh: Mesh, *, paged: bool):
     return jax.tree_util.tree_map_with_path(visit, cache)
 
 
+def adapter_bank_specs(bank) -> object:
+    """PartitionSpec tree for a paged adapter bank: REPLICATED everywhere.
+
+    The bank is rank-r LoRA factors stacked over ``bank_slots`` rows —
+    tiny next to the base weights — and the decode tick gathers per-slot
+    rows out of it by ``TickState.adapter_ids``.  Replication keeps that
+    gather local on every shard (no collective on the hot path) and keeps
+    the host-side :class:`repro.serving.adapters.AdapterResidency`
+    allocator device-count-agnostic, exactly like the paged KV pool's
+    page-id namespace in :func:`serve_cache_specs`.
+
+    Engines don't ``device_put`` against these specs: bank rows are
+    rewritten between ticks by functional ``.at[row].set`` streaming
+    commits, and an uncommitted bank lets jit place each new version
+    against the committed operands (which resolves to this replicated
+    layout).  The specs exist for explicitness — assertions, HBM
+    attribution, and any future offload policy that wants to commit the
+    bank eagerly go through here."""
+    return jax.tree.map(lambda _: P(), bank)
+
+
 def replicated_shardings(tree, mesh: Mesh):
     """Everywhere-replicated placements for ``jax.device_put`` (adapter
-    banks, tick state, host-built rows)."""
+    banks per :func:`adapter_bank_specs`, tick state, host-built rows)."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 
 

@@ -12,6 +12,15 @@ adapter registry per-slot instead of a single global adapter).
 pruned adapters pre-recovery) and verified by the full model in one batched
 forward — output is identical in distribution to plain serving.
 
+``--adapter-bank-slots N`` caps the DEVICE adapter bank at N rows (row 0 is
+the reserved base route) — the paged adapter bank: registration is
+unbounded host-side, missing adapters stream host→HBM at admission
+(overlapped with decode ticks) and rows are LRU-evicted at refcount 0.
+``--adapter-rank-buckets B`` lets mixed-rank adapters share the bank
+through zero-padded (exactly zero-delta) rank buckets.  The snapshot's
+``adapters`` section reports hit rate, uploads/evictions and streamed
+bytes.
+
 ``--mesh data,model`` serves over an explicit device mesh: weights and KV
 head-sharded over the ``model`` axis, decode batch sharded over ``data``
 (see the sharding table in ``repro/serving/engine.py``).  The product must
@@ -73,6 +82,21 @@ def _export_metrics(args, eng, results=None) -> None:
                        "n_generated": r.n_generated,
                        "status": getattr(r, "status", "ok")}
             for uid, r in results.items()}}
+    registry = getattr(eng, "registry", None)
+    if registry is not None:
+        res = registry.residency
+        extra = dict(extra or {})
+        extra["adapters"] = {
+            "bank_slots": int(registry.bank_slots),
+            "rank_buckets": int(registry.rank_buckets),
+            "registered": len(registry),
+            "in_use": int(res.in_use),
+            "hits": int(res.n_hits), "misses": int(res.n_misses),
+            "hit_rate": float(res.hit_rate),
+            "uploads": int(res.n_uploads),
+            "evictions": int(res.n_evictions),
+            "upload_bytes": int(res.upload_bytes),
+        }
     quant = getattr(eng, "cfg", None) and eng.cfg.quant
     if quant and (quant.weights != "none" or quant.kv != "none"):
         from repro.quant import nf4
@@ -104,6 +128,21 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine (submit/step/stream)")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--adapter-bank-slots", type=int, default=0,
+                    metavar="N",
+                    help="device adapter-bank rows (row 0 is the reserved "
+                         "base route); adapters beyond the bank live host-"
+                         "side and stream in on demand, LRU-evicted at "
+                         "refcount 0 — the paged adapter bank (0 → every "
+                         "registered adapter stays resident, the dense-"
+                         "equivalent bank)")
+    ap.add_argument("--adapter-rank-buckets", type=int, default=1,
+                    metavar="B",
+                    help="zero-padded rank buckets for mixed-rank adapters "
+                         "sharing one bank: each adapter pads up to the "
+                         "nearest of B even rank steps (padding is exactly "
+                         "zero-delta; 1 → pad everything to the template "
+                         "rank)")
     ap.add_argument("--speculative", action="store_true",
                     help="pruned-draft speculative decoding (implies "
                          "--continuous)")
@@ -206,11 +245,15 @@ def main():
         2, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
 
     if args.continuous:
-        registry = AdapterRegistry(lora_full, max_adapters=2)
+        bank_slots = args.adapter_bank_slots or 2
+        registry = AdapterRegistry(lora_full, max_adapters=2,
+                                   bank_slots=bank_slots,
+                                   rank_buckets=args.adapter_rank_buckets)
         registry.add("task", lora_full)
         serve_cfg = ServeConfig(
             max_seq_len=args.max_seq_len, max_slots=args.slots,
-            max_adapters=registry.max_adapters,
+            max_adapters=2, adapter_bank_slots=bank_slots,
+            adapter_rank_buckets=args.adapter_rank_buckets,
             max_new_tokens=max(args.new_tokens, 1),
             draft_gamma=args.gamma if args.speculative else 0,
             gamma_autotune=args.gamma_autotune,
@@ -222,8 +265,11 @@ def main():
             quant=QuantPolicy(weights=args.quant_weights, kv=args.quant_kv),
             resilience=resil)
         if args.speculative:
-            # the SAME pruned artifacts the adapter was trained on now draft
-            draft = draft_from_setup(setup, max_adapters=2)
+            # the SAME pruned artifacts the adapter was trained on now draft;
+            # its pruned-width bank mirrors the target's residency geometry
+            draft = draft_from_setup(setup, max_adapters=2,
+                                     bank_slots=bank_slots,
+                                     rank_buckets=args.adapter_rank_buckets)
             draft.add("task", setup.lora0)
             eng = SpeculativeServeEngine(plan, params, serve_cfg, registry,
                                          draft)

@@ -78,7 +78,15 @@ def dense(
     Multi-adapter serving: when ``lora`` holds a stacked bank —
     ``a: (K, r, d_in)``, ``b: (K, d_out, r)`` — each leading-axis row of ``x``
     is routed to adapter ``adapter_ids[row]`` via a gather, so one batched
-    matmul serves K different LoRAM-recovered adapters at once.
+    matmul serves K different LoRAM-recovered adapters at once.  Under the
+    paged adapter bank ``adapter_ids`` carry device-bank ROWS (resolved at
+    admission by ``serving/adapters.AdapterResidency``); the gather is
+    unchanged, and padding is free by construction: a zeroed row (evicted /
+    never uploaded / the reserved base row 0) contributes ``B·A = 0``, and
+    a rank-bucketed adapter's zero tail rows of ``A`` / columns of ``B``
+    likewise cancel in the two einsums — zero-padding is exactly
+    zero-delta, so the bank serves mixed-rank adapters and base traffic
+    through one fixed-shape gather.
     """
     lead = x.shape[:-1]
     M = 1

@@ -95,6 +95,25 @@ snapshot time, so the hot loop never pays for them):
 ``serve_adapter_active_slots{adapter=...}`` (slots)
     Active slots per LoRA adapter name (``__base__`` for adapter-less),
     from ``serving/adapters.AdapterRegistry`` — a dynamic label family.
+``serve_adapter_bank_slots`` / ``serve_adapter_bank_in_use`` (rows)
+    Device adapter-bank capacity (incl. the reserved base row 0) vs. rows
+    currently assigned (resident + mid-upload), from
+    ``serving/adapters.AdapterResidency`` — the paged adapter bank's
+    occupancy, mirroring the page-pool gauges.
+``serve_adapter_registered`` (adapters)
+    Adapters in the UNBOUNDED host tier (the device bank may hold fewer).
+``serve_adapter_hits`` / ``serve_adapter_misses`` (checks)
+    Admission-gate residency checks answered by a resident row vs. checks
+    that staged a host→HBM upload (the request waits in queue while the
+    transfer overlaps decode ticks).
+``serve_adapter_hit_rate`` (ratio)
+    ``hits / (hits + misses)``; 1.0 when nothing ever missed — the
+    dense-equivalent regime (``bank_slots >= registered adapters``).
+``serve_adapter_uploads`` / ``serve_adapter_upload_bytes`` (uploads/bytes)
+    Adapter trees committed into the device bank and the host→HBM bytes
+    streamed for them (registration-time commits included).
+``serve_adapter_evictions`` (rows)
+    Refcount-0 bank rows zeroed (LRU) to make room for a missing adapter.
 ``spec_acceptance_ema`` (ratio) / ``spec_gamma`` (tokens)
     ``GammaController`` EMA acceptance and the γ it currently proposes.
 ``serve_tick_ewma_s`` (seconds)
@@ -159,6 +178,11 @@ stamps, so ``EventLog.derive_ttft(uid) == RequestResult.ttft_s`` exactly.
 ``degrade``     ladder level change; uid -1, ``level``, ``prev``.
 ``restore``     snapshot-and-restart re-queued work; uid -1,
                 ``n_requests``.
+``adapter_upload``  a host adapter tree was committed into a device bank
+                row (registration or residency-miss streaming); uid -1,
+                ``adapter``, ``row``, ``n_bytes``.
+``adapter_evict``   an LRU refcount-0 bank row was zeroed to make room;
+                uid -1, ``adapter``, ``row``.
 """
 from repro.obs.events import EVENT_KINDS, EventLog
 from repro.obs.export import (metric_value, render_prometheus, serve_http,

@@ -38,10 +38,14 @@ from typing import Any, Dict, List, Optional
 # resilience layer (repro.serving.resilience): "complete"/"timeout"/"shed"/
 # "cancel"/"failed" are the TERMINAL kinds — every submitted uid gets
 # exactly one of them; "degrade" (ladder level change) and "restore"
-# (snapshot-and-restart) are engine-scoped records carrying uid=-1
+# (snapshot-and-restart) are engine-scoped records carrying uid=-1, as are
+# "adapter_upload" (a host tree committed into a device bank row) and
+# "adapter_evict" (a refcount-0 row zeroed) from the adapter residency
+# manager (repro.serving.adapters.AdapterResidency)
 EVENT_KINDS = ("submit", "admit", "prefix_hit", "prefill_chunk",
                "first_token", "preempt", "stall", "complete",
-               "timeout", "shed", "cancel", "failed", "degrade", "restore")
+               "timeout", "shed", "cancel", "failed", "degrade", "restore",
+               "adapter_upload", "adapter_evict")
 
 
 class EventLog:

@@ -1,4 +1,7 @@
-from repro.serving.adapters import AdapterRegistry  # noqa: F401
+from repro.serving.adapters import (BASE_ADAPTER,  # noqa: F401
+                                    AdapterBankFull, AdapterError,
+                                    AdapterRegistry, AdapterResidency,
+                                    AdapterStructureError, StaleAdapter)
 from repro.serving.draft import (DraftModel, build_draft,  # noqa: F401
                                  draft_from_setup)
 from repro.serving.engine import (ContinuousServeEngine,  # noqa: F401

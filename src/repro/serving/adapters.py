@@ -1,28 +1,58 @@
-"""Multi-adapter registry for LoRAM serving — the "one base, many adapters"
-deployment the paper motivates: adapters are trained cheaply on the pruned
-model, recovered to full rank, and K of them are served simultaneously
-against a single copy of the large base model.
+"""Two-tier multi-adapter store for LoRAM serving — the "one base, many
+adapters" deployment the paper motivates at FLEET scale: adapters are
+trained cheaply on the pruned model, recovered to full rank, and *many*
+of them are served against a single copy of the large base model.
 
-The registry stacks K recovered adapter trees into ONE bank tree whose
-leaves carry an extra ``K`` axis:
+Tier 1 (host): an UNBOUNDED registry of recovered adapter trees.
+Registration (:meth:`AdapterRegistry.add`) never fails on capacity — a
+recovered adapter is a host-memory artifact until traffic needs it.
 
-  * stacked-block leaves  (n_rep, r, d)   → (n_rep, K, r, d)   (axis 1 — the
+Tier 2 (device): ONE stacked bank tree with a fixed ``bank_slots`` row
+axis, managed by an LRU :class:`AdapterResidency` allocator (free list +
+refcounts from active slots, mirroring
+:class:`repro.serving.pages.PageAllocator`).  The engine gates admission
+on residency exactly like it gates on free KV pages: a miss enqueues an
+async ``jax.device_put`` upload (committed into the bank between decode
+ticks — a miss costs queue time, not tick time), rows are evicted LRU and
+only at refcount zero, and an evicted row is ZEROED so a stray gather of
+it serves the base model, never a stale adapter.
+
+Bank layout (unchanged from the dense registry this replaced):
+
+  * stacked-block leaves  (n_rep, r, d)   → (n_rep, A, r, d)   (axis 1 — the
     leading ``n_rep`` axis must stay outermost so ``lax.scan`` over depth
     still slices it)
-  * shared-block / lm_head leaves (r, d)  → (K, r, d)          (axis 0)
+  * shared-block / lm_head leaves (r, d)  → (A, r, d)          (axis 0)
 
-``repro.models.layers.dense`` detects the extra axis and routes each batch
-row through ``adapter_ids`` with a gather — so one jitted decode step serves
-all K adapters at once and never recompiles when adapters are added or
-swapped (the bank is a plain argument, not a closure constant).
+with ``A = bank_slots`` device rows.  ``repro.models.layers.dense``
+detects the extra axis and routes each batch row through ``adapter_ids``
+(which now carry bank ROWS, resolved at admission) with a gather — so one
+jitted decode step serves every resident adapter at once and NEVER
+recompiles across uploads, evictions, or hot-swaps: the bank is a plain
+argument with fixed shapes, and every row write is a functional
+``.at[row].set``.
 
-Unused bank rows are zeros; LoRA deltas are ``B·A`` with ``B = 0`` → a zero
-row is exactly the base model, which doubles as the built-in "no adapter"
-route (:data:`BASE_ADAPTER`).
+Rank heterogeneity: mixed-rank adapters share the one bank through
+zero-padded rank buckets (``rank_buckets``).  An adapter whose leaves
+undershoot the template on their rank axis is zero-padded up to its
+bucket's rank; the device row write zeroes the row first and writes the
+(possibly partial-rank) block, so the remaining tail is zeros.  Padded
+rank rows of ``A`` and columns of ``B`` contribute exactly ``B·A = 0`` to
+the delta — zero-padding is zero-delta through the serving einsum
+(verified in ``tests/test_adapters.py``).
+
+Unused/evicted bank rows are zeros; LoRA deltas are ``B·A`` with
+``B = 0`` → a zero row is exactly the base model, which doubles as the
+built-in "no adapter" route (:data:`BASE_ADAPTER`, pinned to row 0).
+
+Under a mesh the bank stays REPLICATED (rank-r factors are tiny) —
+``repro.distributed.sharding.adapter_bank_specs`` declares the placement;
+engines leave bank rows uncommitted so jit places them against the
+committed operands.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +60,38 @@ import jax.numpy as jnp
 PyTree = Any
 
 BASE_ADAPTER = "__base__"     # reserved name: zero delta == plain base model
+BASE_ROW = 0                  # bank row 0 is pinned to the base route
 
+
+# ---------------------------------------------------------------------------
+# typed exceptions (exported from repro.serving)
+# ---------------------------------------------------------------------------
+
+class AdapterError(Exception):
+    """Base class for adapter-store errors."""
+
+
+class AdapterStructureError(AdapterError):
+    """A registered tree does not match the template: wrong structure, or a
+    leaf that differs from the template on anything but a (smaller) rank
+    axis."""
+
+
+class AdapterBankFull(AdapterError, RuntimeError):
+    """The device bank cannot host the adapter: every row is pinned by an
+    active slot (or the bank has no adapter rows at all).  Subclasses
+    RuntimeError for continuity with the dense registry's capacity error."""
+
+
+class StaleAdapter(AdapterError, KeyError):
+    """``resolve()`` of a REMOVED adapter id.  Subclasses KeyError: a stale
+    id must fail loudly, never silently gather a zeroed row (i.e. serve the
+    base model for what the caller believes is a real adapter)."""
+
+
+# ---------------------------------------------------------------------------
+# bank geometry helpers
+# ---------------------------------------------------------------------------
 
 def _stage_axes(stage_tree: dict) -> dict:
     return {
@@ -40,7 +101,7 @@ def _stage_axes(stage_tree: dict) -> dict:
 
 
 def stack_axes(template: PyTree) -> PyTree:
-    """Tree of ints matching ``template``: the axis at which the K (adapter)
+    """Tree of ints matching ``template``: the axis at which the bank-row
     dimension is inserted for each leaf."""
     axes: Dict[str, Any] = {}
     for key in ("stages", "enc_stages"):
@@ -52,73 +113,455 @@ def stack_axes(template: PyTree) -> PyTree:
     return axes
 
 
+def _rank_axis(shape: Tuple[int, ...],
+               template: Tuple[int, ...]) -> Optional[int]:
+    """The single axis on which ``shape`` undershoots ``template`` — the
+    leaf's LoRA rank axis (``A`` carries rank at -2, ``B`` at -1, but the
+    detection is shape-driven, not name-driven).  None when the shapes
+    match exactly; :class:`AdapterStructureError` for anything else."""
+    if shape == template:
+        return None
+    if len(shape) != len(template):
+        raise AdapterStructureError(
+            f"adapter leaf rank mismatch: {shape} vs template {template}")
+    diff = [i for i, (s, t) in enumerate(zip(shape, template)) if s != t]
+    if len(diff) != 1 or shape[diff[0]] > template[diff[0]]:
+        raise AdapterStructureError(
+            f"adapter leaf shape {shape} does not match template "
+            f"{template} (only the rank axis may be smaller)")
+    return diff[0]
+
+
+def bucket_rank(r: int, r_template: int, n_buckets: int) -> int:
+    """The padded rank for a rank-``r`` leaf: the smallest of ``n_buckets``
+    even steps up to the template rank that covers ``r``.  One bucket →
+    everything pads to the template rank."""
+    assert 1 <= r <= r_template, (r, r_template)
+    for i in range(1, n_buckets + 1):
+        b = -(-r_template * i // n_buckets)
+        if b >= r:
+            return b
+    return r_template
+
+
+# ---------------------------------------------------------------------------
+# residency: LRU row allocator over the device bank
+# ---------------------------------------------------------------------------
+
+class AdapterResidency:
+    """LRU allocator over bank rows ``1..bank_slots-1`` (row 0 is the base
+    route, never handed out), mirroring
+    :class:`repro.serving.pages.PageAllocator`: a LIFO free list, per-id
+    refcounts held by active slots, and eviction restricted to
+    refcount-zero rows in least-recently-used order.
+
+    One residency instance can drive SEVERAL attached stores (the target
+    registry and the draft's pruned-width registry): every row decision —
+    assignment, upload, eviction-zeroing — is applied to each attached
+    bank, so target and draft stay in lockstep and one ``adapter_ids``
+    row indexes both.
+
+    Uploads are two-phase so a miss never stalls the decode tick:
+    :meth:`acquire` (the admission gate) stages an async
+    ``jax.device_put`` of the host tree and returns False; the engine's
+    next :meth:`poll` commits the staged arrays into the bank with
+    functional ``.at[row].set`` updates (device work, no host sync) and
+    the request admits on the following gate check.
+    """
+
+    _EVENT_CAP = 512          # bounded upload/evict backlog (drop-oldest)
+
+    def __init__(self, bank_slots: int):
+        if bank_slots < 1:
+            raise ValueError(f"bank_slots must be >= 1, got {bank_slots}")
+        self.bank_slots = bank_slots
+        # LIFO free list: recently-freed rows are re-used first
+        self._free: List[int] = list(range(bank_slots - 1, BASE_ROW, -1))
+        self._row_of: Dict[int, int] = {}      # aid → row (incl. uploading)
+        self._aid_of: Dict[int, int] = {}      # row → aid
+        self._ref: Dict[int, int] = {}         # aid → active-slot refcount
+        self._lru: Dict[int, int] = {}         # aid → last-touch clock
+        self._clock = 0
+        # aid → (per-store staged device trees, total staged bytes)
+        self._uploading: Dict[int, Tuple[list, int]] = {}
+        self._stores: List["AdapterRegistry"] = []
+        # monotonic telemetry (engines bind gauges to these; reset_stats()
+        # is the benchmark warm-up boundary)
+        self.n_hits = 0
+        self.n_misses = 0
+        self.n_uploads = 0
+        self.n_evictions = 0
+        self.upload_bytes = 0
+        self._events: List[tuple] = []   # ("upload"|"evict", aid, row, bytes)
+
+    # -- store attachment ----------------------------------------------------
+
+    def attach(self, store: "AdapterRegistry") -> None:
+        if store not in self._stores:
+            self._stores.append(store)
+
+    def detach(self, store: "AdapterRegistry") -> None:
+        if store in self._stores:
+            self._stores.remove(store)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def in_use(self) -> int:
+        """Adapter rows currently assigned (resident + mid-upload)."""
+        return len(self._row_of)
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.n_hits + self.n_misses
+        return self.n_hits / total if total else 1.0
+
+    def resident(self, aid: int) -> bool:
+        return aid == 0 or (aid in self._row_of
+                            and aid not in self._uploading)
+
+    def refcount(self, aid: int) -> int:
+        return self._ref.get(aid, 0)
+
+    def assignments(self) -> List[Tuple[int, int]]:
+        """Committed (aid, row) pairs — what a follower bank must mirror."""
+        return sorted((a, r) for a, r in self._row_of.items()
+                      if a not in self._uploading)
+
+    def row(self, aid: int) -> int:
+        """The bank row backing a RESIDENT adapter (touches LRU).  KeyError
+        for anything not resident — the engine resolves rows only at
+        admission, after the gate proved residency."""
+        if aid == 0:
+            return BASE_ROW
+        if not self.resident(aid):
+            raise KeyError(f"adapter id {aid} is not resident "
+                           f"(rows in use: {self.in_use}/{self.bank_slots - 1})")
+        self._touch(aid)
+        return self._row_of[aid]
+
+    def state(self) -> dict:
+        """JSON-compatible dump (snapshots / audits)."""
+        return {
+            "bank_slots": self.bank_slots,
+            "free": list(self._free),
+            "rows": self.assignments(),
+            "ref": sorted((a, c) for a, c in self._ref.items() if c),
+            "uploading": sorted(self._uploading),
+            "hits": self.n_hits, "misses": self.n_misses,
+            "uploads": self.n_uploads, "evictions": self.n_evictions,
+            "upload_bytes": self.upload_bytes,
+        }
+
+    def reset_stats(self) -> None:
+        self.n_hits = self.n_misses = self.n_uploads = self.n_evictions = 0
+        self.upload_bytes = 0
+
+    # -- refcounts (active slots) --------------------------------------------
+
+    def retain(self, aid: int) -> None:
+        """One active slot now routes through ``aid`` (engine admit hook)."""
+        if aid == 0:
+            return
+        assert aid in self._row_of, f"retain of non-resident adapter {aid}"
+        self._ref[aid] = self._ref.get(aid, 0) + 1
+        self._touch(aid)
+
+    def release(self, aid: int) -> None:
+        """Inverse of :meth:`retain` (slot eviction/preemption hook)."""
+        if aid == 0:
+            return
+        assert self._ref.get(aid, 0) >= 1, \
+            f"release of unretained adapter {aid}"
+        self._ref[aid] -= 1
+
+    def clear_refcounts(self) -> None:
+        """Engine runtime-state reset: the slot table was wiped without
+        per-slot evictions, so every slot-held reference drops at once."""
+        self._ref.clear()
+
+    # -- allocation ----------------------------------------------------------
+
+    def _touch(self, aid: int) -> None:
+        self._clock += 1
+        self._lru[aid] = self._clock
+
+    def _event(self, kind: str, aid: int, row: int, nbytes: int) -> None:
+        self._events.append((kind, aid, row, nbytes))
+        if len(self._events) > self._EVENT_CAP:
+            del self._events[:-self._EVENT_CAP]
+
+    def drain_events(self) -> List[tuple]:
+        out, self._events = self._events, []
+        return out
+
+    def _victim(self) -> Optional[int]:
+        """LRU refcount-zero resident id (in-flight uploads are exempt)."""
+        cands = [a for a in self._row_of
+                 if not self._ref.get(a, 0) and a not in self._uploading]
+        if not cands:
+            return None
+        return min(cands, key=lambda a: self._lru.get(a, 0))
+
+    def can_host(self, aid: int) -> bool:
+        """Could ``aid`` be made resident right now (already in, a free
+        row, or an evictable victim)?  False only while every row is
+        pinned by active slots — admission blocks until a release."""
+        return (aid == 0 or aid in self._row_of or bool(self._free)
+                or self._victim() is not None)
+
+    def _evict(self, aid: int) -> int:
+        """Drop a refcount-zero resident; its row is ZEROED in every
+        attached bank (a stray gather now serves the base model, never a
+        stale adapter) and returned to the caller."""
+        row = self._row_of.pop(aid)
+        del self._aid_of[row]
+        self._lru.pop(aid, None)
+        self._ref.pop(aid, None)
+        for store in self._stores:
+            store._zero_row(row)
+        self.n_evictions += 1
+        self._event("evict", aid, row, 0)
+        return row
+
+    def evict(self, aid: int) -> bool:
+        """Explicitly evict ``aid`` (host tree untouched — it re-uploads on
+        next use).  False if not assigned; :class:`AdapterError` while an
+        active slot still routes through it."""
+        if aid not in self._row_of:
+            return False
+        if self._ref.get(aid, 0):
+            raise AdapterError(
+                f"adapter {aid} is routed by {self._ref[aid]} active "
+                f"slot(s) — drain them first")
+        self._uploading.pop(aid, None)
+        self._free.append(self._evict(aid))
+        return True
+
+    def _assign_row(self, aid: int) -> Optional[int]:
+        if self._free:
+            row = self._free.pop()
+        else:
+            victim = self._victim()
+            if victim is None:
+                return None
+            row = self._evict(victim)
+        self._row_of[aid] = row
+        self._aid_of[row] = aid
+        self._touch(aid)
+        return row
+
+    def acquire(self, aid: int) -> bool:
+        """THE admission gate: True iff ``aid`` is resident NOW.
+
+        A miss assigns a row (free list first, else LRU refcount-zero
+        eviction), stages an async ``jax.device_put`` upload from every
+        attached store, and returns False — the request waits in queue
+        while the transfer overlaps decode ticks; the engine's next
+        :meth:`poll` commits it.  With every row pinned by active slots
+        nothing is staged and the gate stays False until a slot releases
+        its reference (FCFS admission blocks, never corrupts)."""
+        if aid == 0:
+            return True
+        if self.resident(aid):
+            self._touch(aid)
+            self.n_hits += 1
+            return True
+        if aid in self._uploading:
+            return False              # transfer in flight — commit at poll()
+        row = self._assign_row(aid)
+        if row is None:
+            return False              # all rows pinned by active slots
+        self.n_misses += 1
+        staged, nbytes = [], 0
+        for store in self._stores:
+            tree = store._stage_upload(aid)
+            staged.append(tree)
+            if tree is not None:
+                nbytes += sum(x.nbytes for x in jax.tree.leaves(tree))
+        self._uploading[aid] = (staged, nbytes)
+        return False
+
+    def poll(self) -> None:
+        """Commit every staged upload into the attached banks (functional
+        ``.at[row].set`` — device work, the host never syncs).  Engines
+        call this once per step, before the admission pass."""
+        if not self._uploading:
+            return
+        for aid, (staged, nbytes) in list(self._uploading.items()):
+            row = self._row_of[aid]
+            for store, tree in zip(self._stores, staged):
+                store._commit_row(aid, row, staged=tree)
+            del self._uploading[aid]
+            self.n_uploads += 1
+            self.upload_bytes += nbytes
+            self._event("upload", aid, row, nbytes)
+
+    def populate(self, aid: int) -> Optional[int]:
+        """Registration-time residency (synchronous commit): a hot-swap
+        rewrites its existing row in place; a NEW adapter takes a free row
+        if one exists — registration never evicts, so it cannot disturb
+        the serving working set.  Returns the row, or None when the tree
+        stays host-only until first use."""
+        row = self._row_of.get(aid)
+        if row is None:
+            if not self._free:
+                return None
+            row = self._free.pop()
+            self._row_of[aid] = row
+            self._aid_of[row] = aid
+            self._touch(aid)
+        # a fresh registration supersedes any in-flight staged upload
+        self._uploading.pop(aid, None)
+        nbytes = 0
+        for store in self._stores:
+            nbytes += store._commit_row(aid, row)
+        self.n_uploads += 1
+        self.upload_bytes += nbytes
+        self._event("upload", aid, row, nbytes)
+        return row
+
+
+# ---------------------------------------------------------------------------
+# registry: unbounded host tier + device bank
+# ---------------------------------------------------------------------------
+
 class AdapterRegistry:
-    """Named slots in a stacked adapter bank.
+    """Two-tier named adapter store.
 
     ``template`` is any adapter tree with the target structure (e.g. the
     output of ``loram.finalize`` or ``init_lora`` on the FULL plan); its
-    leaf values are not used, only shapes/dtypes.
+    leaf values are not used, only shapes/dtypes.  Registered adapters may
+    undershoot the template on their rank axes (zero-padded per
+    ``rank_buckets`` — exactly zero-delta through the serving einsum).
+
+    ``bank_slots`` (default: ``max_adapters``, the dense registry's old
+    capacity knob — kept as an alias so existing call sites behave
+    identically) sizes the DEVICE bank only; the host tier is unbounded.
+    With ``bank_slots`` >= registered adapters every adapter gets a row at
+    registration and the store degenerates to the dense bank (token-
+    identical, pinned by tests); with fewer rows the engine streams
+    adapters in on demand through :attr:`residency`.
     """
 
-    def __init__(self, template: PyTree, max_adapters: int):
-        assert max_adapters >= 1
-        self.max_adapters = max_adapters
+    def __init__(self, template: PyTree, max_adapters: int = 4, *,
+                 bank_slots: Optional[int] = None, rank_buckets: int = 1,
+                 residency: Optional[AdapterResidency] = None):
+        bank_slots = max_adapters if bank_slots is None else bank_slots
+        if bank_slots < 1:
+            raise ValueError(f"bank_slots must be >= 1, got {bank_slots}")
+        if rank_buckets < 1:
+            raise ValueError(f"rank_buckets must be >= 1, got {rank_buckets}")
+        self.bank_slots = bank_slots
+        self.rank_buckets = rank_buckets
         self._template_struct = jax.tree.structure(template)
         self._template_shapes = [x.shape for x in jax.tree.leaves(template)]
         self._axes = stack_axes(template)
         self._bank = jax.tree.map(
             lambda leaf, ax: jnp.zeros(
-                leaf.shape[:ax] + (max_adapters,) + leaf.shape[ax:],
+                leaf.shape[:ax] + (bank_slots,) + leaf.shape[ax:],
                 leaf.dtype),
             template, self._axes)
-        self._names: Dict[str, int] = {}
-        self._trees: List[Optional[PyTree]] = [None] * max_adapters
-        # id 0 is reserved for the base-model (zero-delta) route
-        self._names[BASE_ADAPTER] = 0
+        self._names: Dict[str, int] = {BASE_ADAPTER: 0}
+        self._ids: Dict[int, str] = {0: BASE_ADAPTER}   # O(1) reverse map
+        self._trees: Dict[int, PyTree] = {}             # host tier (padded)
+        self._retired: set = set()                      # removed ids
+        self._next_id = 1
+        self.residency = residency or AdapterResidency(bank_slots)
+        self.residency.attach(self)
+
+    @property
+    def max_adapters(self) -> int:
+        """Dense-registry alias for :attr:`bank_slots` (device rows)."""
+        return self.bank_slots
 
     # -- registration -------------------------------------------------------
 
-    def add(self, name: str, lora: PyTree) -> int:
-        """Register ``lora`` under ``name``; returns its adapter id.
-        Re-registering a name overwrites its bank row (hot-swap)."""
-        assert name != BASE_ADAPTER, "reserved name"
-        struct = jax.tree.structure(lora)
-        assert struct == self._template_struct, (
-            f"adapter tree structure mismatch:\n{struct}\n"
-            f"!=\n{self._template_struct}")
-        shapes = [x.shape for x in jax.tree.leaves(lora)]
-        assert shapes == self._template_shapes, "adapter leaf shape mismatch"
+    def _pad_to_bucket(self, leaf, template_shape: Tuple[int, ...]):
+        """Zero-pad a (possibly smaller-rank) leaf up to its rank bucket.
+        Padded A-rows/B-columns contribute ``B·A = 0`` — exactly the base
+        route for the padded tail."""
+        ax = _rank_axis(tuple(leaf.shape), tuple(template_shape))
+        if ax is None:
+            return leaf
+        target = bucket_rank(leaf.shape[ax], template_shape[ax],
+                             self.rank_buckets)
+        if target == leaf.shape[ax]:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[ax] = (0, target - leaf.shape[ax])
+        return jnp.pad(leaf, pad)
 
+    def add(self, name: str, lora: PyTree) -> int:
+        """Register ``lora`` under ``name`` in the HOST tier; returns its
+        (stable) adapter id.  Re-registering a name hot-swaps it: the host
+        tree is replaced and, if resident, its bank row is rewritten in
+        place — live traffic picks the new weights up on the next tick,
+        with no recompile (fixed bank shapes).  A new adapter becomes
+        resident immediately when a free bank row exists; otherwise it
+        stays host-only until the admission gate streams it in."""
+        if name == BASE_ADAPTER:
+            raise AdapterError(f"{BASE_ADAPTER!r} is the reserved base route")
+        struct = jax.tree.structure(lora)
+        if struct != self._template_struct:
+            raise AdapterStructureError(
+                f"adapter tree structure mismatch:\n{struct}\n"
+                f"!=\n{self._template_struct}")
+        leaves = jax.tree.leaves(lora)
+        padded = [self._pad_to_bucket(x, t)
+                  for x, t in zip(leaves, self._template_shapes)]
+        tree = jax.tree.unflatten(self._template_struct, padded)
         if name in self._names:
             aid = self._names[name]
         else:
-            aid = len(self._names)
-            if aid >= self.max_adapters:
-                raise RuntimeError(
-                    f"adapter bank full ({self.max_adapters} slots; "
-                    f"slot 0 is the reserved base route)")
+            aid = self._next_id
+            self._next_id += 1
             self._names[name] = aid
+            self._ids[aid] = name
+        self._trees[aid] = tree
+        self.residency.populate(aid)
+        return aid
 
-        def write(bank_leaf, leaf, ax):
-            idx = (slice(None),) * ax + (aid,)
-            return bank_leaf.at[idx].set(leaf.astype(bank_leaf.dtype))
-
-        self._bank = jax.tree.map(write, self._bank, lora, self._axes)
-        self._trees[aid] = lora
+    def remove(self, name: str) -> int:
+        """Unregister ``name`` from the host tier and free its bank row
+        (zeroed).  Refuses (:class:`AdapterError`) while an active slot
+        still routes through it.  The id is RETIRED: ``resolve()`` of it
+        raises :class:`StaleAdapter` from then on — a stale id must never
+        silently serve the base model."""
+        if name == BASE_ADAPTER or name not in self._names:
+            raise KeyError(f"unknown adapter {name!r}")
+        aid = self._names[name]
+        if self.residency.refcount(aid):
+            raise AdapterError(
+                f"adapter {name!r} is routed by "
+                f"{self.residency.refcount(aid)} active slot(s)")
+        self.residency.evict(aid)
+        del self._names[name]
+        del self._ids[aid]
+        self._trees.pop(aid, None)
+        self._retired.add(aid)
         return aid
 
     # -- lookup -------------------------------------------------------------
 
     def resolve(self, adapter: Union[str, int, None]) -> int:
+        """Name/id/None → host adapter id (NOT a bank row — rows are
+        resolved at admission via :meth:`bank_row`)."""
         if adapter is None:
             return 0
         if isinstance(adapter, int):
-            # ids are assigned densely from 0 (base) upward; an in-range but
-            # unregistered id would silently gather a zero (= base) bank row
-            if not 0 <= adapter < len(self._names):
+            if adapter in self._retired:
+                raise StaleAdapter(
+                    f"adapter id {adapter} was removed — stale ids do not "
+                    f"silently route to the base model")
+            if adapter not in self._ids:
                 raise KeyError(
                     f"adapter id {adapter} not registered "
-                    f"(have ids 0..{len(self._names) - 1})")
+                    f"(have {sorted(self._ids)})")
             return adapter
         if adapter not in self._names:
             known = sorted(n for n in self._names if n != BASE_ADAPTER)
@@ -128,15 +571,106 @@ class AdapterRegistry:
         return self._names[adapter]
 
     def name_of(self, aid: int) -> Optional[str]:
-        for n, i in self._names.items():
-            if i == aid:
-                return None if n == BASE_ADAPTER else n
-        return None
+        """O(1) reverse lookup (None for the base route / unknown ids)."""
+        name = self._ids.get(aid)
+        return None if name in (None, BASE_ADAPTER) else name
+
+    def has_id(self, aid: int) -> bool:
+        return aid in self._ids
 
     def adapter_tree(self, adapter: Union[str, int, None]) -> Optional[PyTree]:
-        """The single (unstacked) adapter tree — the prefill-into-slot path
-        runs one request at a time, so it uses the plain LoRA fast path."""
-        return self._trees[self.resolve(adapter)]
+        """The single (unstacked, bucket-padded) host tree — the
+        prefill-into-slot path runs one request at a time, so it uses the
+        plain LoRA fast path."""
+        return self._trees.get(self.resolve(adapter))
+
+    # -- residency surface (engine admission path) --------------------------
+
+    def resident(self, adapter: Union[str, int, None]) -> bool:
+        return self.residency.resident(self.resolve(adapter))
+
+    def acquire(self, adapter: Union[str, int, None]) -> bool:
+        """Admission gate: True iff resident now; a miss stages an async
+        upload (see :meth:`AdapterResidency.acquire`)."""
+        return self.residency.acquire(self.resolve(adapter))
+
+    def bank_row(self, adapter: Union[str, int, None]) -> int:
+        """The device bank row for a RESIDENT adapter — what admission
+        writes into ``TickState.adapter_ids``."""
+        return self.residency.row(self.resolve(adapter))
+
+    def upload(self, adapter: Union[str, int, None]) -> int:
+        """Force-make an adapter resident NOW (synchronous commit);
+        returns its row.  :class:`AdapterBankFull` when every row is
+        pinned by an active slot (or the bank has no adapter rows)."""
+        aid = self.resolve(adapter)
+        if self.residency.resident(aid):
+            return self.residency.row(aid)
+        if not self.residency.acquire(aid) \
+                and aid not in self.residency._uploading:
+            raise AdapterBankFull(
+                f"adapter bank full ({self.bank_slots} rows; row 0 is the "
+                f"reserved base route and every other row is pinned by an "
+                f"active slot)")
+        self.residency.poll()
+        return self.residency.row(aid)
+
+    def follow(self, leader: "AdapterRegistry") -> None:
+        """Adopt ``leader``'s residency manager (draft-bank lockstep): row
+        assignment, refcounts, LRU and upload scheduling are decided ONCE
+        and applied to both banks, so the one ``adapter_ids`` row a slot
+        carries indexes target and draft alike.  This bank is rebuilt to
+        mirror the leader's current assignments; ids must have been
+        registered in the same order on both stores."""
+        if leader.residency is self.residency:
+            return
+        if leader.bank_slots != self.bank_slots:
+            raise ValueError(
+                f"follower bank_slots={self.bank_slots} != leader's "
+                f"{leader.bank_slots} — lockstep banks must be congruent")
+        self.residency.detach(self)
+        self.residency = leader.residency
+        self.residency.attach(self)
+        self._bank = jax.tree.map(jnp.zeros_like, self._bank)
+        for aid, row in self.residency.assignments():
+            self._commit_row(aid, row)
+
+    # -- device-bank row writes (driven by the residency manager) -----------
+
+    def _stage_upload(self, aid: int) -> Optional[PyTree]:
+        """Async host→device transfer of the adapter's padded tree (None
+        when this store has no tree for the id — e.g. a draft bank that
+        lags the target; its zeroed row serves the pruned base)."""
+        tree = self._trees.get(aid)
+        return None if tree is None else jax.device_put(tree)
+
+    def _zero_row(self, row: int) -> None:
+        def zero(bank_leaf, ax):
+            idx = (slice(None),) * ax + (row,)
+            return bank_leaf.at[idx].set(0)
+        self._bank = jax.tree.map(zero, self._bank, self._axes)
+
+    def _commit_row(self, aid: int, row: int,
+                    staged: Optional[PyTree] = None) -> int:
+        """Write ``aid``'s tree into bank row ``row`` (zeroing it first so
+        a previous occupant — or the rank tail past a bucket-padded block
+        — can never leak through).  Returns the bytes written."""
+        tree = staged if staged is not None else self._trees.get(aid)
+        self._zero_row(row)
+        if tree is None:
+            return 0        # no tree in this store: zero row = base route
+
+        def write(bank_leaf, leaf, ax):
+            # the leaf may sit BELOW the template rank (bucket padding):
+            # write the sub-block; the zeroed tail supplies the rest
+            idx = (tuple(slice(0, s) for s in leaf.shape[:ax]) + (row,)
+                   + tuple(slice(0, s) for s in leaf.shape[ax:]))
+            return bank_leaf.at[idx].set(leaf.astype(bank_leaf.dtype))
+
+        self._bank = jax.tree.map(write, self._bank, tree, self._axes)
+        return sum(int(x.nbytes) for x in jax.tree.leaves(tree))
+
+    # -- views --------------------------------------------------------------
 
     @property
     def bank(self) -> PyTree:

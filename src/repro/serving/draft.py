@@ -63,32 +63,40 @@ class DraftModel:
         if self.registry is None:
             return None
         aid = adapter if isinstance(adapter, int) else None
-        if aid is not None and aid >= len(self.registry.names):
+        if aid is not None and not self.registry.has_id(aid):
             # target knows more adapters than the draft — fall back to the
             # pruned base (correct, just a worse proposer for that stream).
-            # The decode loop needs no such guard: an unregistered bank row
-            # is zeros, and a zero LoRA delta IS the base route.
+            # The decode loop needs no such guard: a row the draft never
+            # registered is zeros, and a zero LoRA delta IS the base route.
             return None
         return self.registry.adapter_tree(adapter)
 
 
 def build_draft(small_plan: Plan, small_params, *,
                 adapter_template: Optional[PyTree] = None,
-                max_adapters: int = 0) -> DraftModel:
+                max_adapters: int = 0, bank_slots: Optional[int] = None,
+                rank_buckets: int = 1) -> DraftModel:
     """Assemble a :class:`DraftModel` from the pruned ("train small") plan and
     params.  ``adapter_template`` is any pruned-width adapter tree (e.g.
-    ``LoRAMSetup.lora0``) — required when ``max_adapters > 0``."""
+    ``LoRAMSetup.lora0``) — required when ``max_adapters > 0``.
+    ``bank_slots``/``rank_buckets`` must mirror the TARGET registry's (the
+    speculative engine puts the two banks in residency lockstep)."""
     registry = None
     if max_adapters:
         if adapter_template is None:
             raise ValueError("max_adapters > 0 requires an adapter_template")
-        registry = AdapterRegistry(adapter_template, max_adapters)
+        registry = AdapterRegistry(adapter_template, max_adapters,
+                                   bank_slots=bank_slots,
+                                   rank_buckets=rank_buckets)
     return DraftModel(small_plan, small_params, registry)
 
 
-def draft_from_setup(setup, *, max_adapters: int = 0) -> DraftModel:
+def draft_from_setup(setup, *, max_adapters: int = 0,
+                     bank_slots: Optional[int] = None,
+                     rank_buckets: int = 1) -> DraftModel:
     """Build the draft straight from a :class:`~repro.core.loram.LoRAMSetup` —
     the exact artifacts the online training stage already has in memory."""
     return build_draft(setup.small_plan, setup.small_params,
                        adapter_template=setup.lora0,
-                       max_adapters=max_adapters)
+                       max_adapters=max_adapters, bank_slots=bank_slots,
+                       rank_buckets=rank_buckets)

@@ -344,10 +344,14 @@ class ContinuousServeEngine:
             # hooks are context-gated: installing them changes nothing until
             # step() opens its use_mesh scope
             sharding.install_residual_constraint()
-        if registry is not None and registry.max_adapters != cfg.max_adapters:
-            raise ValueError(
-                f"ServeConfig.max_adapters={cfg.max_adapters} does not match "
-                f"the registry's capacity ({registry.max_adapters})")
+        if registry is not None:
+            want = cfg.adapter_bank_slots or cfg.max_adapters
+            if registry.bank_slots != want:
+                raise ValueError(
+                    f"ServeConfig wants a {want}-row adapter bank "
+                    f"(adapter_bank_slots={cfg.adapter_bank_slots}, "
+                    f"max_adapters={cfg.max_adapters}) but the registry "
+                    f"was built with bank_slots={registry.bank_slots}")
         S = cfg.max_slots
         self._sched = Scheduler(S)
         self._n_ticks = 0
@@ -627,6 +631,39 @@ class ContinuousServeEngine:
             gauge("serve_pages_pool_size",
                   "pool capacity incl. the trash page", "pages",
                   lambda: self.pages.n_pages)
+        if self.registry is not None:
+            # adapter-residency telemetry (the paged adapter bank): rows in
+            # use, gate hit-rate, upload traffic and evictions.  All read
+            # host-side residency counters at snapshot time — zero hot-path
+            # cost, nothing enters jit.
+            res = self.registry.residency
+            gauge("serve_adapter_bank_slots",
+                  "device bank rows incl. the reserved base row", "rows",
+                  lambda: res.bank_slots)
+            gauge("serve_adapter_bank_in_use",
+                  "bank rows assigned to adapters (resident + uploading)",
+                  "rows", lambda: res.in_use)
+            gauge("serve_adapter_registered",
+                  "adapters in the unbounded host tier", "adapters",
+                  lambda: float(len(self.registry)))
+            gauge("serve_adapter_hits",
+                  "admission-gate checks answered by a resident row",
+                  "checks", lambda: res.n_hits)
+            gauge("serve_adapter_misses",
+                  "admission-gate checks that staged a host->HBM upload",
+                  "checks", lambda: res.n_misses)
+            gauge("serve_adapter_evictions",
+                  "refcount-0 bank rows zeroed to make room", "rows",
+                  lambda: res.n_evictions)
+            gauge("serve_adapter_uploads",
+                  "adapter trees committed into the device bank", "uploads",
+                  lambda: res.n_uploads)
+            gauge("serve_adapter_upload_bytes",
+                  "host->HBM adapter bytes streamed (incl. registration)",
+                  "bytes", lambda: float(res.upload_bytes))
+            gauge("serve_adapter_hit_rate",
+                  "resident fraction of admission-gate checks (1.0 when "
+                  "nothing ever missed)", "ratio", lambda: res.hit_rate)
         # serving-time quantization (ServeConfig.quant): packed-vs-logical
         # byte attribution.  hbm_bytes below already reports PACKED bytes
         # for quantized tensors (shard nbytes of int8/uint8 storage); these
@@ -685,6 +722,14 @@ class ContinuousServeEngine:
         """Scheduler transition hook — the one place every admission /
         preemption path reports through, regardless of which engine
         subclass or prefill mode performed it."""
+        # adapter-residency refcounts ride the same hook: a slot holds one
+        # reference on its adapter's bank row from admission to eviction /
+        # preemption, so the LRU can never evict a row a live slot gathers
+        if self.registry is not None:
+            if kind == "admit":
+                self.registry.residency.retain(req.adapter_id)
+            else:                                  # "preempt" or "evict"
+                self.registry.residency.release(req.adapter_id)
         if kind == "admit":
             self.events.emit("admit", req.uid, slot=slot,
                              adapter=req.adapter, n_prompt=len(req.prompt))
@@ -867,8 +912,15 @@ class ContinuousServeEngine:
                     f"prefix_id {prefix_id!r} is already registered with "
                     f"different tokens — shared prefixes must be identical")
         aid = 0
+        resolve_err = False
         if self.registry is not None:
-            aid = self.registry.resolve(adapter)
+            try:
+                aid = self.registry.resolve(adapter)
+            except KeyError:
+                # unknown or stale adapter: the request fails TYPED through
+                # the terminal choke point (status "failed"), same as any
+                # other unservable submission — never an engine-side raise
+                resolve_err = True
         elif adapter is not None:
             raise ValueError("adapter given but engine has no registry")
         req = Request(uid=self._sched.new_uid(), prompt=prompt,
@@ -889,9 +941,10 @@ class ContinuousServeEngine:
             self._deadline_abs[req.uid] = t + r.deadline_s
         if r.ttft_deadline_s > 0.0:
             self._ttft_deadline_abs[req.uid] = t + r.ttft_deadline_s
-        if self._impossible(req):
-            # the request can NEVER hold enough pages, even with the whole
-            # pool to itself — fail it typed instead of letting the
+        if resolve_err or self._impossible(req):
+            # the request can NEVER be served — unresolvable adapter, page
+            # demand beyond the whole pool, or an adapter bank with no
+            # adapter rows — fail it typed instead of letting the
             # preempt-newest loop livelock on it
             self._pending_results.append(
                 self._queue_terminal(req, STATUS_FAILED))
@@ -913,6 +966,27 @@ class ContinuousServeEngine:
                 self._pending_results.append(
                     self._queue_terminal(victim, STATUS_SHED))
         return self._sched.submit(req)
+
+    def register_adapter(self, name: str, lora, *,
+                         draft_lora=None) -> int:
+        """Hot-register (or hot-swap) an adapter into the RUNNING engine —
+        the paper's production loop: prune → train at pruned width →
+        recover → serve, without a restart.  The bank's shapes are fixed
+        at construction, so no tick ever recompiles: a free bank row is
+        committed synchronously, otherwise the tree waits host-side and
+        streams in on first use.  Returns the adapter id to submit under.
+
+        ``draft_lora`` (the pruned-width twin for the draft bank) requires
+        a :class:`SpeculativeServeEngine`."""
+        if self.registry is None:
+            raise ValueError(
+                "engine was built without an adapter registry — construct "
+                "it with registry=AdapterRegistry(template, ...)")
+        if draft_lora is not None:
+            raise ValueError(
+                "draft_lora requires a SpeculativeServeEngine with a "
+                "draft adapter bank")
+        return self.registry.add(name, lora)
 
     def cancel(self, uid: int) -> Optional[RequestResult]:
         """Terminate one request wherever it lives — queued (dropped in
@@ -1023,10 +1097,17 @@ class ContinuousServeEngine:
     def _admit_pass(self, done: List[RequestResult],
                     progressive: bool) -> None:
         """Drain admissions into free slots (FCFS).  Consults the fault
-        plan's ``adapter`` site and the degradation ladder per admission."""
+        plan's ``adapter`` site and the degradation ladder per admission.
+        With a registry attached the gate also requires the request's
+        adapter to be RESIDENT in the device bank — a miss stages an async
+        upload and the request waits in queue (the transfer overlaps the
+        decode ticks below), admitting on a later pass once committed."""
+        if self.registry is not None:
+            self._drain_adapter_events()
+        gated = self.paged or self.registry is not None
         while True:
             adm = self._sched.next_admission(
-                gate=self._admission_gate if self.paged else None,
+                gate=self._admission_gate if gated else None,
                 prefill=self._chunked_path if progressive else None)
             if adm is None:
                 break
@@ -1055,6 +1136,20 @@ class ContinuousServeEngine:
         self._sched.evict(slot)
         return self._result_for(req, 0, np.zeros(0, np.int32),
                                 STATUS_FAILED, t_end)
+
+    def _drain_adapter_events(self) -> None:
+        """Commit any staged adapter uploads into the bank (async device
+        work issued between ticks) and report residency transitions to the
+        event log."""
+        res = self.registry.residency
+        res.poll()
+        for kind, aid, row, nbytes in res.drain_events():
+            name = self.registry.name_of(aid) or str(aid)
+            if kind == "upload":
+                self.events.emit("adapter_upload", -1, adapter=name,
+                                 row=row, n_bytes=nbytes)
+            else:
+                self.events.emit("adapter_evict", -1, adapter=name, row=row)
 
     def _pre_dispatch_guard(self) -> bool:
         """Consult the fault plan immediately BEFORE a jitted dispatch
@@ -1116,6 +1211,11 @@ class ContinuousServeEngine:
         trips on config drift — the live variant of the same livelock
         (pages pinned outside slots) is caught by
         :meth:`_break_admission_stall`."""
+        if (self.registry is not None and req.adapter_id != 0
+                and self.registry.bank_slots < 2):
+            # row 0 is the reserved base route: a 1-row bank can never
+            # host ANY adapter, so the residency gate would block forever
+            return True
         if not self.paged:
             return False
         sb = bucket_len(len(req.prompt), self._page, self.cfg.max_seq_len)
@@ -1253,6 +1353,11 @@ class ContinuousServeEngine:
             self._slot_prefix.clear()
         self._n_hot = 0
         self._terminal_info.clear()
+        if self.registry is not None:
+            # Scheduler.reset() wipes the slot table WITHOUT per-slot evict
+            # hooks, so the slot-held bank-row references drop here; the
+            # rows themselves (and the host tier) survive the restart
+            self.registry.residency.clear_refcounts()
         st = self._init_tick_state(S, self.cfg)
         if self.mesh is not None:
             st = jax.device_put(st, st.shardings(self.mesh))
@@ -1440,9 +1545,16 @@ class ContinuousServeEngine:
 
     def _activate(self, slot: int, req: Request, first) -> None:
         """Flip a fully-prefilled slot live in the jitted tick state.  The
-        speculative operands trace unused when the state has no spec leaves."""
+        speculative operands trace unused when the state has no spec leaves.
+
+        ``TickState.adapter_ids`` carries the BANK ROW, not the host
+        adapter id: the admission gate proved residency, so the row is
+        resolved here once and pinned (refcounted) until the slot
+        evicts — the decode gather never needs the host-side mapping."""
+        row = (self.registry.bank_row(req.adapter_id)
+               if self.registry is not None else 0)
         self._st = self._admit_update(
-            self._st, slot, first, len(req.prompt), req.adapter_id,
+            self._st, slot, first, len(req.prompt), row,
             req.temperature, req.seed, req.max_new_tokens, req.speculative)
 
     def _run_chunk(self, slot: int) -> None:
@@ -1650,6 +1762,15 @@ class ContinuousServeEngine:
     # -- admission ----------------------------------------------------------
 
     def _admission_gate(self, req: Request) -> bool:
+        # adapter residency first: a miss stages the upload and blocks the
+        # (FCFS) head until the row is committed — exactly the free-page
+        # discipline, applied to bank rows.  Progress is guaranteed: rows
+        # are pinned only by active slots, and active slots finish.
+        if (self.registry is not None
+                and not self.registry.acquire(req.adapter_id)):
+            return False
+        if not self.paged:
+            return True
         if self.paged and self._chunked_path(req):
             pid = ((req.prefix_id, req.adapter_id)
                    if self._sharing and req.prefix_id is not None else None)

@@ -181,6 +181,13 @@ def engine_snapshot(eng) -> dict:
     pages = getattr(eng, "pages", None)
     if pages is not None:
         snap["allocator"] = pages.state()
+    registry = getattr(eng, "registry", None)
+    if registry is not None:
+        # diagnostic, like the page pool: restore rebuilds residency
+        # lazily — re-queued requests re-resolve by NAME and the admission
+        # gate re-streams any adapter the (possibly fresh) bank lost, so
+        # the row assignments need not survive the restart
+        snap["adapters"] = registry.residency.state()
     return snap
 
 

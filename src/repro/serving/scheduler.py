@@ -146,9 +146,13 @@ class Scheduler:
         Returns None when the queue is empty or all slots are busy.
 
         ``gate(request) -> bool`` lets the engine veto the admission on
-        resources the scheduler can't see (free KV pages).  Admission stays
-        strictly FCFS: if the HEAD request is gated out, nothing behind it
-        is considered — skipping ahead would starve big prompts forever.
+        resources the scheduler can't see: free KV pages, and — under the
+        paged adapter bank — the request's adapter being RESIDENT in
+        device rows (a miss stages an async host→HBM upload and gates
+        False until the transfer commits).  Admission stays strictly FCFS:
+        if the HEAD request is gated out, nothing behind it is considered —
+        skipping ahead would starve big prompts (or cold adapters)
+        forever.
 
         ``prefill(request) -> bool`` marks the slot PREFILLING instead of
         decodable (chunked prefill): the engine streams the prompt in via

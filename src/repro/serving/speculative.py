@@ -52,7 +52,7 @@ from repro.runtime.steps import (attn_window_map, make_copy_page,
                                  make_paged_prefill_into_slot,
                                  make_prefill_into_slot, make_state_ops,
                                  make_verify_step, request_key)
-from repro.serving.adapters import AdapterRegistry
+from repro.serving.adapters import AdapterError, AdapterRegistry
 from repro.serving.draft import DraftModel
 from repro.serving.resilience import DEGRADE_SHRINK_GAMMA
 from repro.serving.engine import (ContinuousServeEngine, _counter_property,
@@ -677,6 +677,13 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         # for every adapter stream); the bank and per-request trees are
         # simply never consulted
         self._draft_base_only = spec.draft_stage == "base"
+        if (registry is not None and draft.registry is not None
+                and not self._draft_base_only):
+            # draft-bank lockstep: the pruned-width bank adopts the TARGET
+            # registry's residency manager, so one admission decision
+            # assigns/uploads/evicts the same row in both banks and the
+            # single bank row a slot carries indexes target and draft alike
+            draft.registry.follow(registry)
         self._draft_lora_scale = draft_lora_scale
         S = cfg.max_slots
         if self.paged:
@@ -917,6 +924,34 @@ class SpeculativeServeEngine(ContinuousServeEngine):
         """Fraction of draft proposals the target accepted (speculative
         traffic only)."""
         return self.n_accepted / max(self.n_proposed, 1)
+
+    def register_adapter(self, name: str, lora, *,
+                         draft_lora=None) -> int:
+        """Hot-register into the running engine: the recovered full-rank
+        tree into the target bank and (optionally) its pruned-width twin
+        into the draft bank — SAME id, same bank row, committed in
+        lockstep by the shared residency manager.  Omitting ``draft_lora``
+        leaves the draft row zeroed for this adapter (the draft proposes
+        from its pruned base; verification still guarantees the target
+        distribution)."""
+        if self.registry is None:
+            raise ValueError(
+                "engine was built without an adapter registry — construct "
+                "it with registry=AdapterRegistry(template, ...)")
+        aid = self.registry.add(name, lora)
+        if draft_lora is not None:
+            if self.draft.registry is None:
+                raise ValueError(
+                    "draft_lora given but the DraftModel has no adapter "
+                    "bank (build_draft(..., adapter_template=, "
+                    "max_adapters=))")
+            did = self.draft.add(name, draft_lora)
+            if did != aid:
+                raise AdapterError(
+                    f"draft/target adapter ids diverged ({did} != {aid}) — "
+                    f"register every adapter through register_adapter() or "
+                    f"in the same order on both banks")
+        return aid
 
     # -- internals ----------------------------------------------------------
 

@@ -60,7 +60,9 @@ class TickState:
     last_tok: Array = _leaf(P(), "(S,) i32 — last emitted token per slot")
     pos: Array = _leaf(P(), "(S,) i32 — next decode position per slot")
     active: Array = _leaf(P(), "(S,) bool — slot occupancy mask")
-    adapter_ids: Array = _leaf(P(), "(S,) i32 — stacked-bank adapter route")
+    adapter_ids: Array = _leaf(
+        P(), "(S,) i32 — adapter-bank ROW per slot (0 = base route), "
+             "resolved at admission by the residency gate")
     # -- sampling state -----------------------------------------------------
     temps: Array = _leaf(P(), "(S,) f32 — per-request temperature")
     seeds: Array = _leaf(P(), "(S,) i32 — per-request PRNG seed")

@@ -1,0 +1,457 @@
+"""Paged adapter bank (two-tier store + LRU residency):
+
+  1. residency allocator — property-checked random interleavings of
+     register / hot-swap / acquire+poll / retain / release / evict /
+     remove against a shadow model: row maps stay bijective, committed
+     rows hold exactly the (padded) host tree, evicted and never-assigned
+     rows are ZEROS, refcounts never leak, stale ids fail typed
+  2. rank buckets — mixed-rank adapters share one bank through zero-padded
+     buckets; padding is exactly zero-delta through the serving einsum
+     (a rank-2 adapter in a rank-4 bank is token-identical to its solo run)
+  3. streaming token identity — ``bank_slots < K`` serves MORE adapters
+     than device rows by streaming host↔HBM under the admission gate, yet
+     every request completes with EXACTLY the tokens the dense-equivalent
+     bank (``bank_slots >= K``, the PR-1 behavior) emits — across the
+     continuous, paged and speculative engines
+  4. engine interleavings — property-checked register / hot-swap / submit
+     / cancel / step sequences on a live 2-row engine: every uid reaches
+     exactly one typed terminal, active slots only ever gather their own
+     resident row, and the bank never holds a stale row after drain
+"""
+import dataclasses
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import hypothesis, st
+from repro.configs import LoRAConfig, LoRAMConfig, ServeConfig, get_smoke
+from repro.core import loram, recovery
+from repro.models import init_params, make_plan
+from repro.models.model import init_lora
+from repro.serving import (AdapterError, AdapterRegistry,
+                           ContinuousServeEngine, ServeEngine,
+                           SpeculativeServeEngine, StaleAdapter)
+from repro.serving.adapters import BASE_ROW, bucket_rank
+from repro.serving.draft import build_draft
+
+RNG = jax.random.PRNGKey(0)
+LORA_CFG = LoRAConfig(rank=4)
+LORAM_CFG = LoRAMConfig(method="stru", ratio=0.5, keep_first=0, keep_last=0)
+
+
+# ---------------------------------------------------------------------------
+# 1. residency allocator vs. a shadow model (host-only, tiny template)
+# ---------------------------------------------------------------------------
+
+def _tiny_template(rank=4):
+    """Minimal tree with every bank-layout case: stacked (row axis 1),
+    shared and lm_head (row axis 0)."""
+    return {
+        "stages": {"s0": {
+            "stacked": {"wq": {"a": jnp.ones((2, rank, 8)),
+                               "b": jnp.ones((2, 8, rank))}},
+            "shared": {"wo": {"a": jnp.ones((rank, 8)),
+                              "b": jnp.ones((8, rank))}},
+        }},
+        "lm_head": {"a": jnp.ones((rank, 8)), "b": jnp.ones((8, rank))},
+    }
+
+
+def _fill(template, value):
+    return jax.tree.map(lambda x: jnp.full_like(x, value), template)
+
+
+def _check_bank_rows(reg):
+    """Every committed row holds its padded host tree; every other adapter
+    row is zeros (base-route fallback — never a stale adapter)."""
+    res = reg.residency
+    committed = dict(res.assignments())          # aid → row
+    leaves = jax.tree.leaves(reg.bank)
+    axes = jax.tree.leaves(reg._axes)
+    for aid, row in committed.items():
+        want = jax.tree.leaves(reg.adapter_tree(aid))
+        for leaf, ax, w in zip(leaves, axes, want):
+            got = np.asarray(jnp.take(leaf, row, axis=ax))
+            np.testing.assert_array_equal(got, np.asarray(w), err_msg=(
+                f"bank row {row} does not hold adapter {aid}'s tree"))
+    used = set(committed.values()) | set(
+        res._row_of[a] for a in res._uploading)
+    for row in range(1, res.bank_slots):
+        if row in used:
+            continue
+        for leaf, ax in zip(leaves, axes):
+            assert not np.asarray(jnp.take(leaf, row, axis=ax)).any(), (
+                f"unassigned row {row} is not zeroed")
+
+
+def _check_residency_invariants(reg, shadow_ref):
+    res = reg.residency
+    assert res.free_rows + res.in_use == res.bank_slots - 1
+    rows = [r for _, r in res.assignments()]
+    assert len(rows) == len(set(rows)), "row map is not injective"
+    assert all(BASE_ROW < r < res.bank_slots for r in rows)
+    assert not (set(res._free) & set(res._aid_of)), "free row still mapped"
+    for aid, n in shadow_ref.items():
+        assert res.refcount(aid) == n, (aid, n, res.refcount(aid))
+    _check_bank_rows(reg)
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000), bank_slots=st.integers(2, 5))
+def test_residency_interleavings_match_shadow_model(seed, bank_slots):
+    rng = random.Random(seed)
+    reg = AdapterRegistry(_tiny_template(), max_adapters=bank_slots,
+                          bank_slots=bank_slots)
+    names, version, removed = [], {}, []
+    shadow_ref = {}
+    n_added = 0
+
+    for step in range(30):
+        op = rng.choice(["add", "hotswap", "acquire", "retain", "release",
+                         "evict", "remove", "poll"])
+        if op == "add":
+            name = f"a{n_added}_{seed}"
+            n_added += 1
+            v = rng.randint(1, 99)
+            aid = reg.add(name, _fill(_tiny_template(), v))
+            names.append(name)
+            version[name] = v
+            assert reg.name_of(aid) == name          # O(1) reverse map
+            assert reg.resolve(name) == aid
+        elif op == "hotswap" and names:
+            name = rng.choice(names)
+            v = rng.randint(100, 199)
+            aid_before = reg.resolve(name)
+            assert reg.add(name, _fill(_tiny_template(), v)) == aid_before
+            version[name] = v
+        elif op == "acquire" and names:
+            aid = reg.resolve(rng.choice(names))
+            if reg.residency.acquire(aid):
+                assert reg.residency.resident(aid)
+            reg.residency.poll()                     # commit staged uploads
+        elif op == "retain" and names:
+            aid = reg.resolve(rng.choice(names))
+            if reg.residency.resident(aid):
+                reg.residency.retain(aid)
+                shadow_ref[aid] = shadow_ref.get(aid, 0) + 1
+        elif op == "release":
+            held = [a for a, n in shadow_ref.items() if n]
+            if held:
+                aid = rng.choice(held)
+                reg.residency.release(aid)
+                shadow_ref[aid] -= 1
+        elif op == "evict" and names:
+            aid = reg.resolve(rng.choice(names))
+            if shadow_ref.get(aid, 0):
+                with pytest.raises(AdapterError):
+                    reg.residency.evict(aid)         # pinned: typed refusal
+            else:
+                reg.residency.evict(aid)
+                assert not reg.residency.resident(aid)
+        elif op == "remove" and names:
+            name = rng.choice(names)
+            aid = reg.resolve(name)
+            if shadow_ref.get(aid, 0):
+                with pytest.raises(AdapterError):
+                    reg.remove(name)
+            else:
+                reg.remove(name)
+                names.remove(name)
+                removed.append(aid)
+                shadow_ref.pop(aid, None)
+        elif op == "poll":
+            reg.residency.poll()
+        _check_residency_invariants(reg, shadow_ref)
+
+    # stale ids stay typed-dead forever (KeyError subclass: satellite 2)
+    for aid in removed:
+        with pytest.raises(StaleAdapter):
+            reg.resolve(aid)
+        with pytest.raises(KeyError):
+            reg.resolve(aid)
+        assert reg.name_of(aid) is None
+
+
+def test_rank_bucket_geometry():
+    assert bucket_rank(3, 8, 2) == 4
+    assert bucket_rank(5, 8, 2) == 8
+    assert bucket_rank(1, 8, 1) == 8
+    assert bucket_rank(8, 8, 4) == 8
+    # a rank-2 tree in a rank-4 bank with 2 buckets pads only to rank 2
+    reg = AdapterRegistry(_tiny_template(rank=4), max_adapters=2,
+                          rank_buckets=2)
+    aid = reg.add("half", _fill(_tiny_template(rank=2), 7))
+    padded = reg.adapter_tree(aid)
+    assert padded["lm_head"]["a"].shape == (2, 8)    # bucketed, not template
+    # with one bucket everything pads to the template rank, tail zeroed
+    reg1 = AdapterRegistry(_tiny_template(rank=4), max_adapters=2)
+    t1 = reg1.adapter_tree(reg1.add("half", _fill(_tiny_template(rank=2), 7)))
+    assert t1["lm_head"]["a"].shape == (4, 8)
+    np.testing.assert_array_equal(np.asarray(t1["lm_head"]["a"][2:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(t1["lm_head"]["a"][:2]), 7.0)
+
+
+# ---------------------------------------------------------------------------
+# shared tiny model, pruned draft, three full-rank adapters + one rank-2
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _served():
+    cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2, d_ff=256)
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+    setup = loram.setup(plan, params, LORAM_CFG, LORA_CFG,
+                        jax.random.PRNGKey(1))
+
+    def mk_adapter(seed, rank=LORA_CFG.rank):
+        lcfg = LoRAConfig(rank=rank)
+        small = init_lora(setup.small_plan, lcfg, jax.random.PRNGKey(seed))
+        small = jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), small)
+        full = recovery.recover_lora(small, setup.spec, plan,
+                                     setup.small_plan)
+        return small, full
+
+    adapters = {name: mk_adapter(seed)
+                for name, seed in [("math", 11), ("code", 22), ("law", 33)]}
+    return cfg, plan, params, setup, adapters
+
+
+@pytest.fixture(scope="module")
+def served():
+    return _served()
+
+
+WORK = [(8, "math", 5), (12, "code", 4), (5, None, 5), (9, "law", 4),
+        (12, "math", 3), (7, "code", 5), (10, "law", 3), (6, "math", 4)]
+
+
+def _workload(cfg):
+    rs = np.random.default_rng(0)
+    return [rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32)
+            for n, _, _ in WORK]
+
+
+def _serve(plan, params, setup, adapters, *, bank_slots, paged=False,
+           speculative=False, prompts=None, cfg=None):
+    """One full run of WORK through a freshly built engine; returns
+    (uid → result, registry)."""
+    _, full0 = adapters["math"]
+    reg = AdapterRegistry(full0, max_adapters=4, bank_slots=bank_slots)
+    kw = dict(max_seq_len=64, max_slots=3, max_adapters=4,
+              adapter_bank_slots=bank_slots, max_new_tokens=16,
+              kv_cache_dtype="float32",
+              draft_gamma=3 if speculative else 0)
+    if paged:
+        kw.update(kv_paging=True, kv_page_size=8, kv_pages=28)
+    sc = ServeConfig(**kw)
+    if speculative:
+        draft = build_draft(setup.small_plan, setup.small_params,
+                            adapter_template=setup.lora0, max_adapters=4,
+                            bank_slots=bank_slots)
+        eng = SpeculativeServeEngine(plan, params, sc, reg, draft,
+                                     lora_scale=LORA_CFG.scale)
+        for name in ("math", "code", "law"):
+            eng.register_adapter(name, adapters[name][1],
+                                 draft_lora=adapters[name][0])
+    else:
+        eng = ContinuousServeEngine(plan, params, sc, reg,
+                                    lora_scale=LORA_CFG.scale)
+        for name in ("math", "code", "law"):
+            eng.register_adapter(name, adapters[name][1])
+    uids = [eng.submit(p, max_new_tokens=m, adapter=a)
+            for p, (_, a, m) in zip(prompts, WORK)]
+    results = eng.run()
+    assert sorted(results) == sorted(uids)
+    return results, reg
+
+
+@pytest.mark.parametrize("flavor", ["continuous", "paged", "speculative"])
+def test_streaming_bank_token_identical_to_dense(served, flavor):
+    """K=3 adapters through bank_slots=2 (ONE adapter row): every request
+    completes and emits exactly the dense-bank (bank_slots >= K) tokens,
+    while the residency layer demonstrably streamed (misses + evictions)."""
+    cfg, plan, params, setup, adapters = served
+    prompts = _workload(cfg)
+    kw = dict(paged=flavor == "paged", speculative=flavor == "speculative",
+              prompts=prompts)
+    dense, dreg = _serve(plan, params, setup, adapters, bank_slots=4, **kw)
+    stream, sreg = _serve(plan, params, setup, adapters, bank_slots=2, **kw)
+
+    # dense-equivalent regime never misses: every adapter stayed resident
+    assert dreg.residency.n_misses == 0 and dreg.residency.n_evictions == 0
+    # the 2-row bank actually streamed
+    assert sreg.residency.n_misses > 0 and sreg.residency.n_evictions > 0
+    assert sreg.residency.upload_bytes > 0
+    for uid in dense:
+        assert dense[uid].status == stream[uid].status == "ok"
+        np.testing.assert_array_equal(
+            stream[uid].tokens, dense[uid].tokens,
+            err_msg=f"uid {uid} ({flavor}) diverged under streaming")
+    # no slot left holding a reference after drain
+    assert all(sreg.residency.refcount(reg_aid) == 0
+               for reg_aid, _ in sreg.residency.assignments())
+
+
+def test_rank_bucket_zero_delta_through_engine(served):
+    """A rank-2 adapter served out of a rank-4 bank row (zero-padded tail)
+    emits exactly the tokens of its solo rank-2 run: padding is zero-delta
+    through the gather + einsum."""
+    cfg, plan, params, setup, adapters = served
+    lcfg2 = LoRAConfig(rank=2)
+    small2 = init_lora(setup.small_plan, lcfg2, jax.random.PRNGKey(55))
+    small2 = jax.tree.map(
+        lambda x: x + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(56), x.shape, x.dtype), small2)
+    full2 = recovery.recover_lora(small2, setup.spec, plan, setup.small_plan)
+
+    reg = AdapterRegistry(adapters["math"][1], max_adapters=3)
+    reg.add("thin", full2)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=64, max_slots=2, max_adapters=3,
+                    max_new_tokens=16, kv_cache_dtype="float32"),
+        reg, lora_scale=LORA_CFG.scale)
+    prompt = _workload(cfg)[0]
+    uid = eng.submit(prompt, max_new_tokens=6, adapter="thin")
+    got = eng.run()[uid].tokens
+
+    solo = ServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=64, merge_adapters=False,
+                    kv_cache_dtype="float32"),
+        lora=full2, lora_scale=LORA_CFG.scale)
+    np.testing.assert_array_equal(
+        got, solo.generate(prompt[None], max_new_tokens=6).tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# 4. live-engine interleavings (register / hot-swap / submit / cancel)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _stream_eng():
+    """ONE 2-row engine shared across propcheck examples (same shapes →
+    the tick jit-caches once); each example registers fresh names into the
+    unbounded host tier.  A module-level cache rather than a fixture: the
+    no-hypothesis propcheck shim can't inject pytest fixtures."""
+    cfg, plan, params, _, adapters = _served()
+    _, full0 = adapters["math"]
+    reg = AdapterRegistry(full0, max_adapters=4, bank_slots=2)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=64, max_slots=3, max_adapters=4,
+                    adapter_bank_slots=2, max_new_tokens=16,
+                    kv_cache_dtype="float32"),
+        reg, lora_scale=LORA_CFG.scale)
+    return cfg, eng, reg, full0
+
+
+def _check_active_rows(eng, reg):
+    """No stale-row gathers: every active slot's TickState row is exactly
+    the row residency assigned to its (resident) adapter."""
+    st_rows = np.asarray(eng._st.adapter_ids)
+    for slot in eng._sched.active_slots():
+        req = eng._sched.slot_request(slot)
+        if req is None:
+            continue
+        aid = req.adapter_id
+        row = int(st_rows[slot])
+        if aid == 0:
+            assert row == BASE_ROW, (slot, row)
+        else:
+            assert reg.residency.resident(aid), (slot, aid)
+            assert reg.residency._row_of[aid] == row, (slot, aid, row)
+            assert reg.residency.refcount(aid) >= 1, (slot, aid)
+
+
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_engine_interleavings_lose_nothing(seed):
+    cfg, eng, reg, full0 = _stream_eng()
+    rng = random.Random(seed)
+    rs = np.random.default_rng(seed)
+    names = ["math", "code", "law"]          # registered by earlier tests?
+    for n in list(names):
+        if n not in reg.names:
+            reg.add(n, jax.tree.map(lambda x: x * 0.9, full0))
+
+    live, results, expect_failed = {}, [], set()
+    for step in range(14):
+        op = rng.choice(["submit", "submit", "step", "step", "cancel",
+                         "register", "hotswap", "ghost"])
+        if op == "submit":
+            adapter = rng.choice(names + [None])
+            p = rs.integers(2, cfg.vocab_size, (rng.randint(4, 10),))
+            uid = eng.submit(p.astype(np.int32),
+                             max_new_tokens=rng.randint(2, 5),
+                             adapter=adapter)
+            live[uid] = adapter
+        elif op == "ghost":
+            # unresolvable at submit: typed terminal through the PR-9
+            # choke point, never an exception out of submit()
+            p = rs.integers(2, cfg.vocab_size, (5,)).astype(np.int32)
+            uid = eng.submit(p, max_new_tokens=3,
+                             adapter=f"ghost{seed}_{step}")
+            live[uid] = "ghost"
+            expect_failed.add(uid)
+        elif op == "cancel" and live:
+            res = eng.cancel(rng.choice(sorted(live)))
+            if res is not None:
+                results.append(res)
+        elif op == "register":
+            name = f"n{seed}_{step}"
+            eng.register_adapter(
+                name, jax.tree.map(lambda x: x * rng.uniform(0.5, 1.5),
+                                   full0))
+            names.append(name)
+        elif op == "hotswap":
+            eng.register_adapter(
+                rng.choice(names),
+                jax.tree.map(lambda x: x * rng.uniform(0.5, 1.5), full0))
+        else:
+            results.extend(eng.step())
+        _check_active_rows(eng, reg)
+    results.extend(eng.run().values())
+
+    # exactly one typed terminal per submitted uid
+    got = {}
+    for r in results:
+        assert r.uid not in got, f"uid {r.uid} finalized twice"
+        got[r.uid] = r.status
+    assert sorted(got) == sorted(live), (sorted(got), sorted(live))
+    for uid, status in got.items():
+        if uid in expect_failed:
+            assert status == "failed", (uid, status)
+        else:
+            assert status in ("ok", "cancelled"), (uid, status)
+    # refcounts never leak; the drained bank holds no pinned rows
+    assert all(reg.residency.refcount(a) == 0
+               for a, _ in reg.residency.assignments())
+    reg.residency.poll()
+    _check_bank_rows(reg)
+
+
+def test_bank_too_small_for_any_adapter_fails_typed(served):
+    """bank_slots=1 is base-row only: adapter traffic can NEVER run —
+    submit must fail typed (terminal status), not hang the queue."""
+    cfg, plan, params, _, adapters = served
+    reg = AdapterRegistry(adapters["math"][1], max_adapters=2, bank_slots=1)
+    eng = ContinuousServeEngine(
+        plan, params,
+        ServeConfig(max_seq_len=32, max_slots=2, max_adapters=2,
+                    adapter_bank_slots=1, max_new_tokens=8,
+                    kv_cache_dtype="float32"),
+        reg, lora_scale=LORA_CFG.scale)
+    eng.register_adapter("t", adapters["math"][1])   # host tier: fine
+    p = np.ones(4, np.int32)
+    uid = eng.submit(p, max_new_tokens=3, adapter="t")
+    u_base = eng.submit(p, max_new_tokens=3)
+    res = eng.run()
+    assert res[uid].status == "failed"
+    assert res[u_base].status == "ok"                # base traffic unharmed

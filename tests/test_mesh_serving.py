@@ -259,3 +259,49 @@ def test_sharded_speculative_token_identical():
     assert eng.mesh is not None
     assert eng.n_proposed > 0 and eng.n_rounds > 0
     _assert_identical(ref, got, work)
+
+
+@needs_devices
+def test_sharded_streaming_adapter_bank_identical():
+    """bank_slots < K under the mesh: three adapters stream through a
+    2-row replicated bank mid-serve.  The host-side residency allocator's
+    decisions (and so the tokens) cannot depend on the device count, and
+    every row write is a fixed-shape functional update — the sharded tick
+    never recompiles across uploads/evictions."""
+    cfg = get_smoke("yi-34b")
+    plan = make_plan(cfg)
+    params = init_params(plan, RNG, jnp.float32)
+
+    def mk(seed):
+        lora = init_lora(plan, LORA_CFG, jax.random.PRNGKey(seed))
+        return jax.tree.map(
+            lambda x: x + 0.05 * jax.random.normal(
+                jax.random.PRNGKey(seed + 1), x.shape, x.dtype), lora)
+
+    adapters = {"math": mk(11), "code": mk(22), "law": mk(33)}
+
+    def fresh_reg():
+        reg = AdapterRegistry(adapters["math"], max_adapters=4, bank_slots=2)
+        for name in ("math", "code", "law"):
+            reg.add(name, adapters[name])
+        return reg
+
+    rs = np.random.default_rng(0)
+    spec = [(6, "math", 5), (9, "code", 4), (4, None, 5),
+            (9, "law", 3), (6, "math", 4), (5, "code", 3)]
+    work = [(rs.integers(2, cfg.vocab_size, (n,)).astype(np.int32),
+             dict(max_new_tokens=m, adapter=a)) for n, a, m in spec]
+
+    base = dict(max_seq_len=48, max_slots=2, max_adapters=4,
+                adapter_bank_slots=2, max_new_tokens=8,
+                kv_cache_dtype="float32")
+    ref, ref_eng = _run(plan, params, fresh_reg(), base, work)
+    sreg = fresh_reg()
+    got, eng = _run(plan, params, sreg,
+                    {**base, "mesh_data": 1, "mesh_model": 2}, work)
+    assert eng.mesh is not None
+    # the 2-row bank really streamed under the mesh
+    assert sreg.residency.n_misses > 0 and sreg.residency.n_evictions > 0
+    assert all(sreg.residency.refcount(a) == 0
+               for a, _ in sreg.residency.assignments())
+    _assert_identical(ref, got, work)

@@ -22,8 +22,9 @@ import pytest
 from repro.configs import LoRAConfig, ServeConfig, get_smoke
 from repro.models import init_params, make_plan
 from repro.models.model import init_lora
-from repro.serving import (AdapterRegistry, ContinuousServeEngine, Request,
-                           Scheduler, ServeEngine)
+from repro.serving import (AdapterBankFull, AdapterRegistry,
+                           AdapterStructureError, ContinuousServeEngine,
+                           Request, Scheduler, ServeEngine)
 
 RNG = jax.random.PRNGKey(0)
 
@@ -131,16 +132,27 @@ def test_registry_bank_axes_and_hot_swap(served):
     np.testing.assert_array_equal(
         np.asarray(row), np.asarray(jax.tree.leaves(adapters["code"])[0]))
 
-    with pytest.raises(AssertionError):
+    with pytest.raises(AdapterStructureError):
         reg.add("bad", {"stages": {}})         # structure mismatch
 
 
 def test_registry_capacity(served):
+    """The host tier is unbounded: registration past the device bank's
+    capacity SUCCEEDS (the tree waits host-side), but forcing residency
+    while every row is pinned raises the typed bank-full error."""
     _, _, _, adapters = served
     reg = AdapterRegistry(adapters["math"], max_adapters=2)
     reg.add("a", adapters["math"])
-    with pytest.raises(RuntimeError):
-        reg.add("b", adapters["code"])
+    b = reg.add("b", adapters["code"])         # host-registered, not resident
+    assert not reg.resident("b")
+    reg.residency.retain(reg.resolve("a"))     # pin the one adapter row
+    with pytest.raises(RuntimeError):          # AdapterBankFull
+        reg.upload("b")
+    with pytest.raises(AdapterBankFull):
+        reg.upload("b")
+    reg.residency.release(reg.resolve("a"))
+    assert reg.upload("b") == reg.bank_row(b)  # LRU-evicts "a", streams "b"
+    assert reg.resident("b") and not reg.resident("a")
 
 
 # ---------------------------------------------------------------------------
